@@ -1,0 +1,56 @@
+"""Paper Fig. 6: hyperparameter sensitivity.
+
+Static SL sweeps {2..10} (the U-shaped latency curve) and AdaEDL sweeps its
+base {3..10}; DSDE is run once with defaults.  Reproduced claim: static SL
+is sharply sensitive, AdaEDL mildly, DSDE needs no per-dataset knob."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks import common
+
+
+def run() -> List[str]:
+    cfg_t, cfg_d, pt, pd, ratio = common.build_pair("llama")
+    prompts = common.dataset("qa").prompts(8, 16, seed=6)
+    rows = []
+    t0 = time.monotonic()
+
+    static_lu = {}
+    for sl in (2, 4, 6, 8, 10):
+        m, _, _ = common.serve(cfg_t, cfg_d, pt, pd, prompts,
+                               policy="static", static_sl=sl)
+        static_lu[sl] = common.latency_units(m, ratio)
+    adaedl_lu = {}
+    for base in (3, 5, 7, 10):
+        m, _, _ = common.serve(cfg_t, cfg_d, pt, pd, prompts,
+                               policy="adaedl", adaedl_base=base)
+        adaedl_lu[base] = common.latency_units(m, ratio)
+    m, _, _ = common.serve(cfg_t, cfg_d, pt, pd, prompts, policy="dsde")
+    dsde_lu = common.latency_units(m, ratio)
+    wall = (time.monotonic() - t0) * 1e6
+
+    def spread(d):
+        v = np.asarray(list(d.values()))
+        return float(v.max() / v.min())
+
+    for sl, lu in static_lu.items():
+        rows.append(common.row(f"fig6/static_sl{sl}", wall / 10,
+                               f"latency_units={lu:.1f}"))
+    for b, lu in adaedl_lu.items():
+        rows.append(common.row(f"fig6/adaedl_base{b}", wall / 10,
+                               f"latency_units={lu:.1f}"))
+    rows.append(common.row("fig6/dsde_default", wall / 10,
+                           f"latency_units={dsde_lu:.1f}"))
+    rows.append(common.row(
+        "fig6/sensitivity_spread", 0.0,
+        f"static_maxmin={spread(static_lu):.2f};"
+        f"adaedl_maxmin={spread(adaedl_lu):.2f};dsde_maxmin=1.00"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,34 @@
+"""Paper Table 1: static SL strategies on heterogeneous tasks.
+
+Static-Aggressive (SL=8) vs Static-Conservative (SL=2) on a predictable
+("code") and an unpredictable ("dialogue") workload — demonstrating that
+no single static SL serves both, the paper's core motivation.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+from benchmarks import common
+
+
+def run() -> List[str]:
+    cfg_t, cfg_d, pt, pd, ratio = common.build_pair("llama")
+    rows = []
+    for task in ("code", "dialogue"):
+        prompts = common.dataset(task).prompts(8, 16, seed=1)
+        for label, sl in (("aggressive_sl8", 8), ("conservative_sl2", 2)):
+            t0 = time.monotonic()
+            m, _, _ = common.serve(cfg_t, cfg_d, pt, pd, prompts,
+                                   policy="static", static_sl=sl)
+            wall = (time.monotonic() - t0) * 1e6
+            lu = common.latency_units(m, ratio)
+            rows.append(common.row(
+                f"table1/{task}/{label}", wall,
+                f"latency_units={lu:.1f};BE={m['block_efficiency']:.2f};"
+                f"acc={m['mean_acceptance']:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

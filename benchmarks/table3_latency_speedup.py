@@ -1,0 +1,65 @@
+"""Paper Table 3: end-to-end latency and speedup vs autoregressive decoding
+for all policies, at temperatures 0.0 and 1.0.
+
+The static-opt baseline is obtained the way the paper does (and complains
+about): profiling SL in {2,4,6,8,10} per dataset and taking the best —
+the cost DSDE's training-free calibration avoids.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks import common
+
+
+def _mixed_prompts(n_per=3, seed=3):
+    out = []
+    for name in common.DATASETS:
+        out += common.dataset(name).prompts(n_per, 16, seed=seed)
+    return out
+
+
+def static_opt(cfg_t, cfg_d, pt, pd, prompts, ratio, temperature):
+    best = None
+    for sl in (2, 4, 6, 8, 10):
+        m, _, _ = common.serve(cfg_t, cfg_d, pt, pd, prompts,
+                               policy="static", static_sl=sl,
+                               temperature=temperature)
+        lu = common.latency_units(m, ratio)
+        if best is None or lu < best[1]:
+            best = (sl, lu, m)
+    return best
+
+
+def run() -> List[str]:
+    cfg_t, cfg_d, pt, pd, ratio = common.build_pair("llama")
+    prompts = _mixed_prompts()
+    rows = []
+    for temp in (0.0, 1.0):
+        t0 = time.monotonic()
+        m_ar, _, _ = common.serve(cfg_t, cfg_d, pt, pd, prompts,
+                                  policy="autoregressive", temperature=temp)
+        lu_ar = common.latency_units(m_ar, ratio)
+        sl_opt, lu_opt, m_opt = static_opt(cfg_t, cfg_d, pt, pd, prompts,
+                                           ratio, temp)
+        results = {"autoregressive": (lu_ar, m_ar),
+                   f"static_opt_sl{sl_opt}": (lu_opt, m_opt)}
+        for policy in ("dsde", "adaedl"):
+            m, _, _ = common.serve(cfg_t, cfg_d, pt, pd, prompts,
+                                   policy=policy, temperature=temp)
+            results[policy] = (common.latency_units(m, ratio), m)
+        wall = (time.monotonic() - t0) * 1e6
+        for name, (lu, m) in results.items():
+            rows.append(common.row(
+                f"table3/temp{temp}/{name}", wall / len(results),
+                f"latency_units={lu:.1f};speedup={lu_ar / lu:.2f}x;"
+                f"BE={m['block_efficiency']:.2f};"
+                f"wall_s={m['wall_time_s']:.1f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

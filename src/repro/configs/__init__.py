@@ -1,0 +1,60 @@
+"""Architecture registry.
+
+Every assigned architecture has a ``src/repro/configs/<id>.py`` exporting
+``CONFIG``; this package exposes ``get_config(arch_id)`` /
+``list_archs()`` used by ``--arch`` flags across the launch scripts.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.core.config import ModelConfig
+
+# assigned architecture ids -> module names
+_ARCHS = [
+    "qwen3_32b",
+    "granite_moe_3b_a800m",
+    "mamba2_130m",
+    "qwen2_vl_2b",
+    "qwen2_5_32b",
+    "granite_8b",
+    "seamless_m4t_medium",
+    "recurrentgemma_2b",
+    "mixtral_8x22b",
+    "smollm_135m",
+    # paper's own experiment pairs (emulated scale)
+    "paper_llama_pair",
+    "paper_gemma_pair",
+]
+
+_ALIAS = {
+    "qwen3-32b": "qwen3_32b",
+    "granite-moe-3b-a800m": "granite_moe_3b_a800m",
+    "mamba2-130m": "mamba2_130m",
+    "qwen2-vl-2b": "qwen2_vl_2b",
+    "qwen2.5-32b": "qwen2_5_32b",
+    "granite-8b": "granite_8b",
+    "seamless-m4t-medium": "seamless_m4t_medium",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    "mixtral-8x22b": "mixtral_8x22b",
+    "smollm-135m": "smollm_135m",
+    "paper-llama-pair": "paper_llama_pair",
+    "paper-gemma-pair": "paper_gemma_pair",
+}
+
+
+def list_archs() -> List[str]:
+    return [a.replace("_", "-").replace("qwen2-5", "qwen2.5") for a in _ARCHS]
+
+
+def get_config(arch: str) -> ModelConfig:
+    mod_name = _ALIAS.get(arch, arch.replace("-", "_").replace(".", "_"))
+    if mod_name not in _ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; available: {list_archs()}")
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.CONFIG
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in list_archs()}

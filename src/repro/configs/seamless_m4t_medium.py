@@ -1,0 +1,21 @@
+"""SeamlessM4T-medium [audio] — enc-dec, multimodal. Audio frontend
+(mel+conv) is a stub per assignment: input_specs() provides frame
+embeddings. [arXiv:2308.11596]"""
+from repro.core.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-medium",
+    family="audio",
+    num_layers=12,              # decoder layers
+    num_encoder_layers=12,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,            # MHA
+    d_ff=4096,
+    vocab_size=256206,
+    head_dim=64,
+    is_encoder_decoder=True,
+    frontend_dim=1024,
+    tie_embeddings=True,
+    source="arXiv:2308.11596",
+)

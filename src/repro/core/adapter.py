@@ -1,0 +1,195 @@
+"""The DSDE SL Adapter (paper §3.1) + baselines' SL policies.
+
+Implements, per sequence and per iteration:
+
+* Eq. (1)  dynamic calibration of SL_max from the pre-processing phase;
+* Eq. (3)  SF  = exp(sf_scale * mu_KLD,last) - 1;
+* Eq. (4)  WVIR (delegated to :mod:`repro.core.signals`);
+* Eq. (2)/(8)  SL-hat = (1 - SF*WVIR) * (SL_max - SL_min) + SL_min, with the
+  conservative floor when the penalty signals extreme instability;
+* Eq. (11) SL_cap = mean of per-sequence predictions (the MSE-minimizing
+  consensus, §3.3) applied batch-wide;
+* AdaEDL baseline (entropy-based draft early stopping) and static SL.
+
+State is a :class:`AdapterState` pytree so the whole policy jits into the
+serving step (per-step Python recompilation would reintroduce exactly the
+eager-mode overhead the paper complains about).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import SpecDecodeConfig
+from repro.core.signals import KLDHistory, wvir
+
+
+class AdapterState(NamedTuple):
+    history: KLDHistory
+    mu_kld_last: jax.Array          # [B] mean KLD of the last verified step
+    sl_max: jax.Array               # [B] calibrated effective max (Eq. 1)
+    # calibration statistics (accumulated during the pre-processing phase)
+    calib_steps: jax.Array          # [B] steps observed so far
+    calib_kld_sum: jax.Array        # [B] sum of token KLDs
+    calib_kld_count: jax.Array      # [B] token count
+    calib_kld_max: jax.Array        # [B] max single KLD
+    calib_acc_max: jax.Array        # [B] SL_{A,max}: max accepted in a step
+    # last predicted SL (for telemetry / tests)
+    sl_pred: jax.Array              # [B] int32
+
+
+def init_adapter_state(batch: int, cfg: SpecDecodeConfig) -> AdapterState:
+    return AdapterState(
+        history=KLDHistory.init(batch, cfg.long_window),
+        mu_kld_last=jnp.zeros((batch,), jnp.float32),
+        sl_max=jnp.full((batch,), float(cfg.sl_max), jnp.float32),
+        calib_steps=jnp.zeros((batch,), jnp.int32),
+        calib_kld_sum=jnp.zeros((batch,), jnp.float32),
+        calib_kld_count=jnp.zeros((batch,), jnp.float32),
+        calib_kld_max=jnp.zeros((batch,), jnp.float32),
+        calib_acc_max=jnp.zeros((batch,), jnp.int32),
+        sl_pred=jnp.full((batch,), cfg.static_sl, jnp.int32),
+    )
+
+
+def reset_rows(state: AdapterState, rows: jax.Array,
+               cfg: SpecDecodeConfig) -> AdapterState:
+    """Reset per-sequence adapter state for replaced slots."""
+    fresh = init_adapter_state(rows.shape[0], cfg)
+    return jax.tree_util.tree_map(
+        lambda f, s: jnp.where(
+            rows.reshape(rows.shape + (1,) * (s.ndim - 1)), f, s),
+        fresh, state)
+
+
+# ---------------------------------------------------------------------------
+# Observation update (runs after every verification step)
+# ---------------------------------------------------------------------------
+
+def observe(state: AdapterState, cfg: SpecDecodeConfig, *,
+            kld: jax.Array,            # [B, T] per-position KL(target||draft)
+            proposed_valid: jax.Array,  # [B, T] which positions were proposed
+            num_accepted: jax.Array,    # [B] accepted draft tokens this step
+            active: Optional[jax.Array] = None) -> AdapterState:
+    """Fold one verification step's post-hoc statistics into the state."""
+    if kld.shape[-1] == 0:      # autoregressive baseline: nothing proposed
+        return state
+    v = proposed_valid.astype(jnp.float32)
+    tok_count = v.sum(-1)
+    step_sum = (kld * v).sum(-1)
+    mu_step = step_sum / jnp.maximum(tok_count, 1.0)                # [B]
+    step_max = jnp.where(proposed_valid, kld, -jnp.inf).max(-1)
+    step_max = jnp.where(jnp.isfinite(step_max), step_max, 0.0)
+
+    in_calib = state.calib_steps < cfg.calibration_steps
+    took_step = tok_count > 0
+    if active is not None:
+        took_step = took_step & active
+
+    upd = took_step & in_calib
+    calib_steps = jnp.where(upd, state.calib_steps + 1, state.calib_steps)
+    calib_kld_sum = jnp.where(upd, state.calib_kld_sum + step_sum,
+                              state.calib_kld_sum)
+    calib_kld_count = jnp.where(upd, state.calib_kld_count + tok_count,
+                                state.calib_kld_count)
+    calib_kld_max = jnp.where(upd, jnp.maximum(state.calib_kld_max, step_max),
+                              state.calib_kld_max)
+    calib_acc_max = jnp.where(
+        upd, jnp.maximum(state.calib_acc_max, num_accepted.astype(jnp.int32)),
+        state.calib_acc_max)
+
+    # Eq. (1): once the calibration window closes, freeze SL_max.
+    done = calib_steps >= cfg.calibration_steps
+    mu_pre = calib_kld_sum / jnp.maximum(calib_kld_count, 1.0)
+    sl_a_max = jnp.maximum(calib_acc_max, 1).astype(jnp.float32)
+    sl_max_calib = sl_a_max * (1.0 + mu_pre / (calib_kld_max + cfg.eps))
+    sl_max_calib = jnp.clip(sl_max_calib, cfg.sl_min + 1, cfg.sl_max)
+    sl_max = jnp.where(done, sl_max_calib, state.sl_max)
+
+    history = state.history.push(mu_step, active=took_step)
+    mu_last = jnp.where(took_step, mu_step, state.mu_kld_last)
+
+    return state._replace(
+        history=history, mu_kld_last=mu_last, sl_max=sl_max,
+        calib_steps=calib_steps, calib_kld_sum=calib_kld_sum,
+        calib_kld_count=calib_kld_count, calib_kld_max=calib_kld_max,
+        calib_acc_max=calib_acc_max)
+
+
+# ---------------------------------------------------------------------------
+# Prediction — Eq. (2)/(3)/(8) + SL_cap Eq. (11)
+# ---------------------------------------------------------------------------
+
+def scale_factor(mu_kld_last: jax.Array, cfg: SpecDecodeConfig,
+                 mu_calib: Optional[jax.Array] = None) -> jax.Array:
+    """Eq. (3); optionally the scale-invariant variant (beyond-paper,
+    see SpecDecodeConfig.sf_normalize)."""
+    if cfg.sf_normalize and mu_calib is not None:
+        rel = mu_kld_last / jnp.maximum(mu_calib, cfg.eps) - 1.0
+        return jnp.maximum(jnp.exp(cfg.sf_scale * rel) - 1.0, 0.0)
+    return jnp.exp(cfg.sf_scale * mu_kld_last) - 1.0
+
+
+def predict_sl(state: AdapterState, cfg: SpecDecodeConfig,
+               active: Optional[jax.Array] = None
+               ) -> Tuple[jax.Array, AdapterState, dict]:
+    """Per-sequence SL for the next iteration. Returns (sl [B] int32,
+    new_state, telemetry)."""
+    mu_calib = state.calib_kld_sum / jnp.maximum(state.calib_kld_count, 1.0)
+    sf = scale_factor(state.mu_kld_last, cfg, mu_calib)
+    w = wvir(state.history, cfg.short_window, cfg.long_window, cfg.decay,
+             cfg.eps)
+    penalty = sf * w
+    dsl = state.sl_max - float(cfg.sl_min)
+    raw = (1.0 - penalty) * dsl + cfg.sl_min
+    # Eq. (8): extreme instability -> most conservative strategy.
+    sl = jnp.where(penalty >= cfg.penalty_cutoff,
+                   float(cfg.sl_min), raw)
+    # during calibration, run the fixed calibration SL
+    in_calib = state.calib_steps < cfg.calibration_steps
+    sl = jnp.where(in_calib, float(cfg.calibration_sl), sl)
+
+    telemetry = {"sf": sf, "wvir": w, "penalty": penalty,
+                 "sl_raw": raw, "sl_max": state.sl_max}
+
+    if cfg.use_sl_cap:
+        sl, cap = apply_sl_cap(sl, cfg, active)
+        telemetry["sl_cap"] = cap
+    sl_i = jnp.clip(jnp.round(sl), cfg.sl_min, cfg.sl_max).astype(jnp.int32)
+    return sl_i, state._replace(sl_pred=sl_i), telemetry
+
+
+def apply_sl_cap(sl: jax.Array, cfg: SpecDecodeConfig,
+                 active: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Eq. (9)-(11): cap = argmin_c MSE(c, {SL_i}) = mean(SL_i), applied
+    uniformly — prevents straggler speculation lengths from stalling the
+    batch (§3.3).  Inactive slots are excluded from the consensus."""
+    if active is None:
+        cap = sl.mean()
+    else:
+        a = active.astype(jnp.float32)
+        cap = (sl * a).sum() / jnp.maximum(a.sum(), 1.0)
+    return jnp.minimum(sl, cap), cap
+
+
+# ---------------------------------------------------------------------------
+# Baseline policies
+# ---------------------------------------------------------------------------
+
+def static_sl(batch: int, cfg: SpecDecodeConfig) -> jax.Array:
+    return jnp.full((batch,), cfg.static_sl, jnp.int32)
+
+
+def adaedl_stop_threshold(entropy: jax.Array,
+                          cfg: SpecDecodeConfig) -> jax.Array:
+    """AdaEDL: an entropy-based lower bound on the token acceptance
+    probability; drafting stops when the bound drops under the threshold.
+
+        p_accept >= 1 - sqrt(max(0, 1 - exp(-H(q))))   (AdaEDL-style bound)
+
+    Returns a boolean [B] / [B,T] 'keep drafting' indicator."""
+    bound = 1.0 - jnp.sqrt(jnp.maximum(0.0, 1.0 - jnp.exp(-entropy)))
+    return bound >= cfg.adaedl_threshold

@@ -1,0 +1,98 @@
+"""Batched ragged rejection sampling (Leviathan et al. / Chen et al.).
+
+Handles per-sequence draft lengths inside one padded [B, K] block — the
+"Ragged Q" of paper §3.2.  The sampler is *exact*: the emitted token stream
+is distributed identically to sampling the target model autoregressively,
+which the property tests verify empirically.
+
+Index convention for one round (sequence-local):
+    inputs  t_0 = pending token, t_1..t_K = draft tokens
+    target logits  P[:, j]  = p(. | t_0..t_j)           (j = 0..K)
+    draft  logits  Q[:, j]  = q(. | t_0..t_j)           (j = 0..K-1)
+    draft token d_{j+1} was sampled from Q[:, j].
+
+Acceptance of d_{j+1} tests against P[:, j]; on total acceptance the bonus
+token comes from P[:, K]; on first rejection at j the recovery token comes
+from the residual ``norm(max(P[:, j] - Q[:, j], 0))``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sampling import probs_from_logits, sample_from_probs
+
+
+class RejectionResult(NamedTuple):
+    accept_mask: jax.Array     # [B, K] bool — accepted draft positions
+    num_accepted: jax.Array    # [B] int32 — length of accepted prefix
+    next_token: jax.Array      # [B] int32 — bonus or recovery token
+    emitted: jax.Array         # [B, K+1] int32 — accepted drafts + next_token,
+                               #   padded with pad_id beyond num_accepted+1
+    num_emitted: jax.Array     # [B] = num_accepted + 1
+
+
+def rejection_sample(key: jax.Array, draft_tokens: jax.Array,
+                     draft_logits: jax.Array, target_logits: jax.Array,
+                     draft_len: jax.Array, *, temperature: float,
+                     vocab_size: int, pad_id: int) -> RejectionResult:
+    """draft_tokens [B,K]; draft_logits [B,K,V]; target_logits [B,K+1,V];
+    draft_len [B] (0..K, ragged)."""
+    b, k = draft_tokens.shape
+    p = probs_from_logits(target_logits, temperature, vocab_size)  # [B,K+1,V]
+    q = probs_from_logits(draft_logits, temperature, vocab_size)   # [B,K,V]
+
+    key_acc, key_rec = jax.random.split(key)
+    pos = jnp.arange(k)[None, :]
+    valid = pos < draft_len[:, None]                               # [B,K]
+
+    if k > 0:
+        p_tok = jnp.take_along_axis(p[:, :k], draft_tokens[..., None],
+                                    axis=-1)[..., 0]
+        q_tok = jnp.take_along_axis(q, draft_tokens[..., None],
+                                    axis=-1)[..., 0]
+        ratio = p_tok / jnp.maximum(q_tok, 1e-30)
+        u = jax.random.uniform(key_acc, (b, k))
+        accept = (u < jnp.minimum(ratio, 1.0)) & valid
+        # accepted prefix: leading run of True
+        prefix = jnp.cumprod(accept.astype(jnp.int32), axis=1)
+        num_accepted = prefix.sum(axis=1).astype(jnp.int32)
+        accept_mask = prefix.astype(bool)
+    else:
+        accept_mask = jnp.zeros((b, 0), bool)
+        num_accepted = jnp.zeros((b,), jnp.int32)
+
+    # next-token distribution:
+    #   all accepted (num_accepted == draft_len): bonus ~ P[:, draft_len]
+    #   rejected at j = num_accepted:  ~ norm(max(P[:, j] - Q[:, j], 0))
+    all_accepted = num_accepted >= draft_len
+    j = jnp.minimum(num_accepted, jnp.maximum(k - 1, 0))
+    bi = jnp.arange(b)
+    p_j = p[bi, jnp.minimum(num_accepted, k)]                      # [B,V]
+    if k > 0:
+        q_j = q[bi, j]
+        residual = jnp.maximum(p[bi, j] - q_j, 0.0)
+        residual_sum = residual.sum(-1, keepdims=True)
+        # residual can be all-zero when p == q exactly (greedy agree case is
+        # excluded because then the token was accepted); fall back to p.
+        residual = jnp.where(residual_sum > 1e-30,
+                             residual / jnp.maximum(residual_sum, 1e-30),
+                             p[bi, j])
+        next_dist = jnp.where(all_accepted[:, None], p_j, residual)
+    else:
+        next_dist = p_j
+    next_token = sample_from_probs(key_rec, next_dist).astype(jnp.int32)
+
+    # emitted stream: accepted drafts then next_token, pad elsewhere
+    out = jnp.full((b, k + 1), pad_id, jnp.int32)
+    if k > 0:
+        keep = jnp.arange(k)[None, :] < num_accepted[:, None]
+        out = out.at[:, :k].set(jnp.where(keep, draft_tokens, pad_id))
+    out = out.at[bi, num_accepted].set(next_token)
+    return RejectionResult(accept_mask=accept_mask,
+                           num_accepted=num_accepted,
+                           next_token=next_token,
+                           emitted=out,
+                           num_emitted=num_accepted + 1)

@@ -1,0 +1,46 @@
+"""Sampling utilities shared by the engine and the rejection sampler."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def mask_vocab(logits: jax.Array, vocab_size: int) -> jax.Array:
+    """Mask padded vocabulary entries (embedding table is padded for
+    sharding divisibility — DESIGN.md §5)."""
+    v = logits.shape[-1]
+    if v == vocab_size:
+        return logits
+    mask = jnp.arange(v) < vocab_size
+    return jnp.where(mask, logits, -1e30)
+
+
+def probs_from_logits(logits: jax.Array, temperature: float,
+                      vocab_size: Optional[int] = None) -> jax.Array:
+    """Temperature-adjusted probabilities; temperature 0 -> one-hot argmax
+    (the greedy limit used throughout the paper's temp-0.0 tables)."""
+    if vocab_size is not None:
+        logits = mask_vocab(logits, vocab_size)
+    logits = logits.astype(jnp.float32)
+    if temperature <= 0.0:
+        return jax.nn.one_hot(jnp.argmax(logits, -1), logits.shape[-1],
+                              dtype=jnp.float32)
+    return jax.nn.softmax(logits / temperature, axis=-1)
+
+
+def sample_from_probs(key: jax.Array, probs: jax.Array) -> jax.Array:
+    """Categorical sampling that is exact for one-hot (greedy) inputs."""
+    logp = jnp.log(jnp.maximum(probs, 1e-30))
+    return jax.random.categorical(key, logp, axis=-1)
+
+
+def sample_token(key: jax.Array, logits: jax.Array, temperature: float,
+                 vocab_size: Optional[int] = None) -> jax.Array:
+    if vocab_size is not None:
+        logits = mask_vocab(logits, vocab_size)
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1)
+    return jax.random.categorical(key, logits.astype(jnp.float32) / temperature,
+                                  axis=-1)

@@ -1,0 +1,154 @@
+"""Post-hoc diagnostic signals for DSDE (paper §3.1).
+
+Everything is vectorized over the batch: signals are ``[B]`` or ``[B, N]``
+arrays, histories are fixed-size ring buffers so the whole adapter jits
+into the serving step (no per-step recompilation — see DESIGN.md §3).
+
+* ``kld_per_position``  — KL(target ‖ draft) at each proposed position.
+* ``draft_entropy``     — forward-looking baseline signal (AdaEDL's input).
+* ``weighted_mean/var`` — Eq. (5)–(7): exponential-decay weighting
+  ``alpha_i = delta^(i-1)`` with i=1 the most recent step.
+* ``KLDHistory``        — per-sequence ring buffer of per-step mean KLDs
+  feeding the short (N=10) and long (N=30) WVIR windows (Fig. 5).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _log_softmax(logits: jax.Array) -> jax.Array:
+    return jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+
+
+def kld_per_position(target_logits: jax.Array, draft_logits: jax.Array,
+                     valid: Optional[jax.Array] = None) -> jax.Array:
+    """KL(p_target ‖ q_draft) per position.
+
+    target_logits/draft_logits: [B, T, V]; valid: [B, T] bool.
+    Returns [B, T] (0 where invalid).
+    """
+    lp = _log_softmax(target_logits)
+    lq = _log_softmax(draft_logits)
+    kld = jnp.sum(jnp.exp(lp) * (lp - lq), axis=-1)
+    kld = jnp.maximum(kld, 0.0)          # numerical floor
+    if valid is not None:
+        kld = jnp.where(valid, kld, 0.0)
+    return kld
+
+
+def draft_entropy(draft_logits: jax.Array) -> jax.Array:
+    """Shannon entropy of the draft distribution per position. [B, T]."""
+    lq = _log_softmax(draft_logits)
+    return -jnp.sum(jnp.exp(lq) * lq, axis=-1)
+
+
+def masked_mean(x: jax.Array, valid: Optional[jax.Array],
+                axis: int = -1) -> jax.Array:
+    if valid is None:
+        return x.mean(axis=axis)
+    v = valid.astype(jnp.float32)
+    return (x * v).sum(axis=axis) / jnp.maximum(v.sum(axis=axis), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Weighted statistics — Eq. (5)-(7)
+# ---------------------------------------------------------------------------
+
+def decay_weights(n: int, delta: float) -> jax.Array:
+    """alpha_i = delta^(i-1), i=1 most recent.  Returned oldest-first so it
+    aligns with a chronologically-ordered window [oldest ... newest]."""
+    i = jnp.arange(n, 0, -1, dtype=jnp.float32)   # oldest gets largest i
+    return delta ** (i - 1.0)
+
+
+def weighted_mean(x: jax.Array, weights: jax.Array,
+                  valid: Optional[jax.Array] = None) -> jax.Array:
+    """Eq. (6) over the last axis. x: [..., N], weights [N]."""
+    w = weights * (valid.astype(jnp.float32) if valid is not None else 1.0)
+    return (x * w).sum(-1) / jnp.maximum(w.sum(-1) if valid is not None
+                                         else w.sum(), 1e-9)
+
+
+def weighted_var(x: jax.Array, weights: jax.Array,
+                 valid: Optional[jax.Array] = None) -> jax.Array:
+    """Eq. (7) over the last axis."""
+    w = weights * (valid.astype(jnp.float32) if valid is not None else 1.0)
+    wsum = jnp.maximum(w.sum(-1) if valid is not None else w.sum(), 1e-9)
+    mu = (x * w).sum(-1) / wsum
+    return (w * jnp.square(x - mu[..., None])).sum(-1) / wsum
+
+
+# ---------------------------------------------------------------------------
+# Per-sequence KLD history (Fig. 5)
+# ---------------------------------------------------------------------------
+
+class KLDHistory(NamedTuple):
+    """Ring buffer of per-step mean KLD values, one row per sequence.
+
+    ``buf [B, N_long]`` chronological ring; ``count [B]`` number of valid
+    entries (saturates at N_long); ``head [B]`` next write slot.
+    """
+    buf: jax.Array
+    count: jax.Array
+    head: jax.Array
+
+    @staticmethod
+    def init(batch: int, n_long: int = 30) -> "KLDHistory":
+        return KLDHistory(
+            buf=jnp.zeros((batch, n_long), jnp.float32),
+            count=jnp.zeros((batch,), jnp.int32),
+            head=jnp.zeros((batch,), jnp.int32))
+
+    def push(self, value: jax.Array,
+             active: Optional[jax.Array] = None) -> "KLDHistory":
+        """Append one per-step value [B]; ``active`` gates sequences that
+        did not take a step this round (finished / not scheduled)."""
+        b, n = self.buf.shape
+        bi = jnp.arange(b)
+        new_buf = self.buf.at[bi, self.head].set(value.astype(jnp.float32))
+        new_count = jnp.minimum(self.count + 1, n)
+        new_head = (self.head + 1) % n
+        if active is not None:
+            new_buf = jnp.where(active[:, None], new_buf, self.buf)
+            new_count = jnp.where(active, new_count, self.count)
+            new_head = jnp.where(active, new_head, self.head)
+        return KLDHistory(new_buf, new_count, new_head)
+
+    def chronological(self, n: int) -> Tuple[jax.Array, jax.Array]:
+        """Last ``n`` entries, oldest-first: (values [B, n], valid [B, n])."""
+        b, n_long = self.buf.shape
+        assert n <= n_long
+        # entry j (j=0 oldest of the window) lives at head - n + j (mod N)
+        offs = jnp.arange(-n, 0)
+        idx = (self.head[:, None] + offs[None, :]) % n_long
+        vals = jnp.take_along_axis(self.buf, idx, axis=1)
+        # validity: the last min(count, n) slots are real
+        age = jnp.arange(n, 0, -1)[None, :]          # newest has age 1
+        valid = age <= self.count[:, None]
+        return vals, valid
+
+    def reset_rows(self, rows: jax.Array) -> "KLDHistory":
+        """Clear history for sequences being replaced (continuous batching)."""
+        z = jnp.zeros_like(self.count)
+        return KLDHistory(
+            buf=jnp.where(rows[:, None], jnp.zeros_like(self.buf), self.buf),
+            count=jnp.where(rows, z, self.count),
+            head=jnp.where(rows, z, self.head))
+
+
+def wvir(history: KLDHistory, short_n: int, long_n: int, delta: float,
+         eps: float = 1e-9) -> jax.Array:
+    """Eq. (4): Weighted Variance Intensity Ratio, per sequence [B].
+
+    WVIR > 1 indicates growing instability.  Until the long window has at
+    least ``short_n`` entries the ratio is defined as 1 (neutral)."""
+    vs, valid_s = history.chronological(short_n)
+    vl, valid_l = history.chronological(long_n)
+    var_s = weighted_var(vs, decay_weights(short_n, delta), valid_s)
+    var_l = weighted_var(vl, decay_weights(long_n, delta), valid_l)
+    ratio = var_s / jnp.maximum(var_l, eps)
+    enough = history.count >= short_n
+    return jnp.where(enough, ratio, 1.0)

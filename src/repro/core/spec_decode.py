@@ -1,0 +1,227 @@
+"""One speculative-decoding round, fully jitted (paper §3.2 "Ragged Q").
+
+A round with draft bucket size K (static; the engine picks the bucket from
+the per-sequence SL predictions so there are at most ``sl_max - sl_min + 1``
+compiled programs — the XLA-native replacement for vLLM's per-step
+CUDA-graph recapture problem, DESIGN.md §3):
+
+  1. draft loop   — K single-token decode steps of the draft model
+                    (``lax.scan`` with the draft KV/state cache in carry);
+                    per-sequence validity ``j < sl_i`` implements ragged SL
+                    inside the fixed bucket.  AdaEDL's entropy early-stop
+                    folds in here as a dynamic ``sl_i`` shrink.
+  2. verification — ONE target forward over [pending, d_1..d_K]
+                    (T = K+1) against the target cache.
+  3. rejection    — exact batched ragged rejection sampling.
+  4. post-hoc     — KLD per proposed position -> adapter.observe
+                    (DSDE's lagging diagnostic signal).
+  5. commit       — caches advance by exactly 1 + n_accepted tokens
+                    (KV: length arithmetic; recurrent: masked re-advance).
+  6. predict      — adapter.predict_sl (+ SL_cap) for the next round.
+
+The engine in ``repro/serving`` strings rounds together and handles
+request lifecycles / continuous batching.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import adapter as adapter_lib
+from repro.core.adapter import AdapterState
+from repro.core.config import ModelConfig, SpecDecodeConfig
+from repro.core.rejection import RejectionResult, rejection_sample
+from repro.core.sampling import sample_token
+from repro.core.signals import draft_entropy, kld_per_position
+from repro.models import cache as cache_lib
+from repro.models.transformer import commit, forward, has_recurrent_state
+
+PyTree = Any
+
+
+class RoundState(NamedTuple):
+    """Carried across rounds by the serving engine."""
+    target_cache: PyTree
+    draft_cache: PyTree
+    adapter: AdapterState
+    pending: jax.Array         # [B] last emitted token, not yet in caches
+    sl_next: jax.Array         # [B] per-sequence SL for the next round
+    key: jax.Array
+
+
+class RoundOutput(NamedTuple):
+    emitted: jax.Array         # [B, K+1] new tokens (pad beyond num_emitted)
+    num_emitted: jax.Array     # [B]
+    num_accepted: jax.Array    # [B]
+    num_proposed: jax.Array    # [B]
+    telemetry: Dict[str, jax.Array]
+
+
+def _draft_loop(params_d: PyTree, cfg_d: ModelConfig, state: RoundState,
+                k: int, sl_i: jax.Array, spec: SpecDecodeConfig,
+                key: jax.Array
+                ) -> Tuple[jax.Array, jax.Array, PyTree, jax.Array]:
+    """K+1 draft decode steps (the final step only writes the last draft
+    token's KV so the cache is complete on total acceptance).  Returns
+    (draft_tokens [B,K], draft_logits [B,K,V], new_draft_cache, eff_sl)."""
+    b = state.pending.shape[0]
+
+    def step(carry, j):
+        cache, tok, stop, eff = carry
+        logits, cache, _ = forward(params_d, cfg_d, tok[:, None],
+                                   cache=cache, mode="decode")
+        lj = logits[:, 0]
+        kj = jax.random.fold_in(key, j)
+        nxt = sample_token(kj, lj, spec.temperature, cfg_d.vocab_size)
+        if spec.policy == "adaedl":
+            ent = draft_entropy(lj[:, None])[:, 0]
+            keep = adapter_lib.adaedl_stop_threshold(ent, spec)
+            stop = stop | ~keep
+        live = (j < sl_i) & (j < k) & ~stop
+        eff = eff + live.astype(jnp.int32)
+        # cache length bookkeeping: each step wrote one KV at len + j; the
+        # cache's ``length`` field is only advanced at commit time, so we
+        # thread an explicit position via a temp length bump.
+        cache = dict(cache)
+        cache["length"] = cache["length"] + 1
+        return (cache, nxt.astype(jnp.int32), stop, eff), (nxt, lj)
+
+    cache0 = dict(state.draft_cache)
+    init = (cache0, state.pending, jnp.zeros((b,), bool),
+            jnp.zeros((b,), jnp.int32))
+    (cache_k, _, _, eff), (toks, logits) = jax.lax.scan(
+        step, init, jnp.arange(k + 1))
+    cache_k = dict(cache_k)
+    cache_k["length"] = state.draft_cache["length"]     # restore; commit later
+    draft_tokens = jnp.moveaxis(toks[:k], 0, 1).astype(jnp.int32)  # [B,K]
+    draft_logits = jnp.moveaxis(logits[:k], 0, 1)                  # [B,K,V]
+    return draft_tokens, draft_logits, cache_k, eff
+
+
+@functools.partial(jax.jit, static_argnames=("cfg_t", "cfg_d", "spec", "k"))
+def spec_decode_round(params_t: PyTree, params_d: PyTree,
+                      cfg_t: ModelConfig, cfg_d: ModelConfig,
+                      spec: SpecDecodeConfig, k: int,
+                      state: RoundState, active: jax.Array
+                      ) -> Tuple[RoundState, RoundOutput]:
+    """One full speculative round with draft bucket size ``k``.
+
+    ``active [B]`` masks live request slots (continuous batching)."""
+    key, k_draft, k_rej = jax.random.split(state.key, 3)
+    b = state.pending.shape[0]
+    pad_id = cfg_t.vocab_size  # reserved padding token id (paper §3.2)
+
+    sl_i = jnp.minimum(state.sl_next, k) * active.astype(jnp.int32)
+
+    # --- 1. draft -----------------------------------------------------------
+    if k > 0:
+        draft_tokens, draft_logits, draft_cache, eff_sl = _draft_loop(
+            params_d, cfg_d, state, k, sl_i, spec, k_draft)
+        sl_i = jnp.minimum(sl_i, eff_sl)  # AdaEDL early stop shrinks here
+    else:  # autoregressive baseline: no draft at all
+        draft_tokens = jnp.zeros((b, 0), jnp.int32)
+        draft_cache = state.draft_cache
+        eff_sl = jnp.zeros((b,), jnp.int32)
+
+    # replace out-of-range draft positions by the reserved pad id so invalid
+    # token ids never propagate (paper §3.2); pad_id has a real (padded)
+    # embedding row and is masked out of every softmax.
+    pos = jnp.arange(k)[None, :]
+    proposed = pos < sl_i[:, None]
+    safe_drafts = jnp.where(proposed, draft_tokens, pad_id)
+
+    # --- 2. verification ----------------------------------------------------
+    verify_tokens = jnp.concatenate(
+        [state.pending[:, None], safe_drafts], axis=1)          # [B, K+1]
+    t_logits, t_cache_v, _ = forward(params_t, cfg_t, verify_tokens,
+                                     cache=state.target_cache, mode="decode")
+
+    # --- 3. rejection sampling ----------------------------------------------
+    if k > 0:
+        dl = draft_logits
+    else:
+        dl = jnp.zeros((b, 0) + t_logits.shape[-1:], t_logits.dtype)
+    rej: RejectionResult = rejection_sample(
+        k_rej, safe_drafts, dl, t_logits, sl_i,
+        temperature=spec.temperature, vocab_size=cfg_t.vocab_size,
+        pad_id=pad_id)
+
+    # --- 4. post-hoc signals --------------------------------------------------
+    if k > 0:
+        kld = kld_per_position(t_logits[:, :k], dl, proposed)   # [B, K]
+    else:
+        kld = jnp.zeros((b, 0), jnp.float32)
+    new_adapter = adapter_lib.observe(
+        state.adapter, spec, kld=kld, proposed_valid=proposed,
+        num_accepted=rej.num_accepted, active=active)
+
+    # --- 5. commit ------------------------------------------------------------
+    n_committed = (1 + rej.num_accepted) * active.astype(jnp.int32)
+    t_cache = commit(params_t, cfg_t, verify_tokens, state.target_cache,
+                     t_cache_v, n_committed)
+    if k > 0:
+        d_cache = commit(params_d, cfg_d, verify_tokens, state.draft_cache,
+                         draft_cache, n_committed)
+    else:  # autoregressive baseline never consults the draft model
+        d_cache = state.draft_cache
+
+    # --- 6. predict next SL ----------------------------------------------------
+    if spec.policy == "dsde":
+        sl_next, new_adapter, tel = adapter_lib.predict_sl(
+            new_adapter, spec, active)
+    elif spec.policy == "static":
+        sl_next = adapter_lib.static_sl(b, spec)
+        tel = {}
+    elif spec.policy == "adaedl":
+        sl_next = jnp.full((b,), spec.adaedl_base, jnp.int32)
+        tel = {}
+    else:  # autoregressive
+        sl_next = jnp.zeros((b,), jnp.int32)
+        tel = {}
+
+    telemetry = {"mean_kld": state.adapter.mu_kld_last, **tel}
+    new_state = RoundState(
+        target_cache=t_cache, draft_cache=d_cache, adapter=new_adapter,
+        pending=jnp.where(active, rej.next_token, state.pending),
+        sl_next=sl_next, key=key)
+    out = RoundOutput(
+        emitted=jnp.where(active[:, None], rej.emitted, pad_id),
+        num_emitted=rej.num_emitted * active.astype(jnp.int32),
+        num_accepted=rej.num_accepted * active.astype(jnp.int32),
+        num_proposed=sl_i,
+        telemetry=telemetry)
+    return new_state, out
+
+
+def init_round_state(cfg_t: ModelConfig, cfg_d: ModelConfig,
+                     spec: SpecDecodeConfig, batch: int, max_len: int,
+                     key: jax.Array, dtype=jnp.float32,
+                     enc_len: Optional[int] = None) -> RoundState:
+    t_cache = cache_lib.cache_struct(cfg_t, batch, max_len, dtype,
+                                     enc_len=enc_len)
+    d_cache = cache_lib.cache_struct(cfg_d, batch, max_len, dtype,
+                                     enc_len=enc_len)
+    sl0 = (spec.calibration_sl if spec.policy == "dsde"
+           else spec.static_sl if spec.policy == "static"
+           else spec.adaedl_base if spec.policy == "adaedl" else 0)
+    return RoundState(
+        target_cache=t_cache, draft_cache=d_cache,
+        adapter=adapter_lib.init_adapter_state(batch, spec),
+        pending=jnp.zeros((batch,), jnp.int32),
+        sl_next=jnp.full((batch,), sl0, jnp.int32),
+        key=key)
+
+
+def pick_bucket(sl_next, spec: SpecDecodeConfig, active) -> int:
+    """Python-side bucket choice: K = max active SL prediction (the paper's
+    SL_max^(t) = max_i SL_i^(t) verification length)."""
+    import numpy as np
+    sl = np.asarray(sl_next)
+    act = np.asarray(active)
+    if spec.policy == "autoregressive":
+        return 0
+    live = sl[act] if act.any() else sl
+    return int(max(live.max() if live.size else spec.sl_min, spec.sl_min))

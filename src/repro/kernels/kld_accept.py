@@ -1,0 +1,140 @@
+"""Pallas TPU kernel: fused post-hoc signal extraction.
+
+After each verification the DSDE adapter needs, per proposed position:
+KL(p_target ‖ q_draft), the draft entropy, and the token probabilities
+p(x)/q(x) for rejection sampling.  A naive jnp implementation reads the two
+[B, T, V] logit tensors ~5 times (two log_softmax passes, three reductions)
+— at V ≈ 152k this step is purely HBM-bandwidth-bound, so fusing it into a
+single streaming pass over the vocabulary is a ~4-5x reduction of the
+dominant (memory) roofline term for the adapter stage.
+
+Online accumulation (flash-softmax style, per (b, t) row):
+
+  running  m_p, s_p = sumexp(tl - m_p)           (target logsumexp state)
+           m_q, s_q = sumexp(dl - m_q)           (draft  logsumexp state)
+           a_pd = sum e^{tl-m_p} (tl - dl)       (-> KL numerator)
+           a_qq = sum e^{dl-m_q} dl              (-> entropy numerator)
+           p_tok, q_tok: picked up in the block holding ``token``
+
+  finalize:
+    lse_p = m_p + log s_p ;  lse_q = m_q + log s_q
+    KL    = a_pd / s_p - lse_p + lse_q
+    H_q   = lse_q - a_qq / s_q
+    p_tok = e^{tl_tok - lse_p} ;  q_tok = e^{dl_tok - lse_q}
+
+Grid: (B*T, V // BV) — vocab blocks innermost, state in SMEM/VMEM scratch.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(tok_ref, tl_ref, dl_ref,
+            kld_ref, ent_ref, ptok_ref, qtok_ref,
+            state_ref, *, nvb: int, bv: int):
+    vb = pl.program_id(1)
+
+    @pl.when(vb == 0)
+    def _init():
+        state_ref[0] = NEG_INF   # m_p
+        state_ref[1] = 0.0       # s_p
+        state_ref[2] = 0.0       # a_pd
+        state_ref[3] = NEG_INF   # m_q
+        state_ref[4] = 0.0       # s_q
+        state_ref[5] = 0.0       # a_qq
+        state_ref[6] = NEG_INF   # tl[token]
+        state_ref[7] = NEG_INF   # dl[token]
+
+    tl = tl_ref[0].astype(jnp.float32)          # [BV]
+    dl = dl_ref[0].astype(jnp.float32)          # [BV]
+    tok = tok_ref[0]
+
+    # --- target-side online stats -----------------------------------------
+    m_p, s_p, a_pd = state_ref[0], state_ref[1], state_ref[2]
+    m_new = jnp.maximum(m_p, jnp.max(tl))
+    alpha = jnp.exp(m_p - m_new)
+    e_p = jnp.exp(tl - m_new)
+    state_ref[0] = m_new
+    state_ref[1] = s_p * alpha + e_p.sum()
+    state_ref[2] = a_pd * alpha + (e_p * (tl - dl)).sum()
+
+    # --- draft-side online stats -------------------------------------------
+    m_q, s_q, a_qq = state_ref[3], state_ref[4], state_ref[5]
+    mq_new = jnp.maximum(m_q, jnp.max(dl))
+    beta = jnp.exp(m_q - mq_new)
+    e_q = jnp.exp(dl - mq_new)
+    state_ref[3] = mq_new
+    state_ref[4] = s_q * beta + e_q.sum()
+    state_ref[5] = a_qq * beta + (e_q * dl).sum()
+
+    # --- token pick-up -------------------------------------------------------
+    lo = vb * bv
+    idx = tok - lo
+    in_block = (idx >= 0) & (idx < bv)
+    idx_c = jnp.clip(idx, 0, bv - 1)
+    state_ref[6] = jnp.where(in_block, tl[idx_c], state_ref[6])
+    state_ref[7] = jnp.where(in_block, dl[idx_c], state_ref[7])
+
+    @pl.when(vb == nvb - 1)
+    def _finalize():
+        s_p_f = jnp.maximum(state_ref[1], 1e-30)
+        s_q_f = jnp.maximum(state_ref[4], 1e-30)
+        lse_p = state_ref[0] + jnp.log(s_p_f)
+        lse_q = state_ref[3] + jnp.log(s_q_f)
+        kld_ref[0] = jnp.maximum(state_ref[2] / s_p_f - lse_p + lse_q, 0.0)
+        ent_ref[0] = lse_q - state_ref[5] / s_q_f
+        ptok_ref[0] = jnp.exp(state_ref[6] - lse_p)
+        qtok_ref[0] = jnp.exp(state_ref[7] - lse_q)
+
+
+@functools.partial(jax.jit, static_argnames=("block_v", "interpret"))
+def fused_kld_accept(target_logits: jax.Array, draft_logits: jax.Array,
+                     draft_tokens: jax.Array, *, block_v: int = 2048,
+                     interpret: bool = False
+                     ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """target_logits/draft_logits [B,T,V]; draft_tokens [B,T] int32.
+    Returns per [B,T]: (kld, draft_entropy, p_target(tok), q_draft(tok))."""
+    b, t, v = target_logits.shape
+    n = b * t
+    bv = min(block_v, v)
+    if v % bv:
+        pad = bv - v % bv
+        target_logits = jnp.pad(target_logits, ((0, 0), (0, 0), (0, pad)),
+                                constant_values=NEG_INF)
+        draft_logits = jnp.pad(draft_logits, ((0, 0), (0, 0), (0, pad)),
+                               constant_values=NEG_INF)
+        v += pad
+    nvb = v // bv
+    tl = target_logits.reshape(n, v)
+    dl = draft_logits.reshape(n, v)
+    tok = draft_tokens.reshape(n).astype(jnp.int32)
+
+    shapes = jax.ShapeDtypeStruct((n,), jnp.float32)
+    kld, ent, ptok, qtok = pl.pallas_call(
+        functools.partial(_kernel, nvb=nvb, bv=bv),
+        grid=(n, nvb),
+        in_specs=[
+            pl.BlockSpec((1,), lambda ni, vi: (ni,)),
+            pl.BlockSpec((1, bv), lambda ni, vi: (ni, vi)),
+            pl.BlockSpec((1, bv), lambda ni, vi: (ni, vi)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1,), lambda ni, vi: (ni,)),
+            pl.BlockSpec((1,), lambda ni, vi: (ni,)),
+            pl.BlockSpec((1,), lambda ni, vi: (ni,)),
+            pl.BlockSpec((1,), lambda ni, vi: (ni,)),
+        ],
+        out_shape=[shapes, shapes, shapes, shapes],
+        scratch_shapes=[pltpu.SMEM((8,), jnp.float32)],
+        interpret=interpret,
+    )(tok, tl, dl)
+    return (kld.reshape(b, t), ent.reshape(b, t),
+            ptok.reshape(b, t), qtok.reshape(b, t))

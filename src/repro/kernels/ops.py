@@ -1,0 +1,50 @@
+"""Backend-dispatching wrappers around the Pallas kernels.
+
+On TPU the Pallas kernels run compiled; everywhere else (this CPU
+container, tests) they run with ``interpret=True`` or fall back to the
+pure-jnp oracles in :mod:`repro.kernels.ref`.  The model code calls these
+wrappers, never the kernels directly.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.kld_accept import fused_kld_accept
+from repro.kernels.ragged_attention import ragged_verify_attention
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def ragged_attention(q: jax.Array, k_buf: jax.Array, v_buf: jax.Array,
+                     q_pos: jax.Array, kv_pos: jax.Array, *,
+                     window: Optional[int] = None,
+                     force_kernel: bool = False,
+                     interpret: Optional[bool] = None) -> jax.Array:
+    """Decode/verify attention against a ring KV cache (ragged lengths)."""
+    if _on_tpu() or force_kernel:
+        return ragged_verify_attention(
+            q, k_buf, v_buf, q_pos, kv_pos, window=window,
+            interpret=bool(interpret) if interpret is not None
+            else not _on_tpu())
+    return ref.ragged_verify_attention_ref(q, k_buf, v_buf, q_pos, kv_pos,
+                                           window=window)
+
+
+def kld_accept_signals(target_logits: jax.Array, draft_logits: jax.Array,
+                       draft_tokens: jax.Array, *,
+                       force_kernel: bool = False,
+                       interpret: Optional[bool] = None
+                       ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Fused per-position (KL(p||q), H(q), p(tok), q(tok))."""
+    if _on_tpu() or force_kernel:
+        return fused_kld_accept(
+            target_logits, draft_logits, draft_tokens,
+            interpret=bool(interpret) if interpret is not None
+            else not _on_tpu())
+    return ref.kld_accept_ref(target_logits, draft_logits, draft_tokens)

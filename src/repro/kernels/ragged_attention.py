@@ -1,0 +1,130 @@
+"""Pallas TPU kernel: ragged decode / verification attention.
+
+This is the TPU-native replacement for the FlashAttention-2 varlen kernel
+the paper integrates into vLLM's Target Worker (paper §3 / DESIGN.md §3):
+requests with heterogeneous speculative lengths are scored in a single
+batch pass.  On TPU the raggedness lives in *masks over a padded
+[T = SL_cap+1] query block* — SL_cap bounds the pad waste, which is the
+serendipitous synergy between the paper's straggler mitigation and MXU
+tiling.
+
+Layout / grid
+-------------
+  q        [B, KV, G, T, D]   (grouped-query view; T small: 1..SL_max+1)
+  k_buf    [B, W, KV, D]      ring-buffer cache, W = window or max_len
+  v_buf    [B, W, KV, D]
+  kv_pos   [B, W]  int32      absolute position per ring slot (-1 empty)
+  q_pos    [B, T]  int32      absolute position per query token
+  out      [B, KV, G, T, D]
+
+  grid = (B, KV, W // BK)     — kv blocks innermost, so the (m, l, acc)
+  online-softmax state lives in VMEM scratch across the kv sweep
+  (flash-decoding structure).  The [G*T, BK] score tile hits the MXU; all
+  masking is elementwise on the tile.
+
+Block sizes: BK is the kv tile (default 512 lanes * sublanes aligned);
+G*T stays small (<= 8*11 = 88 rows -> padded to sublane multiples by Mosaic).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, kvp_ref, qp_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, window: Optional[int], nwb: int,
+            sm_scale: float):
+    wb = pl.program_id(2)
+
+    @pl.when(wb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)              # [G, T, D]
+    g, t, d = q.shape
+    k = k_ref[0, :, 0, :].astype(jnp.float32)        # [BK, D]
+    v = v_ref[0, :, 0, :].astype(jnp.float32)        # [BK, D]
+    kvp = kvp_ref[0]                                 # [BK]
+    qp = qp_ref[0]                                   # [T]
+
+    s = jax.lax.dot_general(q.reshape(g * t, d), k,
+                            (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    s = s * sm_scale                                  # [G*T, BK]
+    valid = (kvp[None, :] >= 0) & (kvp[None, :] <= qp[:, None])
+    if window is not None:
+        valid = valid & (qp[:, None] - kvp[None, :] < window)
+    mask = jnp.tile(valid, (g, 1))                    # [G*T, BK]
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_cur = jnp.max(s, axis=-1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where(mask, p, 0.0)
+    l_ref[...] = l_ref[...] * alpha + p.sum(-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(wb == nwb - 1)
+    def _finalize():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0, 0] = out.reshape(g, t, d).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_k", "interpret"))
+def ragged_verify_attention(q: jax.Array, k_buf: jax.Array, v_buf: jax.Array,
+                            q_pos: jax.Array, kv_pos: jax.Array, *,
+                            window: Optional[int] = None,
+                            block_k: int = 512,
+                            interpret: bool = False) -> jax.Array:
+    """q [B,T,H,D]; k_buf/v_buf [B,W,KV,D]; q_pos [B,T]; kv_pos [B,W].
+    Returns [B,T,H,D].  See module docstring."""
+    b, t, h, d = q.shape
+    w, kv = k_buf.shape[1], k_buf.shape[2]
+    g = h // kv
+    bk = min(block_k, w)
+    if w % bk:
+        pad = bk - w % bk
+        k_buf = jnp.pad(k_buf, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v_buf = jnp.pad(v_buf, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad)), constant_values=-1)
+        w += pad
+    nwb = w // bk
+
+    qr = q.reshape(b, t, kv, g, d).transpose(0, 2, 3, 1, 4)  # [B,KV,G,T,D]
+    grid = (b, kv, nwb)
+    out = pl.pallas_call(
+        functools.partial(_kernel, window=window, nwb=nwb,
+                          sm_scale=1.0 / math.sqrt(d)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, g, t, d), lambda bi, ki, wi: (bi, ki, 0, 0, 0)),
+            pl.BlockSpec((1, bk, 1, d), lambda bi, ki, wi: (bi, wi, ki, 0)),
+            pl.BlockSpec((1, bk, 1, d), lambda bi, ki, wi: (bi, wi, ki, 0)),
+            pl.BlockSpec((1, bk), lambda bi, ki, wi: (bi, wi)),
+            pl.BlockSpec((1, t), lambda bi, ki, wi: (bi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, t, d),
+                               lambda bi, ki, wi: (bi, ki, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kv, g, t, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g * t,), jnp.float32),
+            pltpu.VMEM((g * t,), jnp.float32),
+            pltpu.VMEM((g * t, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, k_buf, v_buf, kv_pos, q_pos)
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, t, h, d)

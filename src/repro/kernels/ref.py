@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose ground truth)."""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def ragged_verify_attention_ref(q: jax.Array, k_buf: jax.Array,
+                                v_buf: jax.Array, q_pos: jax.Array,
+                                kv_pos: jax.Array,
+                                window: Optional[int] = None) -> jax.Array:
+    """Oracle for the ragged decode/verify attention kernel.
+
+    q [B,T,H,D] — T = 1 (decode) or SL_cap+1 (verification);
+    k_buf/v_buf [B,W,KV,D] — ring-buffer cache (already containing the new
+    tokens' KV);  q_pos [B,T] absolute positions; kv_pos [B,W] slot
+    positions (-1 = empty).  GQA via head grouping.
+    """
+    b, t, h, d = q.shape
+    kv = k_buf.shape[2]
+    g = h // kv
+    qr = q.reshape(b, t, kv, g, d).astype(jnp.float32)
+    scores = jnp.einsum("btkgd,bskd->bkgts", qr,
+                        k_buf.astype(jnp.float32)) / math.sqrt(d)
+    mask = (kv_pos[:, None, :] >= 0) & (kv_pos[:, None, :] <= q_pos[:, :, None])
+    if window is not None:
+        mask = mask & (q_pos[:, :, None] - kv_pos[:, None, :] < window)
+    scores = jnp.where(mask[:, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgts,bskd->btkgd", probs, v_buf.astype(jnp.float32))
+    return out.reshape(b, t, h, d).astype(q.dtype)
+
+
+def kld_accept_ref(target_logits: jax.Array, draft_logits: jax.Array,
+                   draft_tokens: jax.Array
+                   ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Oracle for the fused post-hoc signal kernel.
+
+    Returns per [B,T]: (kld = KL(p_target||q_draft), entropy_q,
+    p_target(token), q_draft(token))."""
+    tl = target_logits.astype(jnp.float32)
+    dl = draft_logits.astype(jnp.float32)
+    lp = jax.nn.log_softmax(tl, axis=-1)
+    lq = jax.nn.log_softmax(dl, axis=-1)
+    p = jnp.exp(lp)
+    q = jnp.exp(lq)
+    kld = jnp.sum(p * (lp - lq), axis=-1)
+    ent = -jnp.sum(q * lq, axis=-1)
+    p_tok = jnp.take_along_axis(p, draft_tokens[..., None], axis=-1)[..., 0]
+    q_tok = jnp.take_along_axis(q, draft_tokens[..., None], axis=-1)[..., 0]
+    return kld, ent, p_tok, q_tok

@@ -1,0 +1,251 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# --- everything below may import jax (the flag above must come first) -----
+import argparse          # noqa: E402
+import json              # noqa: E402
+import re                # noqa: E402
+import sys               # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+from typing import Dict, Optional  # noqa: E402
+
+import jax               # noqa: E402
+import numpy as np       # noqa: E402
+
+from repro.configs import get_config, list_archs                 # noqa: E402
+from repro.core.config import INPUT_SHAPES, TPU_V5E              # noqa: E402
+from repro.launch.mesh import make_production_mesh               # noqa: E402
+from repro.launch.sharding import make_rules                     # noqa: E402
+from repro.launch.steps import (adapt_config, make_step_and_specs,  # noqa: E402
+                                model_flops, supported)
+
+"""Multi-pod dry-run (deliverable (e)) + roofline-term extraction
+(deliverable (g) input).
+
+For every (architecture x input shape) this lowers + compiles the real
+step function against the production mesh with ShapeDtypeStruct stand-ins
+(no allocation), prints ``memory_analysis()`` / ``cost_analysis()``, and
+extracts per-collective byte counts from the optimized HLO.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-32b --shape decode_32k
+  python -m repro.launch.dryrun --all [--multi-pod] --out results.json
+"""
+
+_COLL_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute")
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|s64|u64|s32|u32|s16|u16|s8|u8|"
+                       r"pred|f8e4m3fn|f8e5m2)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result-shape bytes of every collective op in the optimized HLO.
+
+    (cost_analysis does not expose collective traffic — this parse is the
+    §Roofline collective term's source.)"""
+    out = {op: 0 for op in _COLL_OPS}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # "%x = TYPE op-name(...)" — take the op between type and '('
+        m = re.match(r"%?[\w.\-]+\s*=\s*(.+?)\s+([\w\-]+)\(", s)
+        if not m:
+            continue
+        op = m.group(2)
+        base = op.rstrip("0123456789.")       # all-gather.12 -> all-gather
+        base = base.rstrip("-")
+        # also handle "-start" variants (async collectives)
+        for coll in _COLL_OPS:
+            if base == coll or base == coll + "-start":
+                out[coll] += _shape_bytes(m.group(1))
+                out["count"] += 1
+                break
+    return out
+
+
+def dryrun_one(arch: str, shape_name: str, multi_pod: bool,
+               verbose: bool = True,
+               opts: frozenset = frozenset(),
+               expert_parallel: bool = False) -> Dict:
+    shape = INPUT_SHAPES[shape_name]
+    cfg0 = get_config(arch)
+    ok, why = supported(cfg0, shape)
+    rec: Dict = {"arch": arch, "shape": shape_name,
+                 "mesh": "2x16x16" if multi_pod else "16x16",
+                 "opts": sorted(opts) + (["ep"] if expert_parallel else [])}
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        if verbose:
+            print(f"[SKIP] {arch} x {shape_name}: {why}")
+        return rec
+
+    t0 = time.monotonic()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = make_rules(mesh, shape,
+                       expert_parallel=expert_parallel)
+    cfg = adapt_config(cfg0, shape, opts)
+    step, args, donate = make_step_and_specs(cfg, shape, mesh, rules,
+                                             opts=opts)
+
+    with mesh:
+        lowered = jax.jit(step, donate_argnums=donate).lower(*args)
+        compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+    t1 = time.monotonic()
+
+    n_dev = int(np.prod(mesh.devices.shape))
+    # XLA's cost_analysis visits while bodies once (scan trip counts are
+    # ignored — verified empirically); hlo_cost re-parses the optimized HLO
+    # and multiplies through nested loops.  Raw values kept for reference.
+    from repro.launch.hlo_cost import HLOCost
+    hc = HLOCost(compiled.as_text())
+    acc = hc.entry_cost()
+    flops = acc["flops"]
+    bytes_acc = acc["bytes"]
+    coll = {k: acc[k] for k in ("all-gather", "all-reduce", "reduce-scatter",
+                                "all-to-all", "collective-permute")}
+    coll_total = acc["collective_bytes"]
+    raw_flops = float(cost.get("flops", 0.0)) if cost else 0.0
+    raw_bytes = float(cost.get("bytes accessed", 0.0)) if cost else 0.0
+
+    mem_rec = {}
+    if mem is not None:
+        for field in ("temp_size_in_bytes", "argument_size_in_bytes",
+                      "output_size_in_bytes", "alias_size_in_bytes",
+                      "generated_code_size_in_bytes"):
+            mem_rec[field] = getattr(mem, field, None)
+        # The CPU backend has no native bf16 dot: XLA legalizes bf16 dots by
+        # materializing f32 CONVERTED COPIES of weights/caches, inflating
+        # temp memory vs a real TPU (which runs bf16 on the MXU natively).
+        # Estimate that artifact by summing distinct f32 convert-of-bf16
+        # results, and report a TPU-adjusted temp figure.
+        artifacts = 0
+        seen = set()
+        for m2 in re.finditer(
+                r"f32\[([0-9,]+)\][^=]*convert\((%[\w.\-]+)\)",
+                compiled.as_text()):
+            key = m2.group(1)
+            if key in seen:
+                continue
+            n = 1
+            for d in key.split(","):
+                n *= int(d)
+            if n * 4 >= 64 * 2**20:    # only count >=64MiB buffers
+                seen.add(key)
+                artifacts += n * 4
+        mem_rec["cpu_bf16_artifact_bytes_est"] = artifacts
+        if mem_rec.get("temp_size_in_bytes") is not None:
+            mem_rec["temp_tpu_adjusted_bytes"] = max(
+                mem_rec["temp_size_in_bytes"] - artifacts, 0)
+
+    hw = TPU_V5E
+    mf = model_flops(cfg0, shape)
+    # cost_analysis is per-device for SPMD modules
+    compute_s = flops / hw.peak_flops_bf16
+    memory_s = bytes_acc / hw.hbm_bandwidth
+    # each chip drives its ICI links; bytes here are per-device HLO
+    collective_s = coll_total / hw.ici_bandwidth
+
+    rec.update(
+        status="ok",
+        devices=n_dev,
+        compile_s=round(t1 - t0, 2),
+        hlo_flops_per_device=flops,
+        hlo_bytes_per_device=bytes_acc,
+        collective_bytes_per_device=coll_total,
+        collectives=coll,
+        xla_cost_analysis_raw={"flops": raw_flops, "bytes": raw_bytes,
+                               "note": "while bodies counted once by XLA"},
+        unknown_trip_counts=hc.unknown_trip_counts,
+        memory=mem_rec,
+        model_flops_total=mf,
+        model_flops_per_device=mf / n_dev,
+        roofline={
+            "compute_s": compute_s,
+            "memory_s": memory_s,
+            "collective_s": collective_s,
+            "bottleneck": max(
+                [("compute", compute_s), ("memory", memory_s),
+                 ("collective", collective_s)], key=lambda kv: kv[1])[0],
+            "useful_flops_ratio": (mf / n_dev) / flops if flops else None,
+        },
+    )
+    if verbose:
+        r = rec["roofline"]
+        print(f"[OK]   {arch:22s} x {shape_name:12s} mesh={rec['mesh']:8s} "
+              f"compile={rec['compile_s']:7.1f}s "
+              f"FLOPs/dev={flops:.3e} bytes/dev={bytes_acc:.3e} "
+              f"coll/dev={coll_total:.3e} "
+              f"terms(c/m/n)={r['compute_s']:.2e}/{r['memory_s']:.2e}/"
+              f"{r['collective_s']:.2e} -> {r['bottleneck']}")
+        if mem_rec.get("temp_size_in_bytes") is not None:
+            print(f"       memory_analysis: temp={mem_rec['temp_size_in_bytes']/2**30:.2f}GiB "
+                  f"(tpu-adj {mem_rec['temp_tpu_adjusted_bytes']/2**30:.2f}GiB) "
+                  f"args={mem_rec['argument_size_in_bytes']/2**30:.2f}GiB "
+                  f"out={mem_rec['output_size_in_bytes']/2**30:.2f}GiB "
+                  f"(per device)")
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list_archs())
+    ap.add_argument("--shape", choices=list(INPUT_SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="sweep all assigned arch x shape combos")
+    ap.add_argument("--opt", action="append", default=[],
+                    help="enable a §Perf optimization variant (kv_pad, ...)")
+    ap.add_argument("--expert-parallel", action="store_true")
+    ap.add_argument("--out", default=None, help="JSON output path (append)")
+    args = ap.parse_args()
+
+    assigned = [a for a in list_archs() if not a.startswith("paper-")]
+    combos = ([(a, s) for a in assigned for s in INPUT_SHAPES]
+              if args.all else [(args.arch, args.shape)])
+    results = []
+    for arch, shape in combos:
+        try:
+            rec = dryrun_one(arch, shape, args.multi_pod,
+                             opts=frozenset(args.opt),
+                             expert_parallel=args.expert_parallel)
+        except Exception as e:  # a failure here is a bug in the system
+            rec = {"arch": arch, "shape": shape, "status": "error",
+                   "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()}
+            print(f"[FAIL] {arch} x {shape}: {rec['error']}")
+        results.append(rec)
+        if args.out:
+            existing = []
+            if os.path.exists(args.out):
+                with open(args.out) as f:
+                    existing = json.load(f)
+            keep = [r for r in existing
+                    if not (r["arch"] == rec["arch"]
+                            and r["shape"] == rec["shape"]
+                            and r.get("mesh") == rec.get("mesh"))]
+            with open(args.out, "w") as f:
+                json.dump(keep + [rec], f, indent=1)
+    bad = [r for r in results if r["status"] == "error"]
+    print(f"\n{len(results) - len(bad)}/{len(results)} combos OK")
+    sys.exit(1 if bad else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,408 @@
+"""HLO cost analysis with while-loop trip-count accounting.
+
+``compiled.cost_analysis()`` visits every while body ONCE (verified in this
+container: a 5-iteration and a 10-iteration scan of the same matmul report
+identical FLOPs).  Our models are scan-heavy (layer scan, microbatch
+accumulation, flash-attention tiles), and the FSDP weight all-gathers live
+*inside* the layer scan — so both FLOPs and collective bytes would be
+undercounted by 1-3 orders of magnitude.  This module parses the optimized
+HLO text, extracts loop trip counts from the loop-condition comparison
+against a constant, and multiplies costs through nested loops/fusions/calls.
+
+Cost model (per device, since SPMD modules are per-device):
+  * FLOPs:   2 * prod(result dims) * contraction_size for every dot;
+  * bytes:   operand + result bytes of every *top-level* (post-fusion) op —
+             i.e. each fusion reads its inputs and writes its outputs once,
+             the standard post-fusion HBM-traffic approximation;
+  * collectives: result bytes per op, bucketed by collective kind.
+All three multiplied by enclosing loop trip counts.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1}
+_SHAPE_RE = re.compile(
+    r"(f64|f32|bf16|f16|s64|u64|s32|u32|s16|u16|s8|u8|pred|f8e4m3fn|f8e5m2"
+    r"|s4|u4)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> Optional[Tuple[str, List[int]]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+    return m.group(1), dims
+
+
+class Computation:
+    def __init__(self, name: str):
+        self.name = name
+        self.lines: List[str] = []
+        self.shapes: Dict[str, str] = {}     # %op -> result type string
+
+
+def parse_computations(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    header = re.compile(r"^(?:ENTRY\s+)?(%?[\w.\-]+)\s*(?:\(.*\))?\s*->.*{\s*$")
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        if cur is None:
+            m = header.match(s)
+            if m and "{" in s:
+                cur = Computation(m.group(1).lstrip("%"))
+            continue
+        if s == "}" or s.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        cur.lines.append(s)
+        om = _OP_RE.match(s)
+        if om:
+            cur.shapes[om.group(1)] = om.group(2)
+    return comps
+
+
+def _attr(line: str, key: str) -> Optional[str]:
+    m = re.search(key + r"=([\w.\-%]+)", line)
+    return m.group(1) if m else None
+
+
+def _attr_list(line: str, key: str) -> Optional[List[int]]:
+    m = re.search(key + r"=\{([0-9,]*)\}", line)
+    if not m:
+        return None
+    return [int(x) for x in m.group(1).split(",")] if m.group(1) else []
+
+
+def _operands(rest_of_line: str) -> List[str]:
+    """Operand names from the text after the opening paren."""
+    depth = 1
+    out = []
+    buf = []
+    for ch in rest_of_line:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        buf.append(ch)
+    args = "".join(buf)
+    for m in re.finditer(r"%[\w.\-]+", args):
+        out.append(m.group(0))
+    return out
+
+
+def _trip_count(cond: Computation,
+                comps: Dict[str, "Computation"]) -> int:
+    """Extract the loop bound from the condition's comparison against a
+    constant.  The compare may be direct or wrapped in a kLoop fusion
+    (``ROOT %c = pred[] fusion(%iv, %const), calls=%wrapped_compare``)."""
+    consts: Dict[str, int] = {}
+    for line in cond.lines:
+        m = re.match(r"(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*s\d+\[\]\s*"
+                     r"constant\((-?\d+)\)", line)
+        if m:
+            consts[m.group(1)] = int(m.group(2))
+
+    def _direction_of(comp: Computation) -> Optional[str]:
+        for ln in comp.lines:
+            if " compare(" in ln:
+                return _attr(ln, "direction")
+        return None
+
+    for line in cond.lines:
+        direction = None
+        ops: List[str] = []
+        if " compare(" in line:
+            direction = _attr(line, "direction")
+            ops = _operands(line.split("compare(", 1)[1])
+        elif " fusion(" in line:
+            callee = _attr(line, "calls")
+            if callee and callee.lstrip("%") in comps:
+                direction = _direction_of(comps[callee.lstrip("%")])
+                if direction:
+                    ops = _operands(line.split("fusion(", 1)[1])
+        if not direction:
+            continue
+        vals = [consts.get(o) for o in ops]
+        bound = next((v for v in vals if v is not None), None)
+        if bound is None:
+            continue
+        if direction in ("LT", "GT"):
+            return max(bound, 1)
+        if direction in ("LE", "GE"):
+            return max(bound + 1, 1)
+    return 1
+
+
+class HLOCost:
+    def __init__(self, hlo: str):
+        self.comps = parse_computations(hlo)
+        self._memo: Dict[str, Dict[str, float]] = {}
+        self._sliced_params: Dict[str, Dict[int, int]] = {}
+        self._inplace_roots: Dict[str, int] = {}
+        self.unknown_trip_counts = 0
+
+    def _dus_update_bytes(self, comp_name: str) -> int:
+        """Total update-operand bytes of dynamic-update-slice ops in a
+        fused computation (0 if none)."""
+        comp_name = comp_name.lstrip("%")
+        comp = self.comps.get(comp_name)
+        if comp is None:
+            return 0
+        total = 0
+        for line in comp.lines:
+            om = _OP_RE.match(line)
+            if not om or not om.group(3).startswith("dynamic-update-slice"):
+                continue
+            ops = _operands(om.group(4))
+            if len(ops) > 1:
+                total += _type_bytes(comp.shapes.get(ops[1], ""))
+        return total
+
+    def _param_slice_sizes(self, comp_name: str) -> Dict[int, int]:
+        """For a fused computation: parameters consumed exclusively through
+        dynamic-slice read only the slice from HBM, not the full operand —
+        critical for scan-over-layers bodies, where every iteration touches
+        a [1, ...] slice of the [L, ...] stacked weights.  Parameters used
+        only as the *buffer* of a dynamic-update-slice are in-place (the
+        donated KV-cache write): charge the update size, not the buffer.
+        Returns {param_index: bytes actually read}."""
+        comp_name = comp_name.lstrip("%")
+        if comp_name in self._sliced_params:
+            return self._sliced_params[comp_name]
+        out: Dict[int, int] = {}
+        comp = self.comps.get(comp_name)
+        if comp is not None:
+            pname_to_idx: Dict[str, int] = {}
+            for line in comp.lines:
+                m = re.match(r"(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*.*?"
+                             r"parameter\((\d+)\)", line)
+                if m:
+                    pname_to_idx[m.group(1)] = int(m.group(2))
+            uses: Dict[str, List[Tuple[str, int, int, List[str]]]] = \
+                {p: [] for p in pname_to_idx}
+            for line in comp.lines:
+                om = _OP_RE.match(line)
+                if not om:
+                    continue
+                _, rtype, opcode, rest = om.groups()
+                ops = _operands(rest)
+                for pos, o in enumerate(ops):
+                    if o in uses:
+                        uses[o].append((opcode, _type_bytes(rtype), pos, ops))
+            for pname, ulist in uses.items():
+                if not ulist:
+                    continue
+                if all(op.startswith("dynamic-slice")
+                       and not op.startswith("dynamic-update")
+                       for op, _, _, _ in ulist):
+                    out[pname_to_idx[pname]] = sum(b for _, b, _, _ in ulist)
+                elif all(op.startswith("dynamic-update-slice") and pos == 0
+                         for op, _, pos, _ in ulist):
+                    # in-place buffer: read only the updated region
+                    upd = 0
+                    for op, _, _, ops in ulist:
+                        if len(ops) > 1:
+                            upd += _type_bytes(
+                                comp.shapes.get(ops[1], "")) or 0
+                    out[pname_to_idx[pname]] = upd
+                    self._inplace_roots.setdefault(comp_name, 0)
+                    self._inplace_roots[comp_name] += upd
+        self._sliced_params[comp_name] = out
+        return out
+
+    def _zero(self) -> Dict[str, float]:
+        d = {"flops": 0.0, "bytes": 0.0, "collective_bytes": 0.0}
+        for k in _COLL_KINDS:
+            d[k] = 0.0
+        return d
+
+    def cost(self, comp_name: str) -> Dict[str, float]:
+        comp_name = comp_name.lstrip("%")
+        if comp_name in self._memo:
+            return self._memo[comp_name]
+        comp = self.comps.get(comp_name)
+        total = self._zero()
+        if comp is None:
+            self._memo[comp_name] = total
+            return total
+        self._memo[comp_name] = total  # break cycles
+        for line in comp.lines:
+            om = _OP_RE.match(line)
+            if not om:
+                continue
+            name, rtype, opcode, rest = om.groups()
+            base = opcode.rstrip("0123456789.").rstrip("-")
+            rbytes = _type_bytes(rtype)
+            # ---- nested control flow / fusions -------------------------
+            if opcode == "while":
+                body = _attr(line, "body")
+                cond = _attr(line, "condition")
+                trips = 1
+                if cond and cond.lstrip("%") in self.comps:
+                    trips = _trip_count(self.comps[cond.lstrip("%")],
+                                        self.comps)
+                    if trips == 1:
+                        self.unknown_trip_counts += 1
+                sub = self.cost(body) if body else self._zero()
+                for k in total:
+                    total[k] += sub[k] * trips
+                continue
+            if opcode in ("fusion", "call", "async-start"):
+                callee = _attr(line, "calls") or _attr(line, "to")
+                sliced: Dict[int, int] = {}
+                wbytes = rbytes
+                inplace_param: Optional[int] = None
+                if callee:
+                    sub = self.cost(callee)
+                    for k in total:
+                        if k == "bytes" and opcode == "fusion":
+                            # fusion internals are VMEM/register traffic;
+                            # only boundary bytes touch HBM
+                            continue
+                        total[k] += sub[k]
+                    sliced = self._param_slice_sizes(callee)
+                    # in-place update heuristic: fusion result has the same
+                    # shape as one of its operands AND the callee contains a
+                    # dynamic-update-slice -> the buffer aliases the output
+                    # (donated KV-cache / stash writes); traffic = update.
+                    upd_bytes = self._dus_update_bytes(callee)
+                    if upd_bytes:
+                        rsd = _shape_dims(rtype)
+                        for i, o in enumerate(_operands(rest)):
+                            osd = _shape_dims(comp.shapes.get(o, ""))
+                            # element-count match (dtype may differ through
+                            # CPU bf16<->f32 legalization converts)
+                            if rsd and osd and rsd[1] == osd[1]:
+                                inplace_param = i
+                                wbytes = min(rbytes, 2 * upd_bytes)
+                                break
+                    # in-place stash/cache writes: a fusion doing
+                    # dynamic-update-slice on a param buffer writes only
+                    # the update region (the buffer aliases the output)
+                    cn = callee.lstrip("%")
+                    if cn in self._inplace_roots:
+                        wbytes = min(rbytes,
+                                     max(self._inplace_roots[cn], 1))
+                    else:
+                        ccomp = self.comps.get(cn)
+                        if ccomp is not None:
+                            for ln in ccomp.lines:
+                                if ln.startswith("ROOT") and \
+                                        "dynamic-update-slice(" in ln:
+                                    om2 = _OP_RE.match(ln)
+                                    if om2:
+                                        ops2 = _operands(om2.group(4))
+                                        if len(ops2) > 1:
+                                            wbytes = _type_bytes(
+                                                ccomp.shapes.get(ops2[1], "")) \
+                                                or rbytes
+                                    break
+                # fusion boundary traffic: result + operands, where operands
+                # consumed only via dynamic-slice count at slice size and
+                # the in-place buffer operand is free (aliased)
+                opb = 0
+                for i, o in enumerate(_operands(rest)):
+                    if i == inplace_param:
+                        continue
+                    if i in sliced:
+                        opb += sliced[i]
+                    else:
+                        opb += _type_bytes(comp.shapes.get(o, ""))
+                total["bytes"] += wbytes + opb
+                continue
+            if opcode.startswith("dynamic-update-slice"):
+                ops = _operands(rest)
+                upd = (_type_bytes(comp.shapes.get(ops[1], ""))
+                       if len(ops) > 1 else rbytes)
+                total["bytes"] += 2 * upd          # read update + write region
+                continue
+            if opcode.startswith("dynamic-slice") or opcode == "gather":
+                total["bytes"] += 2 * rbytes       # read slice + write result
+                continue
+            if opcode == "conditional":
+                for key in ("true_computation", "false_computation",
+                            "branch_computations"):
+                    callee = _attr(line, key)
+                    if callee:
+                        sub = self.cost(callee)
+                        for k in total:
+                            total[k] += sub[k]
+                continue
+            # ---- collectives --------------------------------------------
+            matched_coll = None
+            for ck in _COLL_KINDS:
+                if base == ck or base == ck + "-start":
+                    matched_coll = ck
+                    break
+            if matched_coll:
+                total[matched_coll] += rbytes
+                total["collective_bytes"] += rbytes
+                total["bytes"] += rbytes
+                continue
+            # ---- dots -----------------------------------------------------
+            if opcode.startswith("dot"):
+                ops = _operands(rest)
+                lhs_type = comp.shapes.get(ops[0], "") if ops else ""
+                cdims = _attr_list(line, "lhs_contracting_dims") or []
+                sd = _shape_dims(lhs_type)
+                contraction = 1
+                if sd:
+                    for ci in cdims:
+                        if ci < len(sd[1]):
+                            contraction *= sd[1][ci]
+                rshape = _shape_dims(rtype)
+                relems = 1
+                if rshape:
+                    for d in rshape[1]:
+                        relems *= d
+                total["flops"] += 2.0 * relems * contraction
+                opb = sum(_type_bytes(comp.shapes.get(o, "")) for o in ops)
+                total["bytes"] += rbytes + opb
+                continue
+            # ---- everything else: boundary traffic only -------------------
+            if opcode in ("parameter", "constant", "tuple",
+                          "get-tuple-element", "bitcast"):
+                continue
+            opb = sum(_type_bytes(comp.shapes.get(o, ""))
+                      for o in _operands(rest))
+            total["bytes"] += rbytes + opb
+        self._memo[comp_name] = total
+        return total
+
+    def entry_cost(self) -> Dict[str, float]:
+        entry = None
+        for name in self.comps:
+            if name.startswith("main") or ".main" in name or entry is None:
+                if "main" in name:
+                    entry = name
+        if entry is None:
+            entry = max(self.comps, key=lambda n: len(self.comps[n].lines))
+        return self.cost(entry)
+
+
+def analyze(hlo_text: str) -> Dict[str, float]:
+    return HLOCost(hlo_text).entry_cost()

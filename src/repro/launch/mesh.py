@@ -1,0 +1,45 @@
+"""Production mesh factory.
+
+Defined as a FUNCTION (never a module-level constant) so importing this
+module never touches jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import, and smoke tests / benches must keep seeing the single real device.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """Single pod: 16x16 = 256 chips (data, model).
+    Multi-pod: 2x16x16 = 512 chips (pod, data, model)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    try:
+        return jax.make_mesh(shape, axes)
+    except ValueError:
+        # jax.make_mesh requires len(devices) == prod(shape); when running
+        # single-pod under the 512-device dry-run flag, take a prefix.
+        n = int(np.prod(shape))
+        devs = np.asarray(jax.devices()[:n]).reshape(shape)
+        return Mesh(devs, axes)
+
+
+def make_mesh_from_shape(shape: Tuple[int, ...],
+                         axes: Tuple[str, ...]) -> Mesh:
+    """Arbitrary mesh for tests (e.g. (1, 1) on the CPU container)."""
+    try:
+        return jax.make_mesh(shape, axes)
+    except ValueError:
+        n = int(np.prod(shape))
+        devs = np.asarray(jax.devices()[:n]).reshape(shape)
+        return Mesh(devs, axes)
+
+
+def single_device_mesh(axes: Tuple[str, ...] = ("data", "model")) -> Mesh:
+    return make_mesh_from_shape((1,) * len(axes), axes)

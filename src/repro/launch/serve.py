@@ -1,0 +1,70 @@
+"""Serving launcher.
+
+Two modes:
+
+* ``--demo``       — run the real CPU serving engine on a reduced pair of
+                     the chosen architecture (what this container can do).
+* default          — lower + compile the production serve step for the
+                     chosen arch/shape/mesh and report the plan (what a
+                     TPU deployment would load; shares all code with
+                     ``dryrun.py``).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-32b --shape decode_32k
+  PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --demo
+"""
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="decode_32k",
+                    choices=["prefill_32k", "decode_32k", "long_500k"])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--demo", action="store_true",
+                    help="run the CPU serving demo on the reduced config")
+    ap.add_argument("--policy", default="dsde",
+                    choices=["dsde", "static", "adaedl", "autoregressive"])
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=32)
+    args = ap.parse_args()
+
+    if args.demo:
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+        from repro.configs import get_config
+        from repro.core.config import ServingConfig, SpecDecodeConfig
+        from repro.models.module import init_params
+        from repro.models.transformer import model_specs
+        from repro.serving.engine import ServingEngine
+        from repro.serving.request import Request
+
+        cfg = get_config(args.arch).reduced()
+        pt = init_params(model_specs(cfg), jax.random.PRNGKey(1),
+                         jnp.float32)
+        noise = init_params(model_specs(cfg), jax.random.PRNGKey(7),
+                            jnp.float32)
+        pd = jax.tree_util.tree_map(lambda a, b: a + 0.03 * b, pt, noise)
+        eng = ServingEngine(pt, cfg, pd, cfg,
+                            SpecDecodeConfig(policy=args.policy),
+                            ServingConfig(max_batch_size=4, max_seq_len=256))
+        rng = np.random.RandomState(0)
+        reqs = [Request(i, prompt=rng.randint(
+            0, cfg.vocab_size, size=rng.randint(6, 20)).tolist(),
+            max_new_tokens=args.max_new) for i in range(args.requests)]
+        m = eng.run(reqs)
+        print({k: round(v, 3) if isinstance(v, float) else v
+               for k, v in m.items()})
+        return
+
+    # production path: delegate to the dry-run machinery (same step fns)
+    from repro.launch.dryrun import dryrun_one
+    rec = dryrun_one(args.arch, args.shape, args.multi_pod)
+    sys.exit(0 if rec["status"] in ("ok", "skipped") else 1)
+
+
+if __name__ == "__main__":
+    main()

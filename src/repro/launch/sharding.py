@@ -1,0 +1,154 @@
+"""Per-(workload x mesh) sharding rules — MaxText-style logical axes.
+
+The baseline layouts (DESIGN.md §5):
+
+* train    — FSDP: ``embed`` over *data*, ``mlp/heads/vocab`` over *model*,
+             batch over (pod, data), sequence-parallel residual stream
+             (seq over *model* between blocks) to bound remat stashes.
+* prefill  — serving TP: weights over *model* only (replicated over data),
+             batch over (pod, data).
+* decode   — serving TP; KV cache batch-sharded over (pod, data); KV heads
+             over *model* (GSPMD uneven sharding reproduces vLLM's KV-head
+             replication when kv_heads < 16).
+* long decode (batch=1) — batch unshardable; state/ring caches replicated
+  over data; heads over model.  (Sequence-parallel cache is a hillclimb
+  variant, see EXPERIMENTS.md §Perf.)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.config import InputShape, ModelConfig, ShardingConfig
+from repro.models import cache as cache_lib
+from repro.models.module import param_shardings
+from repro.models.transformer import model_specs
+
+PyTree = Any
+
+
+def _batch_axes(mesh: Mesh, global_batch: int) -> Tuple[str, ...]:
+    """Largest prefix of (pod, data) whose product divides the batch."""
+    axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    chosen: list = []
+    prod = 1
+    for a in axes:
+        if global_batch % (prod * sizes[a]) == 0:
+            chosen.append(a)
+            prod *= sizes[a]
+    return tuple(chosen)
+
+
+def make_rules(mesh: Mesh, shape: InputShape, *,
+               expert_parallel: bool = False,
+               cache_seq_axis: Optional[str] = "model") -> ShardingConfig:
+    train = shape.kind == "train"
+    return ShardingConfig(
+        batch=_batch_axes(mesh, shape.global_batch),
+        heads="model",
+        mlp="model",
+        vocab="model",
+        embed="data" if train and "data" in mesh.axis_names else None,
+        # KV caches are sequence-sharded: kv_heads rarely divide the model
+        # axis, and the cache dominates decode/prefill memory (DESIGN.md §5)
+        cache_seq=cache_seq_axis if shape.kind in ("decode", "prefill")
+        else None,
+        experts="model" if expert_parallel else None,
+        seq="model" if train else None,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Cache shardings
+# ---------------------------------------------------------------------------
+
+_CACHE_AXES = {
+    # leaf name -> logical axes per dim
+    "length": ("batch",),
+    "kv_pos": ("batch", "cache_seq"),
+    "k": ("layers", "batch", "cache_seq", "kv_heads", "head_dim"),
+    "v": ("layers", "batch", "cache_seq", "kv_heads", "head_dim"),
+    "cross_k": ("layers", "batch", "cache_seq", "kv_heads", "head_dim"),
+    "cross_v": ("layers", "batch", "cache_seq", "kv_heads", "head_dim"),
+    "enc_valid": ("batch", "cache_seq"),
+    "ssd": ("layers", "batch", "heads", "head_dim", "state"),
+    "conv": ("layers", "batch", "conv", "mlp"),
+    "lru": ("layers", "batch", "mlp"),
+}
+
+
+def cache_shardings(cache_tree: PyTree, mesh: Mesh,
+                    rules: ShardingConfig) -> PyTree:
+    from repro.models.module import logical_to_pspec
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def one(name: str, leaf) -> NamedSharding:
+        axes = _CACHE_AXES[name]
+        pspec = logical_to_pspec(axes, rules)
+        parts = list(tuple(pspec) + (None,) * (len(leaf.shape) - len(pspec)))
+        fixed = []
+        used: set = set()
+        for dim, part in zip(leaf.shape, parts):
+            if part is None:
+                fixed.append(None)
+                continue
+            names = part if isinstance(part, tuple) else (part,)
+            size = 1
+            for nm in names:
+                size *= axis_sizes[nm]
+            # each mesh axis may appear at most once per spec (e.g. MHA
+            # caches where kv_heads and cache_seq both map to 'model')
+            if dim % size != 0 or any(nm in used for nm in names):
+                fixed.append(None)
+                continue
+            used.update(names)
+            fixed.append(part)
+        while fixed and fixed[-1] is None:
+            fixed.pop()
+        return NamedSharding(mesh, P(*fixed))
+
+    return {k: one(k, v) for k, v in cache_tree.items()}
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def batch_sharding(mesh: Mesh, rules: ShardingConfig,
+                   ndim: int) -> NamedSharding:
+    spec = [tuple(rules.batch) if rules.batch else None] + [None] * (ndim - 1)
+    return NamedSharding(mesh, P(*spec))
+
+
+def activation_sharding(mesh: Mesh, rules: ShardingConfig) -> Optional[NamedSharding]:
+    """[B, S, d] residual-stream constraint used in train mode."""
+    if rules.seq is None:
+        return None
+    return NamedSharding(
+        mesh, P(tuple(rules.batch) if rules.batch else None, rules.seq, None))
+
+
+def attn_head_sharding(mesh: Mesh, rules: ShardingConfig):
+    """([B, T, H, D] NamedSharding, head-axis size) for the TP constraint
+    pinned on q/k/v inside the attention sublayer."""
+    if rules.heads is None:
+        return None
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return (NamedSharding(
+        mesh, P(tuple(rules.batch) if rules.batch else None, None,
+                rules.heads, None)), sizes[rules.heads])
+
+
+def moe_shardings(mesh: Mesh, rules: ShardingConfig):
+    """Dispatch-buffer constraints for moe_apply: capacity dim over the
+    batch axes, token dim likewise."""
+    b = tuple(rules.batch) if rules.batch else None
+    if b is None:
+        return None
+    return {"cap": NamedSharding(mesh, P(None, b, None)),
+            "tok": NamedSharding(mesh, P(b, None))}

@@ -1,0 +1,241 @@
+"""Step functions + ShapeDtypeStruct input specs for every
+(architecture x input-shape) combination — consumed by the dry-run and by
+the real launchers.
+
+``input_specs(cfg, shape, mesh, rules)`` returns
+``(step_fn, args, donate_argnums)`` where every arg is a weak-type-correct
+``ShapeDtypeStruct`` carrying its ``NamedSharding`` — lowering allocates
+nothing.
+
+Modality carve-out (assignment): [vlm]/[audio] frontends are stubs —
+prefill/train inputs are precomputed patch/frame embeddings of the right
+shape, the transformer backbone is real.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.config import (InputShape, ModelConfig, OptimizerConfig,
+                               ShardingConfig)
+from repro.models import cache as cache_lib
+from repro.models.module import abstract_params, param_shardings
+from repro.models.transformer import forward, model_specs
+from repro.launch.sharding import (activation_sharding, attn_head_sharding,
+                                   batch_sharding, cache_shardings,
+                                   moe_shardings, replicated)
+from repro.training.optimizer import AdamWState
+from repro.training.train import train_step
+
+PyTree = Any
+
+VOCAB_PAD = 2048        # 16 model shards x 128 lanes
+LONG_CONTEXT_WINDOW = 4096   # sliding-window variant for dense long_500k
+
+
+def adapt_config(cfg: ModelConfig, shape: InputShape,
+                 opts: frozenset = frozenset()) -> ModelConfig:
+    """Shape-dependent config adaptation (DESIGN.md §4):
+    dense/moe/vlm archs get a sliding-window attention variant for
+    long_500k (beyond-paper extension making the shape tractable).
+    ``opts`` selects §Perf hillclimb variants (e.g. "kv_pad")."""
+    if (shape.name == "long_500k" and cfg.attention_window is None
+            and cfg.family in ("dense", "moe", "vlm")):
+        cfg = dataclasses.replace(cfg, attention_window=LONG_CONTEXT_WINDOW)
+    if "head_pad" in opts and cfg.family != "ssm":
+        h = cfg.num_heads
+        if h % 16:
+            cfg = dataclasses.replace(cfg, q_head_pad=-(-h // 16) * 16)
+    if "kv_pad" in opts and cfg.family != "ssm":
+        kv = cfg.num_kv_heads
+        h = cfg.q_head_pad or cfg.num_heads
+        if kv < 16 and 16 % kv == 0 and h % 16 == 0:
+            cfg = dataclasses.replace(cfg, kv_head_pad=16)
+    return cfg
+
+
+def supported(cfg: ModelConfig, shape: InputShape) -> Tuple[bool, str]:
+    if shape.name == "long_500k" and cfg.family == "audio":
+        return False, ("enc-dec translation decoder: 524k-token decode is "
+                       "out of distribution and the 500k encoder side is "
+                       "excluded by the frontend-stub carve-out "
+                       "(DESIGN.md §4)")
+    return True, ""
+
+
+def _sds(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def _enc_len(shape: InputShape) -> int:
+    # audio: encoder frames = seq/4 (typical 4x conv downsampling)
+    return max(shape.seq_len // 4, 8)
+
+
+def make_step_and_specs(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
+                        rules: ShardingConfig, *,
+                        param_dtype=jnp.bfloat16,
+                        opt_cfg: Optional[OptimizerConfig] = None,
+                        opts: frozenset = frozenset()
+                        ) -> Tuple[Callable, tuple, tuple]:
+    """Returns (step_fn, abstract_args, donate_argnums)."""
+    cfg = adapt_config(cfg, shape, opts)
+    specs = model_specs(cfg, VOCAB_PAD)
+    pshard = param_shardings(specs, mesh, rules)
+    params = abstract_params(specs, param_dtype, pshard)
+    bsh = batch_sharding(mesh, rules, 2)
+    b, s = shape.global_batch, shape.seq_len
+
+    if shape.kind == "train":
+        opt_cfg = opt_cfg or OptimizerConfig()
+        mu = abstract_params(specs, jnp.float32, pshard)
+        opt = AdamWState(step=_sds((), jnp.int32, replicated(mesh)),
+                         mu=mu, nu=mu)
+        act_sh = activation_sharding(mesh, rules)
+        attn_sh = attn_head_sharding(mesh, rules)
+        tokens = _sds((b, s), jnp.int32, bsh)
+        labels = _sds((b, s), jnp.int32, bsh)
+        # gradient accumulation: target ~2 sequences per chip per microbatch
+        n_batch_shards = 1
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        for a in rules.batch:
+            n_batch_shards *= sizes[a]
+        per_chip = b // n_batch_shards
+        mb = max(1, min(8, per_chip // 2))
+        # §Perf knob: fewer microbatches => fewer FSDP weight re-gathers
+        # (collective term) at the cost of larger activation stashes
+        for o in opts:
+            if o.startswith("mb"):
+                mb = max(1, min(int(o[2:]), per_chip))
+
+        def mb_sharding(ndim):
+            spec = [None, tuple(rules.batch) if rules.batch else None]
+            spec += [None] * (ndim - 2)
+            return NamedSharding(mesh, P(*spec))
+
+        if cfg.family == "audio":
+            el = _enc_len(shape)
+            emb_sh = batch_sharding(mesh, rules, 3)
+            enc = _sds((b, el, cfg.d_model), param_dtype, emb_sh)
+
+            def step(p, o, t, l, e):
+                return train_step(p, o, t, l, cfg=cfg, opt_cfg=opt_cfg,
+                                  remat=True, encoder_embeds=e,
+                                  act_sharding=act_sh, attn_sharding=attn_sh,
+                                  microbatches=mb,
+                                  microbatch_sharding=mb_sharding)
+            return step, (params, opt, tokens, labels, enc), (0, 1)
+
+        def step(p, o, t, l):
+            return train_step(p, o, t, l, cfg=cfg, opt_cfg=opt_cfg,
+                              remat=True, act_sharding=act_sh,
+                              attn_sharding=attn_sh, microbatches=mb,
+                              microbatch_sharding=mb_sharding)
+        return step, (params, opt, tokens, labels), (0, 1)
+
+    # prefill caches reserve lookahead slots (SL_max + bonus); keep the ring
+    # length divisible by the mesh axes so cache_seq sharding applies
+    max_len = s if shape.kind == "decode" else s + 16
+    enc_len = _enc_len(shape) if cfg.family == "audio" else None
+    cache_t = cache_lib.cache_struct(cfg, b, max_len, param_dtype,
+                                     enc_len=enc_len, abstract=True)
+    csh = cache_shardings(cache_t, mesh, rules)
+    cache = {k: _sds(v.shape, v.dtype, csh[k]) for k, v in cache_t.items()}
+
+    if shape.kind == "prefill":
+        if cfg.family in ("vlm", "audio"):
+            emb_sh = batch_sharding(mesh, rules, 3)
+        if cfg.family == "audio":
+            # encoder frames + decoder prompt prefill
+            enc = _sds((b, enc_len, cfg.d_model), param_dtype, emb_sh)
+            toks = _sds((b, s), jnp.int32, bsh)
+
+            def step(p, c, e, t):
+                from repro.models.transformer import (build_cross_cache,
+                                                      encode)
+                enc_out = encode(p, cfg, e)
+                ck, cv = build_cross_cache(p, cfg, enc_out)
+                c = dict(c)
+                c["cross_k"], c["cross_v"] = ck, cv
+                c["enc_valid"] = jnp.ones(e.shape[:2], bool)
+                logits, c, _ = forward(p, cfg, t, cache=c, mode="prefill")
+                c["length"] = jnp.full((t.shape[0],), t.shape[1], jnp.int32)
+                return logits[:, -1], c
+            return step, (params, cache, enc, toks), (1,)
+
+        if cfg.family == "vlm":
+            emb = _sds((b, s, cfg.d_model), param_dtype, emb_sh)
+
+            def step(p, c, e):
+                logits, c, _ = forward(p, cfg, None, embeds=e, cache=c,
+                                       mode="prefill")
+                c["length"] = jnp.full((e.shape[0],), e.shape[1], jnp.int32)
+                return logits[:, -1], c
+            return step, (params, cache, emb), (1,)
+
+        toks = _sds((b, s), jnp.int32, bsh)
+        moe_sh = moe_shardings(mesh, rules) if cfg.moe is not None else None
+
+        def step(p, c, t):
+            logits, c, _ = forward(p, cfg, t, cache=c, mode="prefill",
+                                   moe_sharding=moe_sh)
+            c["length"] = jnp.full((t.shape[0],), t.shape[1], jnp.int32)
+            return logits[:, -1], c
+        return step, (params, cache, toks), (1,)
+
+    # ---- decode: serve_step — ONE new token against a seq_len cache -------
+    # (--opt verify lowers the paper's ragged verification step instead:
+    #  T = SL_max+1 = 11 tokens per sequence in one pass)
+    t_len = 11 if "verify" in opts else 1
+    toks = _sds((b, t_len), jnp.int32, bsh)
+
+    def step(p, c, t):
+        logits, c, _ = forward(p, cfg, t, cache=c, mode="decode")
+        c["length"] = c["length"] + 1
+        return logits[:, -1], c
+    return step, (params, cache, toks), (1,)
+
+
+def model_flops(cfg: ModelConfig, shape: InputShape) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE) — §Roofline."""
+    from repro.models.module import count_params
+    cfg = adapt_config(cfg, shape)
+    specs = model_specs(cfg, VOCAB_PAD)
+    n_total = count_params(specs)
+    if cfg.moe is not None:
+        e, k = cfg.moe.num_experts, cfg.moe.top_k
+        # expert params scale by k/e when active
+        expert_params = (3 * cfg.d_model * cfg.moe.expert_d_ff
+                         * e * cfg.num_layers)
+        n_active = n_total - expert_params + expert_params * k / e
+    else:
+        n_active = n_total
+    tokens = (shape.global_batch * shape.seq_len
+              if shape.kind != "decode" else shape.global_batch * 1)
+    # forward ~ 2N FLOPs/token; train (fwd + bwd) ~ 6N FLOPs/token
+    per_token = 6.0 * n_active if shape.kind == "train" else 2.0 * n_active
+    # attention score/PV FLOPs (not captured by 2N*D): 4 * h*hd * ctx per
+    # token per attention layer; ctx = S/2 causal average (train/prefill)
+    # or the full cache (decode); windowed attention caps ctx.
+    if cfg.family != "ssm":
+        h_hd = cfg.num_heads * cfg.resolved_head_dim
+        n_attn_layers = cfg.num_layers
+        if cfg.family == "hybrid":
+            n_attn_layers = cfg.num_layers // (
+                cfg.rglru.blocks_per_attention + 1)
+        ctx = (shape.seq_len if shape.kind == "decode"
+               else shape.seq_len / 2)
+        if cfg.attention_window is not None:
+            ctx = min(ctx, cfg.attention_window)
+        elif cfg.family == "hybrid":
+            ctx = min(ctx, cfg.rglru.local_attention_window)
+        attn = 4.0 * h_hd * ctx * n_attn_layers
+        if shape.kind == "train":
+            attn *= 3
+        per_token = per_token + attn
+    return per_token * tokens

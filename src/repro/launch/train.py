@@ -1,0 +1,52 @@
+"""Training launcher.
+
+* ``--demo``  — really train the reduced config on CPU for ``--steps``
+                steps on the synthetic LM corpus (checkpointing included).
+* default     — lower + compile the production train_4k step for the
+                chosen arch on the production mesh (shares dryrun code).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-135m --demo --steps 100
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-32b [--multi-pod]
+"""
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--demo", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    args = ap.parse_args()
+
+    if args.demo:
+        from repro.configs import get_config
+        from repro.core.config import OptimizerConfig, TrainConfig
+        from repro.training.checkpoint import save_checkpoint
+        from repro.training.data import MarkovTaskCorpus, lm_batches
+        from repro.training.train import train_loop
+
+        cfg = get_config(args.arch).reduced()
+        corpus = MarkovTaskCorpus(cfg.vocab_size, peakedness=2.0)
+        stream = corpus.stream(200000)
+        tc = TrainConfig(
+            global_batch_size=16, seq_len=64,
+            optimizer=OptimizerConfig(learning_rate=3e-3, warmup_steps=20,
+                                      total_steps=args.steps, grad_clip=5.0),
+            checkpoint_dir=args.ckpt_dir)
+        params, m = train_loop(cfg, tc, lm_batches(stream, 16, 64),
+                               num_steps=args.steps)
+        f = save_checkpoint(args.ckpt_dir, args.steps, params)
+        print(f"final: {m}  checkpoint: {f}")
+        return
+
+    from repro.launch.dryrun import dryrun_one
+    rec = dryrun_one(args.arch, "train_4k", args.multi_pod)
+    sys.exit(0 if rec["status"] in ("ok", "skipped") else 1)
+
+
+if __name__ == "__main__":
+    main()

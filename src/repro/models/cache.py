@@ -1,0 +1,153 @@
+"""Decode-time caches: ring-buffer KV + recurrent state.
+
+One cache pytree per model instance.  Common fields:
+
+* ``length [B]``   — number of tokens whose KV/state is *committed*.
+* ``kv_pos [B, W]`` — absolute sequence index stored in each ring slot
+  (-1 = never written).  Validity of a slot for a query at position ``q`` is
+  ``0 <= kv_pos <= q`` (and ``q - kv_pos < window`` for windowed layers).
+  Rollback after speculative verification is therefore *free* for KV layers:
+  resetting ``length`` masks the stale slots (see DESIGN.md §4).
+
+The ring buffer (slot = pos % W) makes windowed caches O(window) instead of
+O(seq): ``long_500k`` decode for SWA/hybrid archs holds a 2–4k ring, not a
+524k buffer.  Correctness requires window >> SL_max so one speculation
+round can never wrap past its own rollback horizon (asserted at build).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import ModelConfig
+from repro.models.ssm import ssm_dims
+
+CacheT = Dict[str, Any]
+
+
+# extra ring slots beyond the attention window: a T-token decode/verify
+# call writes T new entries before the first query reads — without slack it
+# would overwrite the oldest still-in-window keys (SL_max+1 = 11 < 16)
+RING_SLACK = 16
+
+
+def _kv_window(cfg: ModelConfig, max_len: int) -> int:
+    if cfg.attention_window is not None:
+        return min(max_len, cfg.attention_window + RING_SLACK)
+    return max_len
+
+
+def _local_window(cfg: ModelConfig, max_len: int) -> int:
+    return min(max_len, cfg.rglru.local_attention_window + RING_SLACK)
+
+
+def eff_kv_heads(cfg: ModelConfig) -> int:
+    return cfg.kv_head_pad or cfg.num_kv_heads
+
+
+def kv_buf_shape(cfg: ModelConfig, batch: int, window: int,
+                 layers: int) -> Tuple[int, ...]:
+    return (layers, batch, window, eff_kv_heads(cfg),
+            cfg.resolved_head_dim)
+
+
+def cache_struct(cfg: ModelConfig, batch: int, max_len: int,
+                 dtype=jnp.bfloat16, enc_len: Optional[int] = None,
+                 abstract: bool = False) -> CacheT:
+    """Build the cache pytree (zeros) or its ShapeDtypeStruct skeleton."""
+
+    def mk(shape, dt):
+        if abstract:
+            return jax.ShapeDtypeStruct(shape, dt)
+        return jnp.zeros(shape, dt)
+
+    def mk_pos(shape):
+        if abstract:
+            return jax.ShapeDtypeStruct(shape, jnp.int32)
+        return jnp.full(shape, -1, jnp.int32)
+
+    c: CacheT = {"length": mk((batch,), jnp.int32)}
+    fam = cfg.family
+
+    if fam in ("dense", "moe", "vlm"):
+        w = _kv_window(cfg, max_len)
+        c["k"] = mk(kv_buf_shape(cfg, batch, w, cfg.num_layers), dtype)
+        c["v"] = mk(kv_buf_shape(cfg, batch, w, cfg.num_layers), dtype)
+        c["kv_pos"] = mk_pos((batch, w))
+    elif fam == "ssm":
+        di, h, dc, n = ssm_dims(cfg)
+        p = cfg.ssm.head_dim
+        c["ssd"] = mk((cfg.num_layers, batch, h, p, n), jnp.float32)
+        c["conv"] = mk((cfg.num_layers, batch, cfg.ssm.conv_width - 1, dc), dtype)
+    elif fam == "hybrid":
+        w = _local_window(cfg, max_len)
+        n_attn = sum(1 for i in range(cfg.num_layers)
+                     if hybrid_layer_is_attention(cfg, i))
+        n_rec = cfg.num_layers - n_attn
+        c["k"] = mk(kv_buf_shape(cfg, batch, w, n_attn), dtype)
+        c["v"] = mk(kv_buf_shape(cfg, batch, w, n_attn), dtype)
+        c["kv_pos"] = mk_pos((batch, w))
+        c["lru"] = mk((n_rec, batch, cfg.rglru.lru_width), jnp.float32)
+        c["conv"] = mk((n_rec, batch, cfg.rglru.conv_width - 1,
+                        cfg.rglru.lru_width), dtype)
+    elif fam == "audio":
+        w = max_len
+        c["k"] = mk(kv_buf_shape(cfg, batch, w, cfg.num_layers), dtype)
+        c["v"] = mk(kv_buf_shape(cfg, batch, w, cfg.num_layers), dtype)
+        c["kv_pos"] = mk_pos((batch, w))
+        se = enc_len if enc_len is not None else 1
+        c["cross_k"] = mk(kv_buf_shape(cfg, batch, se, cfg.num_layers), dtype)
+        c["cross_v"] = mk(kv_buf_shape(cfg, batch, se, cfg.num_layers), dtype)
+        c["enc_valid"] = mk((batch, se), jnp.bool_)
+    else:
+        raise ValueError(f"unknown family {fam}")
+    return c
+
+
+def hybrid_layer_is_attention(cfg: ModelConfig, i: int) -> bool:
+    """RecurrentGemma 1:2 pattern — (rec, rec, attn) repeating."""
+    return i % (cfg.rglru.blocks_per_attention + 1) == cfg.rglru.blocks_per_attention
+
+
+def cache_window(cache: CacheT) -> int:
+    return cache["kv_pos"].shape[-1]
+
+
+def write_kv(k_buf: jax.Array, v_buf: jax.Array, k_new: jax.Array,
+             v_new: jax.Array, positions: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Scatter [B,T,...] new KV into the [B,W,...] ring at pos % W."""
+    w = k_buf.shape[1]
+    b = k_buf.shape[0]
+    t = k_new.shape[1]
+    if t >= w:
+        # keep only the last w tokens (prefill longer than the window)
+        k_new, v_new = k_new[:, -w:], v_new[:, -w:]
+        positions = positions[:, -w:]
+        t = w
+    slots = positions % w
+    bi = jnp.arange(b)[:, None]
+    k_buf = k_buf.at[bi, slots].set(k_new.astype(k_buf.dtype))
+    v_buf = v_buf.at[bi, slots].set(v_new.astype(v_buf.dtype))
+    return k_buf, v_buf
+
+
+def write_pos(kv_pos: jax.Array, positions: jax.Array,
+              valid: Optional[jax.Array] = None) -> jax.Array:
+    """Update the shared slot-position map (once per model call)."""
+    w = kv_pos.shape[1]
+    b = kv_pos.shape[0]
+    if positions.shape[1] >= w:
+        positions = positions[:, -w:]
+        valid = valid[:, -w:] if valid is not None else None
+    slots = positions % w
+    bi = jnp.arange(b)[:, None]
+    newpos = positions if valid is None else jnp.where(valid, positions, -1)
+    return kv_pos.at[bi, slots].set(newpos)
+
+
+def commit_length(cache: CacheT, new_length: jax.Array) -> CacheT:
+    out = dict(cache)
+    out["length"] = new_length.astype(jnp.int32)
+    return out

@@ -1,0 +1,146 @@
+"""Minimal pure-JAX parameter system (flax is not available in-container).
+
+A model is described by a pytree of :class:`Spec` leaves.  The same spec tree
+serves three purposes:
+
+* ``init_params``      — materialize real parameters (CPU tests, examples);
+* ``abstract_params``  — ``ShapeDtypeStruct`` stand-ins for the multi-pod
+                         dry-run (no allocation);
+* ``param_shardings``  — ``NamedSharding`` per leaf from the logical axis
+                         names, MaxText-style.
+
+Logical axis vocabulary (see DESIGN.md §5):
+    embed, mlp, heads, kv_heads, head_dim, vocab, experts, layers,
+    conv, state, lru — mapped to mesh axes by :class:`ShardingConfig`.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.config import ShardingConfig
+
+PyTree = Any
+
+
+class Spec(NamedTuple):
+    """Abstract parameter: shape + logical axes + initializer."""
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]     # logical name per dim (None = replicated)
+    init: str = "normal"                # normal | zeros | ones
+    scale: Optional[float] = None       # stddev override for "normal"
+
+    def fan_in_scale(self) -> float:
+        if self.scale is not None:
+            return self.scale
+        # fan-in init: last-but-one dim is usually the input dim; for
+        # matmul kernels shaped (in, out...) use dim 0 product heuristics.
+        fan_in = self.shape[0] if len(self.shape) >= 2 else max(self.shape[0], 1)
+        return 1.0 / math.sqrt(max(fan_in, 1))
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, Spec)
+
+
+def _tree_map_specs(fn, specs: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(fn, specs, is_leaf=is_spec)
+
+
+def init_params(specs: PyTree, key: jax.Array, dtype=jnp.float32) -> PyTree:
+    """Materialize parameters. Deterministic per-leaf keys via fold_in of the
+    flattened leaf index (stable across identical spec trees)."""
+    leaves, treedef = jax.tree_util.tree_flatten(specs, is_leaf=is_spec)
+    out = []
+    for i, spec in enumerate(leaves):
+        k = jax.random.fold_in(key, i)
+        if spec.init == "zeros":
+            out.append(jnp.zeros(spec.shape, dtype))
+        elif spec.init == "ones":
+            out.append(jnp.ones(spec.shape, dtype))
+        else:
+            out.append(
+                (jax.random.normal(k, spec.shape, jnp.float32)
+                 * spec.fan_in_scale()).astype(dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def abstract_params(specs: PyTree, dtype=jnp.bfloat16,
+                    shardings: Optional[PyTree] = None) -> PyTree:
+    """ShapeDtypeStruct tree for .lower() — optionally with shardings."""
+    if shardings is None:
+        return _tree_map_specs(
+            lambda s: jax.ShapeDtypeStruct(s.shape, dtype), specs)
+    return jax.tree_util.tree_map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, dtype, sharding=sh),
+        specs, shardings, is_leaf=is_spec)
+
+
+def logical_to_pspec(axes: Sequence[Optional[str]],
+                     rules: ShardingConfig) -> P:
+    """Map logical dim names to a PartitionSpec via the rules table."""
+    mapping: Dict[str, Any] = {
+        "embed": rules.embed,
+        "mlp": rules.mlp,
+        "heads": rules.heads,
+        "kv_heads": rules.heads,     # kv heads follow the heads rule
+        "vocab": rules.vocab,
+        "experts": rules.experts,
+        "batch": tuple(rules.batch),
+        "cache_seq": rules.cache_seq,
+        "seq": rules.seq,
+        # never sharded:
+        "head_dim": None, "layers": None, "conv": None,
+        "state": None, "lru": rules.mlp, None: None,
+    }
+    parts = []
+    for name in axes:
+        parts.append(mapping.get(name, None))
+    # trim trailing Nones (canonical form)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def param_shardings(specs: PyTree, mesh: Mesh,
+                    rules: ShardingConfig) -> PyTree:
+    """NamedSharding tree aligned with the spec tree.
+
+    Divisibility guard: jit input shardings require even tiling, so a
+    logical axis is only sharded when the dim divides the mesh-axis size;
+    otherwise the dim is replicated (e.g. 9 heads over 16 model shards).
+    The replication cost shows up in the §Roofline memory column and the
+    fused-head layout that removes it is a §Perf hillclimb variant."""
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def _one(spec: Spec) -> NamedSharding:
+        pspec = logical_to_pspec(spec.axes, rules)
+        fixed = []
+        used: set = set()
+        for dim, part in zip(spec.shape, tuple(pspec) + (None,) * (len(spec.shape) - len(pspec))):
+            if part is None:
+                fixed.append(None)
+                continue
+            names = part if isinstance(part, tuple) else (part,)
+            size = int(np.prod([axis_sizes[n] for n in names]))
+            # each mesh axis at most once per spec (e.g. [lru, lru] mats)
+            if dim % size != 0 or any(n in used for n in names):
+                fixed.append(None)
+                continue
+            used.update(names)
+            fixed.append(part)
+        while fixed and fixed[-1] is None:
+            fixed.pop()
+        return NamedSharding(mesh, P(*fixed))
+
+    return _tree_map_specs(_one, specs)
+
+
+def count_params(specs: PyTree) -> int:
+    leaves = jax.tree_util.tree_leaves(specs, is_leaf=is_spec)
+    return int(sum(np.prod(s.shape) for s in leaves))

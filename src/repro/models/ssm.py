@@ -1,0 +1,217 @@
+"""Mamba-2 (SSD — state-space duality) mixer in pure JAX. [arXiv:2405.21060]
+
+Two execution forms, matching the paper's duality:
+
+* ``ssd_chunked``   — matmul ("attention-dual") form for train/prefill:
+  intra-chunk quadratic term + inter-chunk state carry.  This is the
+  MXU-friendly form: everything is einsums over [chunk, chunk] and
+  [head_dim, state] tiles (TPU adaptation of the paper's Triton kernels).
+* ``ssd_recurrent`` — linear recurrence for decode/verify: a
+  ``lax.scan`` over the (short) token axis.  Supports a per-step
+  ``update_mask``: masked steps are exact identities on the state
+  (``dt = 0``), which is how the speculative-decoding engine *commits* only
+  the accepted tokens after verification (DESIGN.md §4, state rollback).
+
+State layout: ``h [B, H, P, N]`` (heads, head_dim, state), conv cache
+``[B, W-1, conv_dim]``.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import ModelConfig, SSMConfig
+from repro.models.layers import rmsnorm
+from repro.models.module import Spec
+
+
+def ssm_dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    num_heads = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.state_size
+    return d_inner, num_heads, conv_dim, s.state_size
+
+
+def ssm_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    s = cfg.ssm
+    di, h, dc, n = ssm_dims(cfg)
+    return {
+        "wz": Spec((d, di), ("embed", "mlp")),
+        "wxbc": Spec((d, dc), ("embed", "mlp")),     # x | B | C jointly conv'd
+        "wdt": Spec((d, h), ("embed", None)),
+        "dt_bias": Spec((h,), (None,), init="zeros"),
+        "A_log": Spec((h,), (None,), init="ones"),
+        "D": Spec((h,), (None,), init="ones"),
+        "conv_w": Spec((s.conv_width, dc), ("conv", "mlp"), scale=0.5),
+        "conv_b": Spec((dc,), ("mlp",), init="zeros"),
+        "gnorm": Spec((di,), ("mlp",), init="zeros"),
+        "out_proj": Spec((di, d), ("mlp", "embed")),
+    }
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array,
+                  cache: Optional[jax.Array] = None
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv. x [B,S,C], w [W,C].  Returns (y, new_cache)
+    where new_cache holds the trailing W-1 inputs."""
+    width = w.shape[0]
+    if cache is None:
+        cache = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([cache, x], axis=1)
+    s = x.shape[1]
+    y = sum(w[i] * jax.lax.dynamic_slice_in_dim(xp, i, s, axis=1)
+            for i in range(width)) + b
+    new_cache = xp[:, -(width - 1):] if width > 1 else cache
+    return y, new_cache
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """a [..., q] -> [..., q, q]: [i,j] = sum_{k=j+1..i} a_k (lower-tri)."""
+    cs = jnp.cumsum(a, axis=-1)
+    ss = cs[..., :, None] - cs[..., None, :]
+    q = a.shape[-1]
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(tri, ss, -jnp.inf)
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array,
+                B: jax.Array, C: jax.Array, chunk: int,
+                h0: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD. x [b,s,h,p], dt [b,s,h] (post-softplus), A [h] (<0),
+    B,C [b,s,n] (single group).  Returns (y [b,s,h,p], h_final [b,h,p,n])."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    sp = s + pad
+    nc = sp // chunk
+    xd = (x * dt[..., None]).astype(jnp.float32)                  # dt-scaled input
+    a = (dt * A).astype(jnp.float32)                              # [b,sp,h]
+
+    # chunked views: [b, nc, q, ...] -> scan over nc
+    xc = xd.reshape(b, nc, chunk, h, p)
+    ac = a.reshape(b, nc, chunk, h).transpose(0, 3, 1, 2)         # [b,h,nc,q]
+    Bc = B.reshape(b, nc, chunk, n).astype(jnp.float32)
+    Cc = C.reshape(b, nc, chunk, n).astype(jnp.float32)
+
+    a_cs = jnp.cumsum(ac, axis=-1)                                # [b,h,nc,q]
+    L = jnp.exp(_segsum(ac))                                      # [b,h,nc,q,q]
+    # intra-chunk (quadratic, attention-dual) term
+    y_diag = jnp.einsum("bcqn,bckn,bhcqk,bckhp->bcqhp", Cc, Bc, L, xc)
+    # per-chunk input->state contribution
+    decay_in = jnp.exp(a_cs[..., -1:] - a_cs)                     # [b,h,nc,q]
+    chunk_states = jnp.einsum("bcqn,bhcq,bcqhp->bchpn", Bc, decay_in, xc)
+    chunk_decay = jnp.exp(a_cs[..., -1])                          # [b,h,nc]
+    out_decay = jnp.exp(a_cs)                                     # [b,h,nc,q]
+
+    h0 = (jnp.zeros((b, h, p, n), jnp.float32) if h0 is None
+          else h0.astype(jnp.float32))
+
+    def step(hprev, inp):
+        cs_, cd_, od_, C_ = inp
+        y_off = jnp.einsum("bqn,bhpn,bhq->bqhp", C_, hprev, od_)
+        hnew = cd_[..., None, None] * hprev + cs_
+        return hnew, y_off
+
+    xs = (jnp.moveaxis(chunk_states, 1, 0),
+          jnp.moveaxis(chunk_decay, 2, 0),
+          jnp.moveaxis(out_decay, 2, 0),
+          jnp.moveaxis(Cc, 1, 0))
+    h_final, y_offs = jax.lax.scan(step, h0, xs)
+    y_off = jnp.moveaxis(y_offs, 0, 1).reshape(b, nc, chunk, h, p)
+    y = (y_diag + y_off).reshape(b, sp, h, p)[:, :s]
+    return y.astype(x.dtype), h_final
+
+
+def ssd_recurrent(x: jax.Array, dt: jax.Array, A: jax.Array,
+                  B: jax.Array, C: jax.Array, h0: jax.Array,
+                  update_mask: Optional[jax.Array] = None
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Token-recurrent SSD for decode/verify.  x [b,t,h,p], dt [b,t,h],
+    B,C [b,t,n], h0 [b,h,p,n].  ``update_mask [b,t]``: steps with mask=0
+    leave the state untouched (dt := 0) — used for speculative commit."""
+    if update_mask is not None:
+        dt = dt * update_mask[..., None]
+    af = jnp.exp(dt * A)                                          # [b,t,h]
+
+    def step(h, inp):
+        a_, x_, dt_, B_, C_ = inp
+        # h' = a h + (dt x) B^T ; y = C h'
+        upd = jnp.einsum("bhp,bn->bhpn", x_ * dt_[..., None], B_)
+        hn = a_[..., None, None] * h + upd
+        y = jnp.einsum("bn,bhpn->bhp", C_, hn)
+        return hn, y
+
+    xs = (jnp.moveaxis(af, 1, 0), jnp.moveaxis(x.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(dt, 1, 0), jnp.moveaxis(B.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(C.astype(jnp.float32), 1, 0))
+    hf, ys = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), hf
+
+
+def mamba_mixer(p: dict, cfg: ModelConfig, u: jax.Array,
+                state: Optional[Dict[str, jax.Array]] = None,
+                update_mask: Optional[jax.Array] = None,
+                use_chunked: bool = True
+                ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Full Mamba-2 block (pre-norm residual handled by the caller).
+
+    u [B,S,d_model] -> y [B,S,d_model].  ``state`` carries
+    ``{"ssd": [B,H,P,N], "conv": [B,W-1,conv_dim]}`` across calls; pass
+    ``None`` for stateless training.
+    """
+    s = cfg.ssm
+    di, h, dc, n = ssm_dims(cfg)
+    z = jnp.einsum("bsd,de->bse", u, p["wz"])
+    xbc = jnp.einsum("bsd,de->bse", u, p["wxbc"])
+    dt_raw = jnp.einsum("bsd,dh->bsh", u, p["wdt"])
+
+    conv_cache = state["conv"] if state is not None else None
+    xbc, new_conv = causal_conv1d(xbc, p["conv_w"], p["conv_b"], conv_cache)
+    xbc = jax.nn.silu(xbc)
+    x, B, C = jnp.split(xbc, [di, di + n], axis=-1)
+    x = x.reshape(x.shape[0], x.shape[1], h, s.head_dim)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    if update_mask is not None:
+        # masked steps are exact identities on the state (dt = 0 => decay 1,
+        # zero input) — valid in BOTH the chunked and recurrent forms, which
+        # is how ragged right-padded prefill stays correct for SSMs
+        dt = dt * update_mask[..., None]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    h0 = state["ssd"] if state is not None else None
+    if use_chunked:
+        y, hf = ssd_chunked(x, dt, A, B, C, s.chunk_size, h0)
+    else:
+        if h0 is None:
+            h0 = jnp.zeros((x.shape[0], h, s.head_dim, n), jnp.float32)
+        y, hf = ssd_recurrent(x, dt, A, B, C, h0, None)
+
+    y = y + p["D"].astype(y.dtype)[:, None] * x                   # skip
+    y = y.reshape(y.shape[0], y.shape[1], di)
+    y = rmsnorm(y * jax.nn.silu(z), p["gnorm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    new_state = {"ssd": hf, "conv": new_conv}
+    if update_mask is not None:
+        # conv cache must also freeze past the accepted prefix; recompute it
+        # from the masked input stream (identity for masked steps).
+        if conv_cache is not None:
+            w = p["conv_w"].shape[0]
+            xbc_in = jnp.einsum("bsd,de->bse", u, p["wxbc"])
+            hist = jnp.concatenate([conv_cache, xbc_in], axis=1)  # [B, W-1+T, dc]
+            t = u.shape[1]
+            n_acc = update_mask.sum(axis=1).astype(jnp.int32)     # [B]
+            idx = n_acc[:, None] + jnp.arange(w - 1)[None, :]     # window end at accepted
+            new_state["conv"] = jnp.take_along_axis(
+                hist, idx[..., None].astype(jnp.int32), axis=1)
+    return out, new_state

@@ -1,0 +1,47 @@
+"""Request lifecycle for the serving engine."""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import time
+from typing import List, Optional
+
+
+class RequestState(enum.Enum):
+    QUEUED = "queued"
+    RUNNING = "running"
+    FINISHED = "finished"
+
+
+@dataclasses.dataclass
+class Request:
+    request_id: int
+    prompt: List[int]
+    max_new_tokens: int = 128
+    eos_token_id: Optional[int] = None
+    # --- runtime fields -----------------------------------------------------
+    state: RequestState = RequestState.QUEUED
+    output: List[int] = dataclasses.field(default_factory=list)
+    slot: Optional[int] = None
+    arrival_time: float = dataclasses.field(default_factory=time.monotonic)
+    first_token_time: Optional[float] = None
+    finish_time: Optional[float] = None
+    rounds: int = 0                    # target verifications consumed
+    accepted_tokens: int = 0
+    proposed_tokens: int = 0
+
+    @property
+    def done(self) -> bool:
+        return self.state == RequestState.FINISHED
+
+    def latency(self) -> Optional[float]:
+        if self.finish_time is None:
+            return None
+        return self.finish_time - self.arrival_time
+
+    def block_efficiency(self) -> float:
+        """Tokens emitted per target verification (paper's BE metric)."""
+        return len(self.output) / max(self.rounds, 1)
+
+    def acceptance_rate(self) -> float:
+        return self.accepted_tokens / max(self.proposed_tokens, 1)

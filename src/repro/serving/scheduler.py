@@ -1,0 +1,77 @@
+"""Look-ahead slot scheduler (paper §3.2).
+
+Computes per-sequence look-ahead KV slots directly from ``SL_i^(t)`` and is
+applied uniformly to prefill and decode admission — the vLLM modification
+the paper describes ("removes inconsistencies between feasibility checks
+and append operations and aligns capacity planning with intra-batch
+heterogeneity").
+
+The scheduler owns: the waiting queue, the slot table, and the admission
+decision (does the remaining KV budget of a slot cover prompt + lookahead
++ max_new_tokens?).
+"""
+from __future__ import annotations
+
+import collections
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.config import ServingConfig, SpecDecodeConfig
+from repro.serving.request import Request, RequestState
+
+
+class LookaheadScheduler:
+    def __init__(self, serving: ServingConfig, spec: SpecDecodeConfig):
+        self.serving = serving
+        self.spec = spec
+        self.queue: collections.deque[Request] = collections.deque()
+        self.slots: List[Optional[Request]] = [None] * serving.max_batch_size
+
+    # ------------------------------------------------------------- admission
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def lookahead_slots(self, sl_next: np.ndarray) -> np.ndarray:
+        """KV slots each sequence needs next round: SL_i + 1 (bonus)."""
+        return sl_next + 1
+
+    def _fits(self, req: Request) -> bool:
+        need = len(req.prompt) + req.max_new_tokens + self.spec.sl_max + 1
+        return need <= self.serving.max_seq_len
+
+    def free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.slots) if r is None]
+
+    def admit(self) -> List[Request]:
+        """Move queued requests into free slots (continuous batching)."""
+        admitted = []
+        for i in self.free_slots():
+            if not self.queue:
+                break
+            req = self.queue.popleft()
+            if not self._fits(req):
+                req.state = RequestState.FINISHED   # reject oversize
+                continue
+            req.slot = i
+            req.state = RequestState.RUNNING
+            self.slots[i] = req
+            admitted.append(req)
+        return admitted
+
+    def release(self, req: Request) -> None:
+        if req.slot is not None:
+            self.slots[req.slot] = None
+            req.slot = None
+
+    # ------------------------------------------------------------- telemetry
+    @property
+    def active_mask(self) -> np.ndarray:
+        return np.array([r is not None for r in self.slots], bool)
+
+    @property
+    def running(self) -> List[Request]:
+        return [r for r in self.slots if r is not None]
+
+    def has_work(self) -> bool:
+        return bool(self.queue) or any(r is not None for r in self.slots)

@@ -1,0 +1,77 @@
+"""Pytree checkpointing on local disk (np.savez; no orbax in-container).
+
+Layout: one ``.npz`` per step holding flattened leaves + a key manifest,
+plus a ``latest`` pointer file.  Restores into the exact tree structure.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+PyTree = Any
+_SEP = "/"
+
+
+def _flatten_with_paths(tree: PyTree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    keys = []
+    for path, _ in flat:
+        parts = []
+        for p in path:
+            if hasattr(p, "key"):
+                parts.append(str(p.key))
+            elif hasattr(p, "idx"):
+                parts.append(str(p.idx))
+            else:
+                parts.append(str(p))
+        keys.append(_SEP.join(parts))
+    return keys, [leaf for _, leaf in flat], treedef
+
+
+def save_checkpoint(path: str, step: int, params: PyTree,
+                    extra: Optional[PyTree] = None) -> str:
+    os.makedirs(path, exist_ok=True)
+    tree = {"params": params}
+    if extra is not None:
+        tree["extra"] = extra
+    keys, leaves, _ = _flatten_with_paths(tree)
+    arrays = {f"leaf_{i}": np.asarray(l) for i, l in enumerate(leaves)}
+    fname = os.path.join(path, f"ckpt_{step:08d}.npz")
+    np.savez(fname, manifest=json.dumps(keys), **arrays)
+    with open(os.path.join(path, "latest"), "w") as f:
+        f.write(os.path.basename(fname))
+    return fname
+
+
+def latest_checkpoint(path: str) -> Optional[str]:
+    ptr = os.path.join(path, "latest")
+    if not os.path.exists(ptr):
+        return None
+    with open(ptr) as f:
+        return os.path.join(path, f.read().strip())
+
+
+def restore_checkpoint(fname: str, template: PyTree) -> Tuple[PyTree, PyTree]:
+    """Restore (params, extra) into the structure of ``template``
+    ({"params":..., "extra":...} or params-only)."""
+    data = np.load(fname, allow_pickle=False)
+    keys = json.loads(str(data["manifest"]))
+    tree = {"params": template} if not (isinstance(template, dict)
+                                        and "params" in template) else template
+    tkeys, tleaves, treedef = _flatten_with_paths(tree)
+    lookup = {k: data[f"leaf_{i}"] for i, k in enumerate(keys)}
+    new_leaves = []
+    for k, leaf in zip(tkeys, tleaves):
+        if k not in lookup:
+            raise KeyError(f"checkpoint missing leaf {k}")
+        arr = lookup[k]
+        if tuple(arr.shape) != tuple(np.shape(leaf)):
+            raise ValueError(f"shape mismatch for {k}: "
+                             f"{arr.shape} vs {np.shape(leaf)}")
+        new_leaves.append(arr)
+    restored = jax.tree_util.tree_unflatten(treedef, new_leaves)
+    return restored.get("params", restored), restored.get("extra")

@@ -1,0 +1,169 @@
+"""Training loop: loss, train_step (jit/pjit-able), and a CPU driver.
+
+``train_step`` is the function the multi-pod dry-run lowers for the
+``train_4k`` input shape; it is mesh-agnostic (shardings come from
+``repro/launch``).
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Any, Dict, Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import ModelConfig, OptimizerConfig, TrainConfig
+from repro.core.sampling import mask_vocab
+from repro.models.transformer import forward, model_specs
+from repro.models.module import init_params
+from repro.training.optimizer import AdamWState, adamw_update, init_adamw
+
+PyTree = Any
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  vocab_size: int,
+                  mask: Optional[jax.Array] = None) -> jax.Array:
+    """Vocab-parallel cross entropy.
+
+    The label logit is picked with an iota==label masked reduction instead
+    of ``take_along_axis``: gathering along a vocab-sharded axis would
+    all-gather the full [B,S,V] logits (tens of GiB at 150k vocab) while
+    the masked reduce keeps everything local + one scalar all-reduce
+    (Megatron-style vocab-parallel CE, done via GSPMD)."""
+    logits = mask_vocab(logits, vocab_size).astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                    logits.ndim - 1)
+    tok_logit = jnp.sum(jnp.where(iota == labels[..., None], logits, 0.0),
+                        axis=-1)
+    ll = tok_logit - lse
+    if mask is not None:
+        return -(ll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return -ll.mean()
+
+
+def loss_fn(params: PyTree, cfg: ModelConfig, tokens: jax.Array,
+            labels: jax.Array, remat: bool = False,
+            embeds: Optional[jax.Array] = None,
+            encoder_embeds: Optional[jax.Array] = None,
+            act_sharding=None, logits_sharding=None, attn_sharding=None,
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    logits, _, aux = forward(params, cfg, tokens, mode="train",
+                             embeds=embeds, encoder_embeds=encoder_embeds,
+                             act_sharding=act_sharding,
+                             attn_sharding=attn_sharding, remat=remat)
+    if logits_sharding is not None:
+        # pin [B, S, V] to (batch, None, model): without this GSPMD has been
+        # observed to replicate the logits cotangent over the vocab axis in
+        # backward (2 x ~40 GiB buffers at 150k vocab)
+        logits = jax.lax.with_sharding_constraint(logits, logits_sharding)
+    loss = cross_entropy(logits, labels, cfg.vocab_size)
+    metrics = {"ce_loss": loss}
+    if cfg.family == "moe":
+        lb = aux["load_balance_loss"] * cfg.moe.load_balance_weight
+        zl = aux["router_z_loss"] * 1e-3
+        loss = loss + lb + zl
+        metrics.update(load_balance=lb, router_z=zl,
+                       dropped=aux["dropped_fraction"])
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+def train_step(params: PyTree, opt_state: AdamWState, tokens: jax.Array,
+               labels: jax.Array, *, cfg: ModelConfig,
+               opt_cfg: OptimizerConfig, remat: bool = True,
+               encoder_embeds: Optional[jax.Array] = None,
+               act_sharding=None, attn_sharding=None, microbatches: int = 1,
+               microbatch_sharding=None,
+               ) -> Tuple[PyTree, AdamWState, Dict[str, jax.Array]]:
+    """One optimizer step.  Lowered by the dry-run for train_4k.
+
+    ``microbatches > 1`` enables gradient accumulation over a ``lax.scan``:
+    activation-scale buffers (remat stash, vocab logits) shrink by the
+    microbatch factor, which is what fits the 32B-class configs into v5e
+    HBM at global batch 256 (EXPERIMENTS.md §Dry-run)."""
+    if microbatches <= 1:
+        (_, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, cfg, tokens, labels, remat,
+                                   None, encoder_embeds, act_sharding,
+                                   None, attn_sharding)
+    else:
+        m = microbatches
+        b = tokens.shape[0]
+        assert b % m == 0, (b, m)
+
+        def resh(x):
+            if x is None:
+                return None
+            x = x.reshape((m, b // m) + x.shape[1:])
+            if microbatch_sharding is not None:
+                x = jax.lax.with_sharding_constraint(
+                    x, microbatch_sharding(x.ndim))
+            return x
+
+        toks_m, labs_m = resh(tokens), resh(labels)
+        enc_m = resh(encoder_embeds)
+
+        def micro(g_acc, xs):
+            if enc_m is None:
+                t_i, l_i = xs
+                e_i = None
+            else:
+                t_i, l_i, e_i = xs
+            (_, metrics), g = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, cfg, t_i, l_i, remat,
+                                       None, e_i, act_sharding,
+                                       None, attn_sharding)
+            g_acc = jax.tree_util.tree_map(
+                lambda a, gi: a + gi.astype(jnp.float32), g_acc, g)
+            return g_acc, metrics
+
+        g0 = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        xs = (toks_m, labs_m) if enc_m is None else (toks_m, labs_m, enc_m)
+        grads, metrics_m = jax.lax.scan(micro, g0, xs)
+        grads = jax.tree_util.tree_map(lambda g: g / m, grads)
+        metrics = jax.tree_util.tree_map(lambda v: v.mean(0), metrics_m)
+    params, opt_state, opt_m = adamw_update(params, grads, opt_state, opt_cfg)
+    metrics.update(opt_m)
+    return params, opt_state, metrics
+
+
+def make_jit_train_step(cfg: ModelConfig, opt_cfg: OptimizerConfig,
+                        remat: bool = True):
+    return jax.jit(functools.partial(train_step, cfg=cfg, opt_cfg=opt_cfg,
+                                     remat=remat))
+
+
+def train_loop(cfg: ModelConfig, train_cfg: TrainConfig,
+               batches: Iterator, *, seed: int = 0,
+               dtype=jnp.float32, log_every: int = 20,
+               num_steps: Optional[int] = None,
+               params: Optional[PyTree] = None,
+               verbose: bool = True) -> Tuple[PyTree, Dict[str, float]]:
+    """CPU driver: train a (small) model for a few hundred steps.  Used by
+    the examples and by the benchmark harness to build genuinely-correlated
+    draft/target pairs (DESIGN.md §3)."""
+    key = jax.random.PRNGKey(seed)
+    if params is None:
+        params = init_params(model_specs(cfg), key, dtype)
+    opt_state = init_adamw(params)
+    step_fn = make_jit_train_step(cfg, train_cfg.optimizer,
+                                  remat=train_cfg.remat)
+    n = num_steps or train_cfg.optimizer.total_steps
+    t0 = time.monotonic()
+    last = {}
+    for i, (toks, labs) in enumerate(batches):
+        if i >= n:
+            break
+        params, opt_state, m = step_fn(params, opt_state,
+                                       jnp.asarray(toks), jnp.asarray(labs))
+        if i % log_every == 0 or i == n - 1:
+            last = {k: float(v) for k, v in m.items()}
+            if verbose:
+                print(f"  step {i:4d} loss={last['loss']:.4f} "
+                      f"lr={last['lr']:.2e} gnorm={last['grad_norm']:.2f}")
+    wall = time.monotonic() - t0
+    return params, {"steps": min(i + 1, n), "wall_s": wall, **last}

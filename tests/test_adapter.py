@@ -1,0 +1,124 @@
+"""Tests for the DSDE SL adapter (paper Eq. 1-3, 8-11)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import adapter as A
+from repro.core.config import SpecDecodeConfig
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def cfg(**kw):
+    return SpecDecodeConfig(**kw)
+
+
+def test_scale_factor_eq3():
+    # SF = exp(2*mu) - 1
+    mu = jnp.array([0.0, 0.5, 1.0])
+    sf = np.asarray(A.scale_factor(mu, cfg()))
+    np.testing.assert_allclose(sf, np.exp(2 * np.asarray(mu)) - 1, rtol=1e-6)
+
+
+def test_calibration_eq1():
+    """SL_max = SL_A,max * (1 + mu_pre / (KLD_pre,max + eps)) after the
+    calibration window closes."""
+    c = cfg(calibration_steps=2, sl_min=2, sl_max=10)
+    st = A.init_adapter_state(1, c)
+    # two calibration steps: KLDs {1.0, 3.0} then {2.0}; accepted 3 then 1
+    st = A.observe(st, c, kld=jnp.array([[1.0, 3.0]]),
+                   proposed_valid=jnp.ones((1, 2), bool),
+                   num_accepted=jnp.array([3]))
+    assert int(st.calib_steps[0]) == 1
+    assert float(st.sl_max[0]) == c.sl_max  # not yet calibrated
+    st = A.observe(st, c, kld=jnp.array([[2.0, 0.0]]),
+                   proposed_valid=jnp.array([[True, False]]),
+                   num_accepted=jnp.array([1]))
+    mu_pre = (1.0 + 3.0 + 2.0) / 3
+    expect = 3 * (1 + mu_pre / (3.0 + c.eps))
+    expect = np.clip(expect, c.sl_min + 1, c.sl_max)
+    assert float(st.sl_max[0]) == pytest.approx(expect, rel=1e-5)
+
+
+def test_predict_eq2_and_floor_eq8():
+    c = cfg(calibration_steps=0, sl_min=2, sl_max=10, use_sl_cap=False)
+    st = A.init_adapter_state(2, c)
+    # craft state: seq0 stable (mu=0 -> SF=0 -> penalty 0 -> SL = SL_max);
+    # seq1 extreme (penalty >= 1 -> floor at SL_min)
+    st = st._replace(mu_kld_last=jnp.array([0.0, 5.0]),
+                     sl_max=jnp.array([8.0, 8.0]),
+                     calib_steps=jnp.array([10, 10]))
+    sl, st2, tel = A.predict_sl(st, c)
+    assert int(sl[0]) == 8         # (1-0)*(8-2)+2
+    assert int(sl[1]) == c.sl_min  # conservative floor
+
+
+def test_predict_interpolates():
+    c = cfg(calibration_steps=0, sl_min=2, sl_max=10, use_sl_cap=False)
+    st = A.init_adapter_state(1, c)
+    # penalty = SF*WVIR with WVIR=1 (fresh history): SF = exp(2*mu)-1
+    mu = 0.2
+    st = st._replace(mu_kld_last=jnp.array([mu]),
+                     sl_max=jnp.array([10.0]),
+                     calib_steps=jnp.array([5]))
+    sl, _, tel = A.predict_sl(st, c)
+    pen = np.exp(2 * mu) - 1
+    expect = np.clip(round((1 - pen) * 8 + 2), 2, 10)
+    assert int(sl[0]) == expect
+
+
+def test_sl_cap_is_mean_eq11():
+    c = cfg()
+    sl = jnp.array([2.0, 4.0, 9.0, 9.0])
+    capped, cap = A.apply_sl_cap(sl, c)
+    assert float(cap) == pytest.approx(6.0)
+    np.testing.assert_allclose(np.asarray(capped), [2, 4, 6, 6])
+
+
+def test_sl_cap_excludes_inactive():
+    c = cfg()
+    sl = jnp.array([2.0, 4.0, 100.0])
+    active = jnp.array([True, True, False])
+    capped, cap = A.apply_sl_cap(sl, c, active)
+    assert float(cap) == pytest.approx(3.0)
+
+
+def test_sl_cap_mse_optimality():
+    """Eq. 9-11: the mean minimizes MSE(cap, {SL_i}) over candidate caps."""
+    rng = np.random.RandomState(0)
+    sls = rng.randint(2, 11, size=16).astype(float)
+    mean = sls.mean()
+    mse = lambda c: ((c - sls) ** 2).mean()
+    for cand in np.linspace(2, 10, 33):
+        assert mse(mean) <= mse(cand) + 1e-9
+
+
+def test_observe_inactive_rows_untouched():
+    c = cfg(calibration_steps=2)
+    st = A.init_adapter_state(2, c)
+    st2 = A.observe(st, c, kld=jnp.array([[1.0], [1.0]]),
+                    proposed_valid=jnp.ones((2, 1), bool),
+                    num_accepted=jnp.array([1, 1]),
+                    active=jnp.array([True, False]))
+    assert int(st2.calib_steps[0]) == 1
+    assert int(st2.calib_steps[1]) == 0
+
+
+def test_reset_rows():
+    c = cfg(calibration_steps=1)
+    st = A.init_adapter_state(2, c)
+    st = A.observe(st, c, kld=jnp.array([[2.0], [2.0]]),
+                   proposed_valid=jnp.ones((2, 1), bool),
+                   num_accepted=jnp.array([2, 2]))
+    st = A.reset_rows(st, jnp.array([True, False]), c)
+    assert int(st.calib_steps[0]) == 0 and int(st.calib_steps[1]) == 1
+    assert float(st.calib_kld_sum[0]) == 0.0
+
+
+def test_adaedl_threshold_monotone():
+    """Lower draft entropy => higher acceptance bound => keep drafting."""
+    c = cfg(adaedl_threshold=0.3)
+    ent = jnp.array([0.01, 1.0, 8.0])
+    keep = np.asarray(A.adaedl_stop_threshold(ent, c))
+    assert keep[0] and not keep[2]

@@ -1,0 +1,163 @@
+"""Per-architecture smoke tests (assignment requirement: reduced variant,
+<=2 layers, d_model<=512, <=4 experts — one forward/train step on CPU,
+shape + no-NaN assertions) plus the decode==train consistency invariant
+that speculative verification correctness rests on."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_archs
+from repro.core.config import OptimizerConfig
+from repro.models import cache as cache_lib
+from repro.models.module import count_params, init_params
+from repro.models.transformer import (build_cross_cache, commit, encode,
+                                      forward, model_specs)
+from repro.training.optimizer import init_adamw
+from repro.training.train import train_step
+
+jax.config.update("jax_platform_name", "cpu")
+
+ASSIGNED = [a for a in list_archs() if not a.startswith("paper-")]
+KEY = jax.random.PRNGKey(0)
+
+
+def _setup(arch):
+    cfg = get_config(arch).reduced()
+    params = init_params(model_specs(cfg), KEY, jnp.float32)
+    return cfg, params
+
+
+def _enc_ctx(cfg, params, b, enc_len=8):
+    emb = jax.random.normal(KEY, (b, enc_len, cfg.d_model)) * 0.02
+    enc = encode(params, cfg, emb)
+    ck, cv = build_cross_cache(params, cfg, enc)
+    return emb, ck, cv
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_smoke_reduced_variant(arch):
+    """Assignment smoke test: reduced config, one forward + one train step."""
+    cfg, params = _setup(arch)
+    assert cfg.num_layers <= 2 and cfg.d_model <= 512
+    if cfg.moe is not None:
+        assert cfg.moe.num_experts <= 4
+    b, s = 2, 16
+    toks = jax.random.randint(KEY, (b, s), 0, cfg.vocab_size)
+    labs = jnp.roll(toks, -1, 1)
+
+    enc_embeds = None
+    if cfg.is_encoder_decoder:
+        enc_embeds = jax.random.normal(KEY, (b, 8, cfg.d_model)) * 0.02
+    logits, _, aux = forward(params, cfg, toks, mode="train",
+                             encoder_embeds=enc_embeds)
+    vp = cfg.padded_vocab(128)
+    assert logits.shape == (b, s, vp)
+    assert not bool(jnp.isnan(logits).any())
+
+    opt = init_adamw(params)
+    p2, opt2, metrics = train_step(
+        params, opt, toks, labs, cfg=cfg, opt_cfg=OptimizerConfig(),
+        remat=False, encoder_embeds=enc_embeds)
+    assert np.isfinite(float(metrics["loss"]))
+    assert not bool(jnp.isnan(p2["embed"]).any())
+    # parameters actually changed
+    assert float(jnp.abs(p2["embed"] - params["embed"]).max()) > 0
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_prefill_decode_shapes(arch):
+    cfg, params = _setup(arch)
+    b, s, t = 2, 10, 3
+    toks = jax.random.randint(KEY, (b, s + t), 0, cfg.vocab_size)
+    c = cache_lib.cache_struct(cfg, b, 64, jnp.float32,
+                               enc_len=8 if cfg.family == "audio" else None)
+    if cfg.family == "audio":
+        _, ck, cv = _enc_ctx(cfg, params, b)
+        c["cross_k"], c["cross_v"] = ck, cv
+        c["enc_valid"] = jnp.ones((b, 8), bool)
+    pl, c, _ = forward(params, cfg, toks[:, :s], cache=c, mode="prefill")
+    c["length"] = jnp.full((b,), s, jnp.int32)
+    dl, c2, _ = forward(params, cfg, toks[:, s:], cache=c, mode="decode")
+    assert dl.shape[:2] == (b, t)
+    assert not bool(jnp.isnan(dl).any())
+
+
+@pytest.mark.parametrize("arch", ["smollm-135m", "granite-moe-3b-a800m",
+                                  "mamba2-130m", "recurrentgemma-2b",
+                                  "qwen2-vl-2b", "mixtral-8x22b",
+                                  "qwen3-32b", "qwen2.5-32b", "granite-8b"])
+def test_decode_matches_train_forward(arch):
+    """Incremental decode == full-context forward: the invariant that makes
+    speculative verification exact (includes ragged partial commit)."""
+    cfg, params = _setup(arch)
+    b, s, t = 2, 10, 5
+    toks = jax.random.randint(KEY, (b, s + t), 0, cfg.vocab_size)
+    ref, _, _ = forward(params, cfg, toks, mode="train")
+
+    c = cache_lib.cache_struct(cfg, b, 64, jnp.float32)
+    _, c, _ = forward(params, cfg, toks[:, :s], cache=c, mode="prefill")
+    c["length"] = jnp.full((b,), s, jnp.int32)
+    snap = c
+    dl, c2, _ = forward(params, cfg, toks[:, s:], cache=c, mode="decode")
+    np.testing.assert_allclose(np.asarray(dl), np.asarray(ref[:, s:]),
+                               atol=2e-3, rtol=1e-3)
+    # partial commit: accept only 2 of 5 tokens, then re-verify the rest
+    c3 = commit(params, cfg, toks[:, s:], snap, c2,
+                jnp.full((b,), 2, jnp.int32))
+    np.testing.assert_array_equal(np.asarray(c3["length"]), [s + 2, s + 2])
+    dl3, _, _ = forward(params, cfg, toks[:, s + 2:s + 4], cache=c3,
+                        mode="decode")
+    np.testing.assert_allclose(np.asarray(dl3),
+                               np.asarray(ref[:, s + 2:s + 4]),
+                               atol=2e-3, rtol=1e-3)
+
+
+def test_ragged_prompt_prefill():
+    """Right-padded ragged prompts: pad positions must not leak into
+    attention (input_mask semantics)."""
+    cfg, params = _setup("smollm-135m")
+    toks = jax.random.randint(KEY, (2, 8), 0, cfg.vocab_size)
+    # reference: prompt of length 5 processed alone
+    c1 = cache_lib.cache_struct(cfg, 1, 64, jnp.float32)
+    l1, _, _ = forward(params, cfg, toks[:1, :5], cache=c1, mode="prefill")
+    # padded to 8 with mask
+    c2 = cache_lib.cache_struct(cfg, 1, 64, jnp.float32)
+    mask = (jnp.arange(8) < 5)[None]
+    l2, _, _ = forward(params, cfg, toks[:1], cache=c2, mode="prefill",
+                       input_mask=mask)
+    np.testing.assert_allclose(np.asarray(l1[0, 4]), np.asarray(l2[0, 4]),
+                               atol=1e-4)
+
+
+def test_window_ring_cache_matches_full_attention():
+    """Sliding-window ring cache: decode at position > window must equal a
+    full forward with the same window mask."""
+    import dataclasses
+    cfg = dataclasses.replace(get_config("smollm-135m").reduced(),
+                              attention_window=8)
+    params = init_params(model_specs(cfg), KEY, jnp.float32)
+    s, t = 20, 3
+    toks = jax.random.randint(KEY, (1, s + t), 0, cfg.vocab_size)
+    ref, _, _ = forward(params, cfg, toks, mode="train")
+    c = cache_lib.cache_struct(cfg, 1, 64, jnp.float32)  # ring W = 8
+    assert c["k"].shape[2] == 8 + cache_lib.RING_SLACK
+    _, c, _ = forward(params, cfg, toks[:, :s], cache=c, mode="prefill")
+    c["length"] = jnp.full((1,), s, jnp.int32)
+    dl, _, _ = forward(params, cfg, toks[:, s:], cache=c, mode="decode")
+    np.testing.assert_allclose(np.asarray(dl), np.asarray(ref[:, s:]),
+                               atol=2e-3, rtol=1e-3)
+
+
+def test_param_counts_full_configs():
+    """Full (non-reduced) configs build spec trees with plausible sizes."""
+    expected = {
+        "qwen3-32b": (30e9, 40e9),
+        "mixtral-8x22b": (120e9, 150e9),
+        "smollm-135m": (0.1e9, 0.2e9),
+        "mamba2-130m": (0.1e9, 0.2e9),
+        "granite-8b": (7e9, 10e9),
+    }
+    for arch, (lo, hi) in expected.items():
+        n = count_params(model_specs(get_config(arch), 128))
+        assert lo < n < hi, (arch, n)

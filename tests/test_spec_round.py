@@ -1,0 +1,144 @@
+"""Unit tests for the jitted speculative round and the §Perf layout
+optimizations (kv_head_pad / q_head_pad exactness)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import spec_decode as sd
+from repro.core.config import SpecDecodeConfig
+from repro.models import cache as cache_lib
+from repro.models.module import init_params
+from repro.models.transformer import forward, model_specs
+
+jax.config.update("jax_platform_name", "cpu")
+KEY = jax.random.PRNGKey(0)
+
+
+def _ready_state(cfg, pt, pd, batch, prompt_len, spec):
+    st = sd.init_round_state(cfg, cfg, spec, batch, 128, KEY)
+    toks = jax.random.randint(KEY, (batch, prompt_len), 0, cfg.vocab_size)
+    lt, tc, _ = forward(pt, cfg, toks, cache=st.target_cache, mode="prefill")
+    _, dc, _ = forward(pd, cfg, toks, cache=st.draft_cache, mode="prefill")
+    tc = dict(tc); tc["length"] = jnp.full((batch,), prompt_len, jnp.int32)
+    dc = dict(dc); dc["length"] = jnp.full((batch,), prompt_len, jnp.int32)
+    pend = jnp.argmax(lt[:, -1, :cfg.vocab_size], -1).astype(jnp.int32)
+    return st._replace(target_cache=tc, draft_cache=dc, pending=pend)
+
+
+@pytest.fixture(scope="module")
+def pair():
+    cfg = get_config("smollm-135m").reduced()
+    pt = init_params(model_specs(cfg), jax.random.PRNGKey(1), jnp.float32)
+    noise = init_params(model_specs(cfg), jax.random.PRNGKey(9), jnp.float32)
+    pd = jax.tree_util.tree_map(lambda a, b: a + 0.04 * b, pt, noise)
+    return cfg, pt, pd
+
+
+def test_round_respects_inactive_slots(pair):
+    cfg, pt, pd = pair
+    spec = SpecDecodeConfig(policy="static", static_sl=3, temperature=0.0)
+    st = _ready_state(cfg, pt, pd, 3, 8, spec)
+    active = jnp.array([True, False, True])
+    st2, out = sd.spec_decode_round(pt, pd, cfg, cfg, spec, 3, st, active)
+    assert int(out.num_emitted[1]) == 0
+    assert int(out.num_proposed[1]) == 0
+    # inactive slot's caches/pending untouched
+    assert int(st2.target_cache["length"][1]) == int(st.target_cache["length"][1])
+    assert int(st2.pending[1]) == int(st.pending[1])
+    # active slots advance
+    assert int(st2.target_cache["length"][0]) > int(st.target_cache["length"][0])
+
+
+def test_identical_draft_full_acceptance(pair):
+    cfg, pt, _ = pair
+    spec = SpecDecodeConfig(policy="static", static_sl=4, temperature=0.0)
+    st = _ready_state(cfg, pt, pt, 2, 8, spec)
+    active = jnp.ones((2,), bool)
+    for _ in range(3):
+        k = sd.pick_bucket(st.sl_next, spec, active)
+        st, out = sd.spec_decode_round(pt, pt, cfg, cfg, spec, k, st, active)
+        np.testing.assert_array_equal(np.asarray(out.num_accepted),
+                                      np.asarray(out.num_proposed))
+
+
+def test_emitted_tokens_in_vocab_or_pad(pair):
+    cfg, pt, pd = pair
+    spec = SpecDecodeConfig(policy="dsde", temperature=1.0)
+    st = _ready_state(cfg, pt, pd, 2, 8, spec)
+    active = jnp.ones((2,), bool)
+    k = sd.pick_bucket(st.sl_next, spec, active)
+    st, out = sd.spec_decode_round(pt, pd, cfg, cfg, spec, k, st, active)
+    em = np.asarray(out.emitted)
+    ne = np.asarray(out.num_emitted)
+    for b in range(2):
+        assert (em[b, :ne[b]] < cfg.vocab_size).all()
+        assert (em[b, ne[b]:] == cfg.vocab_size).all()   # reserved pad id
+
+
+def test_pick_bucket():
+    spec = SpecDecodeConfig(policy="dsde", sl_min=2)
+    sl = jnp.array([2, 7, 4])
+    assert sd.pick_bucket(sl, spec, jnp.array([True, True, True])) == 7
+    assert sd.pick_bucket(sl, spec, jnp.array([True, False, True])) == 4
+    ar = SpecDecodeConfig(policy="autoregressive")
+    assert sd.pick_bucket(sl, ar, jnp.ones(3, bool)) == 0
+
+
+# ---------------------------------------------------------------------------
+# §Perf layout optimizations: exactness
+# ---------------------------------------------------------------------------
+
+def test_kv_head_pad_exact():
+    cfg0 = get_config("qwen3-32b").reduced()      # 4 q heads, 1 kv head
+    cfg_pad = dataclasses.replace(cfg0, kv_head_pad=4)
+    params = init_params(model_specs(cfg0), KEY, jnp.float32)
+    toks = jax.random.randint(KEY, (2, 12), 0, cfg0.vocab_size)
+    ref, _, _ = forward(params, cfg0, toks, mode="train")
+    c = cache_lib.cache_struct(cfg_pad, 2, 64, jnp.float32)
+    assert c["k"].shape[3] == 4                   # padded physical kv heads
+    _, c, _ = forward(params, cfg_pad, toks[:, :8], cache=c, mode="prefill")
+    c["length"] = jnp.full((2,), 8, jnp.int32)
+    dl, _, _ = forward(params, cfg_pad, toks[:, 8:], cache=c, mode="decode")
+    np.testing.assert_allclose(np.asarray(dl), np.asarray(ref[:, 8:]),
+                               atol=1e-4)
+
+
+def test_q_head_pad_exact_with_zero_wo_rows():
+    cfg0 = get_config("smollm-135m").reduced()    # 4 heads
+    cfg_pad = dataclasses.replace(cfg0, q_head_pad=8)
+    p0 = init_params(model_specs(cfg0), KEY, jnp.float32)
+    pp = dict(init_params(model_specs(cfg_pad), KEY, jnp.float32))
+    a0 = p0["layers"]["attn"]
+    pp["embed"], pp["final_norm"] = p0["embed"], p0["final_norm"]
+    pp["layers"] = {**p0["layers"], "attn": {
+        # real weights in the first 4 head slots; wo pad rows ZERO
+        "wq": jnp.concatenate([a0["wq"], jnp.zeros_like(a0["wq"])], axis=2),
+        "wk": a0["wk"], "wv": a0["wv"],
+        "wo": jnp.concatenate([a0["wo"], jnp.zeros_like(a0["wo"])], axis=1),
+    }}
+    toks = jax.random.randint(KEY, (2, 12), 0, cfg0.vocab_size)
+    r0, _, _ = forward(p0, cfg0, toks, mode="train")
+    r1, _, _ = forward(pp, cfg_pad, toks, mode="train")
+    np.testing.assert_allclose(np.asarray(r0), np.asarray(r1), atol=1e-4)
+
+
+def test_sf_normalize_scale_invariance():
+    """Beyond-paper SF variant: invariant to rescaling all KLDs."""
+    from repro.core import adapter as A
+    from repro.core.config import SpecDecodeConfig as C
+    cfg = C(sf_normalize=True, calibration_steps=0)
+    for scale in (1.0, 5.0):
+        st = A.init_adapter_state(1, cfg)._replace(
+            mu_kld_last=jnp.array([0.4 * scale]),
+            calib_kld_sum=jnp.array([1.0 * scale]),
+            calib_kld_count=jnp.array([5.0]),
+            calib_steps=jnp.array([4]))
+        mu_calib = st.calib_kld_sum / st.calib_kld_count
+        sf = float(A.scale_factor(st.mu_kld_last, cfg, mu_calib)[0])
+        if scale == 1.0:
+            base = sf
+    assert sf == pytest.approx(base, rel=1e-5)
