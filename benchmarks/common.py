@@ -134,14 +134,21 @@ def serve(cfg_t, cfg_d, pt, pd, prompts: List[List[int]], *,
           max_new: int = 48, batch: int = 8, use_cap: bool = True,
           static_sl: int = 4, sl_max: int = 10, adaedl_base: int = 7,
           adaedl_threshold: float = 0.02, seed: int = 0,
-          max_seq_len: int = 512) -> Tuple[Dict, List[Request], ServingEngine]:
+          max_seq_len: int = 512,
+          goodput_draft_cost: Optional[float] = None
+          ) -> Tuple[Dict, List[Request], ServingEngine]:
+    extra = {}
+    if goodput_draft_cost is not None:
+        # the goodput controller's cost model should use the same pair
+        # cost ratio the latency_units report uses
+        extra["goodput_draft_cost"] = goodput_draft_cost
     spec = SpecDecodeConfig(policy=policy, temperature=temperature,
                             use_sl_cap=use_cap, static_sl=static_sl,
                             sl_max=sl_max, adaedl_base=adaedl_base,
                             adaedl_threshold=adaedl_threshold,
                             # miniature-regime KLD scales (DESIGN.md §3):
                             # scale-invariant SF keeps Eq. 2's dynamic range
-                            sf_normalize=True)
+                            sf_normalize=True, **extra)
     eng = ServingEngine(pt, cfg_t, pd, cfg_d, spec,
                         ServingConfig(max_batch_size=batch,
                                       max_seq_len=max_seq_len), seed=seed)

@@ -3,32 +3,52 @@
 Static-Aggressive (SL=8) vs Static-Conservative (SL=2) on a predictable
 ("code") and an unpredictable ("dialogue") workload — demonstrating that
 no single static SL serves both, the paper's core motivation.
+
+Any registered speculation policy can also be swept by name on the same
+heterogeneous workloads:
+
+    PYTHONPATH=src python -m benchmarks.table1_static_heterogeneous \
+        --policies dsde goodput adaedl
 """
 from __future__ import annotations
 
+import argparse
 import time
-from typing import List
+from typing import List, Optional, Sequence
 
 from benchmarks import common
 
 
-def run() -> List[str]:
+def run(policies: Optional[Sequence[str]] = None) -> List[str]:
     cfg_t, cfg_d, pt, pd, ratio = common.build_pair("llama")
     rows = []
+
+    def add_row(task, prompts, label, **serve_kw):
+        t0 = time.monotonic()
+        m, _, _ = common.serve(cfg_t, cfg_d, pt, pd, prompts, **serve_kw)
+        wall = (time.monotonic() - t0) * 1e6
+        lu = common.latency_units(m, ratio)
+        rows.append(common.row(
+            f"table1/{task}/{label}", wall,
+            f"latency_units={lu:.1f};BE={m['block_efficiency']:.2f};"
+            f"acc={m['mean_acceptance']:.2f}"))
+
     for task in ("code", "dialogue"):
         prompts = common.dataset(task).prompts(8, 16, seed=1)
         for label, sl in (("aggressive_sl8", 8), ("conservative_sl2", 2)):
-            t0 = time.monotonic()
-            m, _, _ = common.serve(cfg_t, cfg_d, pt, pd, prompts,
-                                   policy="static", static_sl=sl)
-            wall = (time.monotonic() - t0) * 1e6
-            lu = common.latency_units(m, ratio)
-            rows.append(common.row(
-                f"table1/{task}/{label}", wall,
-                f"latency_units={lu:.1f};BE={m['block_efficiency']:.2f};"
-                f"acc={m['mean_acceptance']:.2f}"))
+            add_row(task, prompts, label, policy="static", static_sl=sl)
+        # registry-driven sweep: any policy name the registry knows
+        for policy in (policies or ()):
+            add_row(task, prompts, policy, policy=policy,
+                    goodput_draft_cost=ratio)
     return rows
 
 
 if __name__ == "__main__":
-    print("\n".join(run()))
+    from repro.core.policies import available_policies
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--policies", nargs="*", default=[],
+                    choices=list(available_policies()),
+                    help="additional registered policies to sweep by name")
+    args = ap.parse_args()
+    print("\n".join(run(args.policies)))

@@ -73,7 +73,7 @@ def collect_signals(cfg_t, cfg_d, pt, pd, prompts, temperature, sl=4,
         # re-derive per-position stats from this round (entropies/accepts)
         acc = np.asarray(out.num_accepted)
         prop = np.asarray(out.num_proposed)
-        tel_kld = np.asarray(state2.adapter.mu_kld_last)
+        tel_kld = np.asarray(state2.policy_state.mu_kld_last)
         for i in range(b):
             for j in range(int(prop[i])):
                 recs["accept"].append(1.0 if j < acc[i] else 0.0)
@@ -83,7 +83,7 @@ def collect_signals(cfg_t, cfg_d, pt, pd, prompts, temperature, sl=4,
         # with the round-mean (the paper's token-level entropy uses the
         # same draft pass; we log the per-round mean entropy per position)
         state = state2
-        hist = hist.push(state.adapter.mu_kld_last, active)
+        hist = hist.push(state.policy_state.mu_kld_last, active)
     return recs
 
 

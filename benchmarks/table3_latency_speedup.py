@@ -47,9 +47,10 @@ def run() -> List[str]:
                                            ratio, temp)
         results = {"autoregressive": (lu_ar, m_ar),
                    f"static_opt_sl{sl_opt}": (lu_opt, m_opt)}
-        for policy in ("dsde", "adaedl"):
+        for policy in ("dsde", "adaedl", "goodput"):
             m, _, _ = common.serve(cfg_t, cfg_d, pt, pd, prompts,
-                                   policy=policy, temperature=temp)
+                                   policy=policy, temperature=temp,
+                                   goodput_draft_cost=ratio)
             results[policy] = (common.latency_units(m, ratio), m)
         wall = (time.monotonic() - t0) * 1e6
         for name, (lu, m) in results.items():

@@ -25,9 +25,9 @@ def run() -> List[str]:
         sl_opt, lu_opt, m_opt = static_opt(cfg_t, cfg_d, pt, pd, prompts,
                                            ratio, 0.0)
         per = {"static_opt": (lu_opt, m_opt)}
-        for policy in ("dsde", "adaedl"):
+        for policy in ("dsde", "adaedl", "goodput"):
             m, _, _ = common.serve(cfg_t, cfg_d, pt, pd, prompts,
-                                   policy=policy)
+                                   policy=policy, goodput_draft_cost=ratio)
             per[policy] = (common.latency_units(m, ratio), m)
         wall = (time.monotonic() - t0) * 1e6
         results[regime] = per
@@ -37,7 +37,7 @@ def run() -> List[str]:
                 f"latency_units={lu:.1f};acc={m['mean_acceptance']:.2f};"
                 f"k_opt={sl_opt}"))
     # percentile increment (paper Table 4): gemma latency / llama latency
-    for name in ("static_opt", "dsde", "adaedl"):
+    for name in ("static_opt", "dsde", "adaedl", "goodput"):
         inc = (results["gemma"][name][0] / results["llama"][name][0]) * 100
         rows.append(common.row(f"table4/increment/{name}", 0.0,
                                f"pct_of_llama={inc:.0f}%"))

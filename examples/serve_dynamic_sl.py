@@ -1,6 +1,7 @@
 """End-to-end serving driver (deliverable b): train a real target/draft
 pair, then serve a heterogeneous request stream with continuous batching,
-comparing all four SL policies.
+comparing all five registered SL policies (including the goodput
+controller added purely through the SpecPolicy API).
 
 This is the full paper pipeline at CPU scale: training-free calibration,
 per-sequence per-iteration SL from KLD-variance stability (WVIR), and the
@@ -35,11 +36,12 @@ def main():
               f"{'latency_units':>14s} {'speedup':>8s}")
     print(header)
     lu_ar = None
-    for policy in ("autoregressive", "static", "adaedl", "dsde"):
+    for policy in ("autoregressive", "static", "adaedl", "dsde", "goodput"):
         m, reqs, eng = common.serve(cfg_t, cfg_d, pt, pd, prompts,
-                                    policy=policy, max_new=48, batch=8)
+                                    policy=policy, max_new=48, batch=8,
+                                    goodput_draft_cost=ratio)
         lu = common.latency_units(m, ratio)
-        if policy == "autoregressive":
+        if policy == "autoregressive":   # the speedup baseline row
             lu_ar = lu
         print(f"{policy:16s} {m['rounds']:7d} {m['block_efficiency']:6.2f} "
               f"{m['mean_acceptance']:7.2f} {lu:14.1f} "

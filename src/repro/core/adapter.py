@@ -1,4 +1,7 @@
-"""The DSDE SL Adapter (paper §3.1) + baselines' SL policies.
+"""The DSDE SL Adapter math (paper §3.1) — Eq. 1-11 + the AdaEDL bound.
+
+This is the *numerical* library; the controller objects that plug it
+into the serving round live in :mod:`repro.core.policies` (DESIGN.md §6).
 
 Implements, per sequence and per iteration:
 
@@ -57,11 +60,10 @@ def init_adapter_state(batch: int, cfg: SpecDecodeConfig) -> AdapterState:
 def reset_rows(state: AdapterState, rows: jax.Array,
                cfg: SpecDecodeConfig) -> AdapterState:
     """Reset per-sequence adapter state for replaced slots."""
-    fresh = init_adapter_state(rows.shape[0], cfg)
-    return jax.tree_util.tree_map(
-        lambda f, s: jnp.where(
-            rows.reshape(rows.shape + (1,) * (s.ndim - 1)), f, s),
-        fresh, state)
+    # lazy import: policies sits above this numerical layer
+    from repro.core.policies.base import masked_row_reset
+    return masked_row_reset(init_adapter_state(rows.shape[0], cfg),
+                            state, rows)
 
 
 # ---------------------------------------------------------------------------

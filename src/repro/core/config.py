@@ -202,8 +202,11 @@ class ModelConfig:
 
 @dataclass(frozen=True)
 class SpecDecodeConfig:
-    """DSDE adapter configuration — defaults follow the paper exactly."""
-    # SL policy: "dsde" | "static" | "adaedl" | "autoregressive"
+    """DSDE adapter configuration — defaults follow the paper exactly.
+
+    ``policy`` names a registered :class:`repro.core.policies.SpecPolicy`
+    ("dsde" | "static" | "adaedl" | "autoregressive" | "goodput" | any
+    policy registered via ``repro.core.policies.register``)."""
     policy: str = "dsde"
     sl_min: int = 2                    # paper §3.1.2
     sl_max: int = 10                   # bucket upper bound; Eq.(1) calibrates
@@ -228,6 +231,13 @@ class SpecDecodeConfig:
     # bound drops below threshold; `adaedl_base` is the paper's base=7.
     adaedl_base: int = 7
     adaedl_threshold: float = 0.1
+    # Goodput controller (TurboSpec-style acceptance-EMA policy):
+    # EMA decay of the per-round acceptance fraction, the per-draft-step
+    # cost relative to one verification (in latency units), and the
+    # optimistic acceptance prior used before any observation.
+    goodput_ema: float = 0.75
+    goodput_draft_cost: float = 0.08
+    goodput_init_acc: float = 0.7
     # sampling
     temperature: float = 0.0           # 0.0 = greedy
     # penalty floor condition (Eq. 8): if SF*WVIR >= penalty_cutoff, SL=SL_min

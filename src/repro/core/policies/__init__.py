@@ -1,0 +1,28 @@
+"""Pluggable speculation policies (DESIGN.md §6).
+
+Importing this package registers the built-in policies:
+
+* ``dsde``            — paper §3.1-3.3 KLD-variance SL adaptation;
+* ``static``          — fixed SL baseline;
+* ``adaedl``          — entropy early-stop baseline;
+* ``autoregressive``  — no speculation (K = 0);
+* ``goodput``         — acceptance-EMA goodput controller (TurboSpec-style,
+  beyond-paper; built purely through this public API).
+
+Build one from a config with ``build_policy(spec)``; register new ones
+with ``@register("name")``.
+"""
+from repro.core.policies.base import (PolicyObservation, SpecPolicy,
+                                      available_policies, build_policy,
+                                      register)
+from repro.core.policies.adaedl import AdaEDLPolicy
+from repro.core.policies.autoregressive import AutoregressivePolicy
+from repro.core.policies.dsde import DSDEPolicy
+from repro.core.policies.goodput import GoodputPolicy, GoodputState
+from repro.core.policies.static import KLDTrackingPolicy, StaticPolicy
+
+__all__ = [
+    "AdaEDLPolicy", "AutoregressivePolicy", "DSDEPolicy", "GoodputPolicy",
+    "GoodputState", "KLDTrackingPolicy", "PolicyObservation", "SpecPolicy",
+    "StaticPolicy", "available_policies", "build_policy", "register",
+]

@@ -1,0 +1,41 @@
+"""AdaEDL baseline policy: entropy-based draft early stopping.
+
+Fixed base SL per round; drafting stops early when the entropy-based
+lower bound on token acceptance drops under the threshold (the only seed
+policy that exercises the ``draft_keep`` hook).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import adapter as adapter_lib
+from repro.core.policies.base import register
+from repro.core.policies.static import KLDTrackingPolicy
+from repro.core.signals import draft_entropy
+
+PyTree = Any
+
+
+@register("adaedl")
+@dataclasses.dataclass(frozen=True)
+class AdaEDLPolicy(KLDTrackingPolicy):
+    def initial_sl_value(self) -> int:
+        return self.spec.adaedl_base
+
+    def draft_keep(self, logits: jax.Array) -> jax.Array:
+        ent = draft_entropy(logits[:, None])[:, 0]
+        return adapter_lib.adaedl_stop_threshold(ent, self.spec)
+
+    def max_lookahead(self) -> int:
+        # pick_bucket floors K at sl_min (see StaticPolicy.max_lookahead)
+        return max(self.spec.adaedl_base, self.spec.sl_min) + 1
+
+    def predict(self, state: PyTree, active: jax.Array
+                ) -> Tuple[jax.Array, PyTree, Dict[str, jax.Array]]:
+        b = state.mu_kld_last.shape[0]
+        sl = jnp.full((b,), self.spec.adaedl_base, jnp.int32)
+        return sl, state, {"mean_kld": state.mu_kld_last}

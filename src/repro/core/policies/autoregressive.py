@@ -1,0 +1,39 @@
+"""Autoregressive baseline: no speculation at all (K = 0 every round).
+
+Stateless — the round degenerates to one target decode step per emitted
+token, the paper's plain-decoding comparison row.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.policies.base import SpecPolicy, register
+
+PyTree = Any
+
+
+@register("autoregressive")
+@dataclasses.dataclass(frozen=True)
+class AutoregressivePolicy(SpecPolicy):
+    def initial_sl_value(self) -> int:
+        return 0
+
+    def uses_draft(self) -> bool:
+        return False
+
+    def lookahead(self, sl: np.ndarray) -> np.ndarray:
+        # one decode slot per round, no speculative lookahead
+        return np.ones_like(np.asarray(sl))
+
+    def max_lookahead(self) -> int:
+        return 1
+
+    def predict(self, state: PyTree, active: jax.Array
+                ) -> Tuple[jax.Array, PyTree, Dict[str, jax.Array]]:
+        b = active.shape[0]
+        return jnp.zeros((b,), jnp.int32), state, {}

@@ -1,0 +1,181 @@
+"""The speculation-policy interface (DESIGN.md §6).
+
+DSDE's KLD-variance SL adaptation (paper §3.1-3.3) is one *policy* among
+several the paper benchmarks against.  This module defines the seam that
+lets new controllers — goodput-driven (TurboSpec-style), SLO-aware
+(SpecServe/AdaSpec-style), bandit-tuned, ... — plug into the serving
+stack without touching the jitted round:
+
+* :class:`SpecPolicy` — the interface.  A policy is a *frozen, hashable*
+  object built from a :class:`SpecDecodeConfig`, so it can ride along a
+  jit static argument: one XLA program per (policy-config, K) bucket,
+  never a per-step recompilation.
+* device-side hooks (``init_state`` / ``observe`` / ``predict`` /
+  ``draft_keep``) are traced into ``spec_decode_round``; the per-sequence
+  state they thread through :class:`RoundState` must be a pytree.
+* host-side hooks (``pick_bucket`` / ``lookahead`` / ``uses_draft``)
+  drive the engine's Python-side bucket choice and the scheduler's
+  admission capacity planning.  They consume **already-materialized
+  numpy arrays** — the engine transfers once per round, policies never
+  trigger their own device→host syncs.
+* a string registry (:func:`register` / :func:`build_policy`) keyed by
+  ``SpecDecodeConfig.policy`` so existing config strings keep working.
+
+Writing a new policy (see DESIGN.md §6 for the full guide)::
+
+    @register("my_policy")
+    @dataclasses.dataclass(frozen=True)
+    class MyPolicy(SpecPolicy):
+        def initial_sl_value(self):      return self.spec.static_sl
+        def init_state(self, batch):     return MyState(...)
+        def observe(self, state, obs):   return ...   # fold obs into state
+        def predict(self, state, active): return sl, state, telemetry
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple, Type
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.config import SpecDecodeConfig
+
+PyTree = Any
+
+
+def masked_row_reset(fresh: PyTree, state: PyTree, rows: jax.Array) -> PyTree:
+    """Replace rows of every leaf of ``state`` with ``fresh`` where the
+    [B] bool mask ``rows`` is set (slot replacement under continuous
+    batching).  The single implementation behind both
+    ``SpecPolicy.reset_rows`` and ``adapter_lib.reset_rows``."""
+    return jax.tree_util.tree_map(
+        lambda f, s: jnp.where(
+            rows.reshape(rows.shape + (1,) * (s.ndim - 1)), f, s),
+        fresh, state)
+
+
+class PolicyObservation(NamedTuple):
+    """Post-hoc statistics of one verification step (paper §3.1's lagging
+    diagnostic inputs), handed to ``SpecPolicy.observe``."""
+    kld: jax.Array             # [B, K]  per-position KL(target || draft)
+    proposed_valid: jax.Array  # [B, K]  bool, which positions were proposed
+    num_accepted: jax.Array    # [B]     accepted draft tokens this step
+    num_proposed: jax.Array    # [B]     proposed draft tokens this step
+    active: jax.Array          # [B]     bool, live request slots
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecPolicy:
+    """Per-sequence speculation-length controller.
+
+    Frozen (hashable) so instances can be jit static arguments; all
+    per-sequence mutable state lives in the pytree returned by
+    ``init_state`` and threaded through ``observe``/``predict``.
+    """
+
+    spec: SpecDecodeConfig
+
+    # ------------------------------------------------------- device-side
+    def init_state(self, batch: int) -> PyTree:
+        """Fresh per-sequence policy state (a pytree; ``()`` if stateless)."""
+        return ()
+
+    def initial_sl_value(self) -> int:
+        """SL a sequence starts with (host-side Python int)."""
+        raise NotImplementedError
+
+    def initial_sl(self, batch: int) -> jax.Array:
+        """[B] int32 initial SL vector (device-side)."""
+        return jnp.full((batch,), self.initial_sl_value(), jnp.int32)
+
+    def reset_rows(self, state: PyTree, rows: jax.Array) -> PyTree:
+        """Reset state rows where ``rows`` [B] is True (slot replacement)."""
+        return masked_row_reset(self.init_state(rows.shape[0]), state, rows)
+
+    def observe(self, state: PyTree, obs: PolicyObservation) -> PyTree:
+        """Fold one verification step's statistics into the state."""
+        return state
+
+    def predict(self, state: PyTree, active: jax.Array
+                ) -> Tuple[jax.Array, PyTree, Dict[str, jax.Array]]:
+        """Per-sequence SL for the next round.  ``active`` [B] bool is
+        always supplied by the round (it also fixes the batch size for
+        stateless policies).  Returns ``(sl [B] int32, new_state,
+        telemetry)``."""
+        raise NotImplementedError
+
+    def draft_keep(self, logits: jax.Array) -> Optional[jax.Array]:
+        """In-draft early stopping: given this step's draft logits [B, V],
+        return a bool [B] 'keep drafting' mask, or None for no early stop
+        (the default — the branch then traces away entirely)."""
+        return None
+
+    # --------------------------------------------------------- host-side
+    def uses_draft(self) -> bool:
+        """False => the engine never runs the draft model (K = 0)."""
+        return True
+
+    def lookahead(self, sl: np.ndarray) -> np.ndarray:
+        """KV slots each sequence needs next round: SL_i + 1 bonus token.
+        Consumed by ``LookaheadScheduler`` for per-round capacity planning
+        (paper §3.2's vLLM lookahead modification)."""
+        return np.asarray(sl) + 1
+
+    def max_lookahead(self) -> int:
+        """Worst-case KV slots any single round can consume under this
+        policy — the admission-time reservation.  The default covers
+        policies whose prediction can reach ``sl_max``; bounded policies
+        (static, adaedl, autoregressive) override with their tighter
+        bound."""
+        return self.spec.sl_max + 1
+
+    def pick_bucket(self, sl_next: np.ndarray, active: np.ndarray) -> int:
+        """Python-side draft bucket choice: K = max active SL prediction
+        (the paper's SL_max^(t) = max_i SL_i^(t) verification length).
+        ``sl_next`` / ``active`` are host arrays the engine materialized
+        once at the end of the previous round."""
+        if not self.uses_draft():
+            return 0
+        sl = np.asarray(sl_next)
+        act = np.asarray(active)
+        live = sl[act] if act.any() else sl
+        return int(max(live.max() if live.size else self.spec.sl_min,
+                       self.spec.sl_min))
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Type[SpecPolicy]] = {}
+
+
+def register(name: str) -> Callable[[Type[SpecPolicy]], Type[SpecPolicy]]:
+    """Class decorator: ``@register("dsde")`` binds the class to the
+    ``SpecDecodeConfig.policy`` string ``"dsde"``."""
+    def deco(cls: Type[SpecPolicy]) -> Type[SpecPolicy]:
+        _REGISTRY[name] = cls
+        return cls
+    return deco
+
+
+def available_policies() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def build_policy(spec: SpecDecodeConfig) -> SpecPolicy:
+    """Instantiate the policy named by ``spec.policy``.
+
+    ``SpecDecodeConfig`` is frozen/hashable and policy classes are frozen
+    dataclasses over it, so equal configs yield equal (interchangeable)
+    policies — safe to call at trace time inside a jitted function whose
+    static arguments include ``spec``."""
+    try:
+        cls = _REGISTRY[spec.policy]
+    except KeyError:
+        raise KeyError(
+            f"unknown speculation policy {spec.policy!r}; "
+            f"registered: {', '.join(available_policies())}") from None
+    return cls(spec)

@@ -1,0 +1,44 @@
+"""DSDE policy (paper §3.1-3.3): KLD-variance stability SL adaptation.
+
+The numerical core (Eq. 1-11) lives in :mod:`repro.core.adapter`; this
+class adapts it to the :class:`SpecPolicy` interface.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+
+from repro.core import adapter as adapter_lib
+from repro.core.policies.base import PolicyObservation, SpecPolicy, register
+
+PyTree = Any
+
+
+@register("dsde")
+@dataclasses.dataclass(frozen=True)
+class DSDEPolicy(SpecPolicy):
+    """Per-sequence per-iteration SL from the WVIR stability penalty."""
+
+    def init_state(self, batch: int) -> PyTree:
+        return adapter_lib.init_adapter_state(batch, self.spec)
+
+    def initial_sl_value(self) -> int:
+        # calibration phase runs the fixed calibration SL (Eq. 1)
+        return self.spec.calibration_sl
+
+    def observe(self, state: PyTree, obs: PolicyObservation) -> PyTree:
+        return adapter_lib.observe(
+            state, self.spec, kld=obs.kld, proposed_valid=obs.proposed_valid,
+            num_accepted=obs.num_accepted, active=obs.active)
+
+    def predict(self, state: PyTree, active: jax.Array
+                ) -> Tuple[jax.Array, PyTree, Dict[str, jax.Array]]:
+        sl, state, tel = adapter_lib.predict_sl(state, self.spec, active)
+        tel = dict(tel)
+        # post-observe value: the CURRENT round's mean KLD (the pre-policy
+        # round reported the previous round's — consumers of per-round
+        # telemetry logs should not expect the one-round lag)
+        tel["mean_kld"] = state.mu_kld_last
+        return sl, state, tel

@@ -1,0 +1,113 @@
+"""Goodput-driven speculation control (TurboSpec-style, beyond-paper).
+
+A fifth comparable built **entirely through the public SpecPolicy API** —
+no change to the jitted round, the engine, or the scheduler was needed to
+add it (the extensibility proof for the policy seam, DESIGN.md §6).
+
+Model: track a per-sequence EMA ``a`` of the draft-token acceptance rate.
+Under the standard i.i.d.-acceptance approximation (Leviathan et al.),
+drafting ``k`` tokens yields
+
+    E[accepted | k]  =  a (1 - a^k) / (1 - a)        (truncated geometric)
+    E[emitted  | k]  =  E[accepted | k] + 1          (bonus/recovery token)
+
+and one round costs ``1 + c*k`` in verification-equivalent units, where
+``c = goodput_draft_cost`` is the relative cost of a single draft step.
+The policy picks, per sequence and per round,
+
+    SL_i  =  argmax_k  E[emitted | k] / (1 + c*k),   k in [sl_min, sl_max]
+
+i.e. it *raises* SL while the running acceptance estimate says marginal
+draft tokens still pay for themselves and *lowers* it as acceptance
+degrades — goodput-maximizing speculation control in the spirit of
+TurboSpec's utilization-aware adjustment.  The argmax over the small
+static k-grid is vectorized and jits cleanly; state is a 3-leaf pytree.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import adapter as adapter_lib
+from repro.core.config import SpecDecodeConfig
+from repro.core.policies.base import PolicyObservation, SpecPolicy, register
+
+PyTree = Any
+
+
+def _goodput_curve(spec: SpecDecodeConfig, acc, xp):
+    """Goodput G[B, nK] over the static k-grid [sl_min .. sl_max].
+
+    ``xp`` is the array module — jnp inside the traced round, np for the
+    host-side initial-SL computation — so both paths share ONE formula."""
+    ks = xp.arange(spec.sl_min, spec.sl_max + 1)             # [nK]
+    a = xp.clip(acc, 1e-3, 0.999)[:, None]                   # [B, 1]
+    e_acc = a * (1.0 - a ** ks[None, :]) / (1.0 - a)         # [B, nK]
+    goodput = (1.0 + e_acc) / (1.0 + spec.goodput_draft_cost
+                               * ks[None, :].astype(xp.float32))
+    return ks, goodput
+
+
+@functools.lru_cache(maxsize=None)
+def _initial_sl_host(spec: SpecDecodeConfig) -> int:
+    """argmax SL at the optimistic acceptance prior — pure numpy (no
+    device dispatch: this runs in the admission/prefill hot path)."""
+    ks, g = _goodput_curve(
+        spec, np.array([spec.goodput_init_acc], np.float32), np)
+    return int(ks[int(np.argmax(g[0]))])
+
+
+class GoodputState(NamedTuple):
+    acc_ema: jax.Array    # [B] f32  EMA of per-round acceptance fraction
+    obs_count: jax.Array  # [B] int32 rounds folded in (0 = prior only)
+    sl_pred: jax.Array    # [B] int32 last prediction (telemetry / tests)
+
+
+@register("goodput")
+@dataclasses.dataclass(frozen=True)
+class GoodputPolicy(SpecPolicy):
+    def init_state(self, batch: int) -> PyTree:
+        return GoodputState(
+            acc_ema=jnp.full((batch,), self.spec.goodput_init_acc,
+                             jnp.float32),
+            obs_count=jnp.zeros((batch,), jnp.int32),
+            sl_pred=jnp.full((batch,), self.initial_sl_value(), jnp.int32))
+
+    def initial_sl_value(self) -> int:
+        # start from the optimistic prior's own argmax so the first rounds
+        # already speculate at the prior-implied depth
+        return _initial_sl_host(self.spec)
+
+    def observe(self, state: GoodputState, obs: PolicyObservation
+                ) -> GoodputState:
+        prop = obs.num_proposed.astype(jnp.float32)
+        took = (prop > 0) & obs.active
+        a_step = obs.num_accepted.astype(jnp.float32) / jnp.maximum(prop, 1.0)
+        d = self.spec.goodput_ema
+        ema = jnp.where(took, d * state.acc_ema + (1.0 - d) * a_step,
+                        state.acc_ema)
+        count = state.obs_count + took.astype(jnp.int32)
+        return state._replace(acc_ema=ema, obs_count=count)
+
+    def predict(self, state: GoodputState, active: jax.Array
+                ) -> Tuple[jax.Array, GoodputState, Dict[str, jax.Array]]:
+        sl = self._argmax_sl(state.acc_ema)
+        tel = {"acc_ema": state.acc_ema,
+               "goodput_sl_raw": sl.astype(jnp.float32)}
+        if self.spec.use_sl_cap:
+            capped, cap = adapter_lib.apply_sl_cap(
+                sl.astype(jnp.float32), self.spec, active)
+            sl = jnp.clip(jnp.round(capped), self.spec.sl_min,
+                          self.spec.sl_max).astype(jnp.int32)
+            tel["sl_cap"] = cap
+        return sl, state._replace(sl_pred=sl), tel
+
+    # ------------------------------------------------------------- internals
+    def _argmax_sl(self, acc: jax.Array) -> jax.Array:
+        ks, goodput = _goodput_curve(self.spec, acc, jnp)
+        return ks[jnp.argmax(goodput, axis=-1)].astype(jnp.int32)

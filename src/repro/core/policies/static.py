@@ -1,0 +1,49 @@
+"""Static-SL baseline policy (the paper's Static-Aggressive/Conservative).
+
+Keeps the full KLD observation state (``AdapterState``) even though the
+prediction is constant: the lagging diagnostics (``mu_kld_last``, WVIR
+history) stay available as telemetry, which Table 2's signal-correlation
+benchmark and the serving dashboards consume under a static policy.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+
+from repro.core import adapter as adapter_lib
+from repro.core.policies.base import PolicyObservation, SpecPolicy, register
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class KLDTrackingPolicy(SpecPolicy):
+    """Shared base for policies that keep the KLD diagnostics updated
+    (static, adaedl) without using them for prediction."""
+
+    def init_state(self, batch: int) -> PyTree:
+        return adapter_lib.init_adapter_state(batch, self.spec)
+
+    def observe(self, state: PyTree, obs: PolicyObservation) -> PyTree:
+        return adapter_lib.observe(
+            state, self.spec, kld=obs.kld, proposed_valid=obs.proposed_valid,
+            num_accepted=obs.num_accepted, active=obs.active)
+
+
+@register("static")
+@dataclasses.dataclass(frozen=True)
+class StaticPolicy(KLDTrackingPolicy):
+    def initial_sl_value(self) -> int:
+        return self.spec.static_sl
+
+    def max_lookahead(self) -> int:
+        # pick_bucket floors K at sl_min, so a round can write that many
+        # positions even when static_sl is smaller
+        return max(self.spec.static_sl, self.spec.sl_min) + 1
+
+    def predict(self, state: PyTree, active: jax.Array
+                ) -> Tuple[jax.Array, PyTree, Dict[str, jax.Array]]:
+        sl = adapter_lib.static_sl(state.mu_kld_last.shape[0], self.spec)
+        return sl, state, {"mean_kld": state.mu_kld_last}

@@ -8,16 +8,22 @@ CUDA-graph recapture problem, DESIGN.md §3):
   1. draft loop   — K single-token decode steps of the draft model
                     (``lax.scan`` with the draft KV/state cache in carry);
                     per-sequence validity ``j < sl_i`` implements ragged SL
-                    inside the fixed bucket.  AdaEDL's entropy early-stop
-                    folds in here as a dynamic ``sl_i`` shrink.
+                    inside the fixed bucket.  Policies may shrink ``sl_i``
+                    dynamically via the ``draft_keep`` hook (AdaEDL's
+                    entropy early stop).
   2. verification — ONE target forward over [pending, d_1..d_K]
                     (T = K+1) against the target cache.
   3. rejection    — exact batched ragged rejection sampling.
-  4. post-hoc     — KLD per proposed position -> adapter.observe
+  4. post-hoc     — KLD per proposed position -> policy.observe
                     (DSDE's lagging diagnostic signal).
   5. commit       — caches advance by exactly 1 + n_accepted tokens
                     (KV: length arithmetic; recurrent: masked re-advance).
-  6. predict      — adapter.predict_sl (+ SL_cap) for the next round.
+  6. predict      — policy.predict (+ SL_cap) for the next round.
+
+All SL-control behaviour is delegated to a :class:`SpecPolicy`
+(``repro/core/policies``) resolved from ``spec.policy`` at trace time:
+``spec`` is a jit static argument, so each (policy-config, K) pair traces
+exactly one XLA program and the policy dispatch costs nothing at runtime.
 
 The engine in ``repro/serving`` strings rounds together and handles
 request lifecycles / continuous batching.
@@ -29,15 +35,15 @@ from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core import adapter as adapter_lib
-from repro.core.adapter import AdapterState
 from repro.core.config import ModelConfig, SpecDecodeConfig
+from repro.core.policies import PolicyObservation, SpecPolicy, build_policy
 from repro.core.rejection import RejectionResult, rejection_sample
 from repro.core.sampling import sample_token
-from repro.core.signals import draft_entropy, kld_per_position
+from repro.core.signals import kld_per_position
 from repro.models import cache as cache_lib
-from repro.models.transformer import commit, forward, has_recurrent_state
+from repro.models.transformer import commit, forward
 
 PyTree = Any
 
@@ -46,7 +52,7 @@ class RoundState(NamedTuple):
     """Carried across rounds by the serving engine."""
     target_cache: PyTree
     draft_cache: PyTree
-    adapter: AdapterState
+    policy_state: PyTree       # the SpecPolicy's per-sequence state pytree
     pending: jax.Array         # [B] last emitted token, not yet in caches
     sl_next: jax.Array         # [B] per-sequence SL for the next round
     key: jax.Array
@@ -61,13 +67,14 @@ class RoundOutput(NamedTuple):
 
 
 def _draft_loop(params_d: PyTree, cfg_d: ModelConfig, state: RoundState,
-                k: int, sl_i: jax.Array, spec: SpecDecodeConfig,
+                k: int, sl_i: jax.Array, policy: SpecPolicy,
                 key: jax.Array
                 ) -> Tuple[jax.Array, jax.Array, PyTree, jax.Array]:
     """K+1 draft decode steps (the final step only writes the last draft
     token's KV so the cache is complete on total acceptance).  Returns
     (draft_tokens [B,K], draft_logits [B,K,V], new_draft_cache, eff_sl)."""
     b = state.pending.shape[0]
+    spec = policy.spec
 
     def step(carry, j):
         cache, tok, stop, eff = carry
@@ -76,9 +83,8 @@ def _draft_loop(params_d: PyTree, cfg_d: ModelConfig, state: RoundState,
         lj = logits[:, 0]
         kj = jax.random.fold_in(key, j)
         nxt = sample_token(kj, lj, spec.temperature, cfg_d.vocab_size)
-        if spec.policy == "adaedl":
-            ent = draft_entropy(lj[:, None])[:, 0]
-            keep = adapter_lib.adaedl_stop_threshold(ent, spec)
+        keep = policy.draft_keep(lj)
+        if keep is not None:       # in-draft early stop (trace-time branch)
             stop = stop | ~keep
         live = (j < sl_i) & (j < k) & ~stop
         eff = eff + live.astype(jnp.int32)
@@ -110,6 +116,7 @@ def spec_decode_round(params_t: PyTree, params_d: PyTree,
     """One full speculative round with draft bucket size ``k``.
 
     ``active [B]`` masks live request slots (continuous batching)."""
+    policy = build_policy(spec)     # trace-time: spec is static
     key, k_draft, k_rej = jax.random.split(state.key, 3)
     b = state.pending.shape[0]
     pad_id = cfg_t.vocab_size  # reserved padding token id (paper §3.2)
@@ -119,9 +126,9 @@ def spec_decode_round(params_t: PyTree, params_d: PyTree,
     # --- 1. draft -----------------------------------------------------------
     if k > 0:
         draft_tokens, draft_logits, draft_cache, eff_sl = _draft_loop(
-            params_d, cfg_d, state, k, sl_i, spec, k_draft)
-        sl_i = jnp.minimum(sl_i, eff_sl)  # AdaEDL early stop shrinks here
-    else:  # autoregressive baseline: no draft at all
+            params_d, cfg_d, state, k, sl_i, policy, k_draft)
+        sl_i = jnp.minimum(sl_i, eff_sl)  # draft_keep early stop shrinks here
+    else:  # no-draft bucket (autoregressive policy, or an all-idle batch)
         draft_tokens = jnp.zeros((b, 0), jnp.int32)
         draft_cache = state.draft_cache
         eff_sl = jnp.zeros((b,), jnp.int32)
@@ -154,9 +161,10 @@ def spec_decode_round(params_t: PyTree, params_d: PyTree,
         kld = kld_per_position(t_logits[:, :k], dl, proposed)   # [B, K]
     else:
         kld = jnp.zeros((b, 0), jnp.float32)
-    new_adapter = adapter_lib.observe(
-        state.adapter, spec, kld=kld, proposed_valid=proposed,
-        num_accepted=rej.num_accepted, active=active)
+    obs = PolicyObservation(
+        kld=kld, proposed_valid=proposed, num_accepted=rej.num_accepted,
+        num_proposed=sl_i, active=active)
+    new_pstate = policy.observe(state.policy_state, obs)
 
     # --- 5. commit ------------------------------------------------------------
     n_committed = (1 + rej.num_accepted) * active.astype(jnp.int32)
@@ -165,26 +173,14 @@ def spec_decode_round(params_t: PyTree, params_d: PyTree,
     if k > 0:
         d_cache = commit(params_d, cfg_d, verify_tokens, state.draft_cache,
                          draft_cache, n_committed)
-    else:  # autoregressive baseline never consults the draft model
+    else:  # the draft model was never consulted
         d_cache = state.draft_cache
 
     # --- 6. predict next SL ----------------------------------------------------
-    if spec.policy == "dsde":
-        sl_next, new_adapter, tel = adapter_lib.predict_sl(
-            new_adapter, spec, active)
-    elif spec.policy == "static":
-        sl_next = adapter_lib.static_sl(b, spec)
-        tel = {}
-    elif spec.policy == "adaedl":
-        sl_next = jnp.full((b,), spec.adaedl_base, jnp.int32)
-        tel = {}
-    else:  # autoregressive
-        sl_next = jnp.zeros((b,), jnp.int32)
-        tel = {}
+    sl_next, new_pstate, telemetry = policy.predict(new_pstate, active)
 
-    telemetry = {"mean_kld": state.adapter.mu_kld_last, **tel}
     new_state = RoundState(
-        target_cache=t_cache, draft_cache=d_cache, adapter=new_adapter,
+        target_cache=t_cache, draft_cache=d_cache, policy_state=new_pstate,
         pending=jnp.where(active, rej.next_token, state.pending),
         sl_next=sl_next, key=key)
     out = RoundOutput(
@@ -200,28 +196,23 @@ def init_round_state(cfg_t: ModelConfig, cfg_d: ModelConfig,
                      spec: SpecDecodeConfig, batch: int, max_len: int,
                      key: jax.Array, dtype=jnp.float32,
                      enc_len: Optional[int] = None) -> RoundState:
+    policy = build_policy(spec)
     t_cache = cache_lib.cache_struct(cfg_t, batch, max_len, dtype,
                                      enc_len=enc_len)
     d_cache = cache_lib.cache_struct(cfg_d, batch, max_len, dtype,
                                      enc_len=enc_len)
-    sl0 = (spec.calibration_sl if spec.policy == "dsde"
-           else spec.static_sl if spec.policy == "static"
-           else spec.adaedl_base if spec.policy == "adaedl" else 0)
     return RoundState(
         target_cache=t_cache, draft_cache=d_cache,
-        adapter=adapter_lib.init_adapter_state(batch, spec),
+        policy_state=policy.init_state(batch),
         pending=jnp.zeros((batch,), jnp.int32),
-        sl_next=jnp.full((batch,), sl0, jnp.int32),
+        sl_next=policy.initial_sl(batch),
         key=key)
 
 
 def pick_bucket(sl_next, spec: SpecDecodeConfig, active) -> int:
-    """Python-side bucket choice: K = max active SL prediction (the paper's
-    SL_max^(t) = max_i SL_i^(t) verification length)."""
-    import numpy as np
-    sl = np.asarray(sl_next)
-    act = np.asarray(active)
-    if spec.policy == "autoregressive":
-        return 0
-    live = sl[act] if act.any() else sl
-    return int(max(live.max() if live.size else spec.sl_min, spec.sl_min))
+    """Python-side bucket choice, delegated to the policy.  Prefer calling
+    ``policy.pick_bucket`` directly with pre-materialized host arrays (the
+    engine does); this wrapper keeps the historical (sl, spec, active)
+    signature for scripts and tests."""
+    return build_policy(spec).pick_bucket(np.asarray(sl_next),
+                                          np.asarray(active))

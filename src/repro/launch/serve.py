@@ -25,8 +25,9 @@ def main() -> None:
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--demo", action="store_true",
                     help="run the CPU serving demo on the reduced config")
+    from repro.core.policies import available_policies
     ap.add_argument("--policy", default="dsde",
-                    choices=["dsde", "static", "adaedl", "autoregressive"])
+                    choices=list(available_policies()))
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=32)
     args = ap.parse_args()

@@ -358,6 +358,25 @@ def _zero_aux(cfg: ModelConfig) -> dict:
     return {}
 
 
+# ``optimization_barrier`` has no differentiation rule; wrap it in an
+# identity custom_vjp so the barrier still pins the remat stash layout on
+# the forward pass while gradients flow straight through on the backward.
+@jax.custom_vjp
+def _stash_barrier(x: jax.Array) -> jax.Array:
+    return jax.lax.optimization_barrier(x)
+
+
+def _stash_barrier_fwd(x):
+    return jax.lax.optimization_barrier(x), None
+
+
+def _stash_barrier_bwd(_, g):
+    return (g,)
+
+
+_stash_barrier.defvjp(_stash_barrier_fwd, _stash_barrier_bwd)
+
+
 def _scan_stack(params: PyTree, cfg: ModelConfig, x: jax.Array,
                 stacked_cache: Optional[PyTree], ctx: dict, remat: bool
                 ) -> Tuple[jax.Array, Optional[PyTree], dict]:
@@ -370,7 +389,7 @@ def _scan_stack(params: PyTree, cfg: ModelConfig, x: jax.Array,
         # barrier keeps the remat stash in the carry's own dtype (bf16):
         # without it XLA saves the f32 rmsnorm-converted copy of every
         # layer input (2x stash memory, measured in the dry-run)
-        xc = jax.lax.optimization_barrier(xc)
+        xc = _stash_barrier(xc)
         xc, c_new, aux = block(p_l, cfg, xc, c_l, ctx)
         if ctx.get("act_sharding") is not None:
             # sequence-parallel residual stream between blocks: bounds the

@@ -21,9 +21,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import adapter as adapter_lib
 from repro.core import spec_decode as sd
 from repro.core.config import (ModelConfig, ServingConfig, SpecDecodeConfig)
+from repro.core.policies import build_policy
 from repro.core.sampling import sample_token
 from repro.models import cache as cache_lib
 from repro.models.transformer import forward
@@ -75,13 +75,20 @@ class ServingEngine:
         self.pt, self.cfg_t = params_target, cfg_target
         self.pd, self.cfg_d = params_draft, cfg_draft
         self.spec = spec
+        self.policy = build_policy(spec)
         self.serving = serving
-        self.scheduler = LookaheadScheduler(serving, spec)
+        self.scheduler = LookaheadScheduler(serving, spec,
+                                            policy=self.policy)
         self.key = jax.random.PRNGKey(seed)
         b = serving.max_batch_size
         self.state = sd.init_round_state(
             cfg_target, cfg_draft, spec, b, serving.max_seq_len,
             self._next_key())
+        # host-side mirror of state.sl_next, refreshed once per round while
+        # the round's other outputs are already being transferred — the
+        # bucket choice never triggers its own device->host sync.
+        self._sl_next_host = np.full((b,), self.policy.initial_sl_value(),
+                                     np.int32)
         # telemetry
         self._finished_at_prefill = []
         self.rounds = 0
@@ -134,13 +141,12 @@ class ServingEngine:
             req.state = RequestState.FINISHED
             req.finish_time = req.first_token_time
         rows = jnp.zeros((self.serving.max_batch_size,), bool).at[slot].set(True)
-        ad = adapter_lib.reset_rows(st.adapter, rows, self.spec)
-        sl0 = st.sl_next.at[slot].set(
-            self.spec.calibration_sl if self.spec.policy == "dsde"
-            else self.spec.static_sl if self.spec.policy == "static"
-            else self.spec.adaedl_base if self.spec.policy == "adaedl" else 0)
+        ps = self.policy.reset_rows(st.policy_state, rows)
+        sl0_val = self.policy.initial_sl_value()
+        sl0 = st.sl_next.at[slot].set(sl0_val)
+        self._sl_next_host[slot] = sl0_val
         self.state = st._replace(
-            target_cache=tc, draft_cache=dc, adapter=ad,
+            target_cache=tc, draft_cache=dc, policy_state=ps,
             pending=st.pending.at[slot].set(pend), sl_next=sl0)
 
     # ------------------------------------------------------------------ step
@@ -153,8 +159,9 @@ class ServingEngine:
         running = self.scheduler.running
         if not running:
             return finished_early
-        active = jnp.asarray(self.scheduler.active_mask)
-        k = sd.pick_bucket(self.state.sl_next, self.spec, active)
+        active_mask = self.scheduler.active_mask
+        active = jnp.asarray(active_mask)
+        k = self.policy.pick_bucket(self._sl_next_host, active_mask)
         self.state, out = sd.spec_decode_round(
             self.pt, self.pd, self.cfg_t, self.cfg_d, self.spec, k,
             self.state, active)
@@ -165,13 +172,15 @@ class ServingEngine:
         n_emit = np.asarray(out.num_emitted)
         n_acc = np.asarray(out.num_accepted)
         n_prop = np.asarray(out.num_proposed)
+        self._sl_next_host = np.array(self.state.sl_next)   # writable copy
+        self.scheduler.update_predictions(self._sl_next_host)
         if k > 0:
             self.draft_steps_effective += int(n_prop.max()) + 1
-        self.round_log.append({
+        round_rec = {
             "k": k,
-            "emitted": float(n_emit[self.scheduler.active_mask].sum()),
+            "emitted": float(n_emit[active_mask].sum()),
             "accepted": float(n_acc.sum()), "proposed": float(n_prop.sum()),
-        })
+        }
 
         finished = finished_early
         now = time.monotonic()
@@ -197,6 +206,13 @@ class ServingEngine:
             if req.done:
                 self.scheduler.release(req)
                 finished.append(req)
+        # per-sequence KV slots the policy plans for the NEXT round — the
+        # capacity-planning view of intra-batch heterogeneity.  Logged
+        # after release so just-finished slots are not counted.
+        round_rec["lookahead"] = float(
+            self.scheduler.lookahead_slots()[self.scheduler.active_mask]
+            .sum())
+        self.round_log.append(round_rec)
         return finished
 
     # ------------------------------------------------------------------- run

@@ -6,38 +6,67 @@ the paper describes ("removes inconsistencies between feasibility checks
 and append operations and aligns capacity planning with intra-batch
 heterogeneity").
 
+Capacity planning is policy-owned on both horizons:
+
+* **admission** reserves ``SpecPolicy.max_lookahead()`` — the worst-case
+  KV slots one round can write under that policy (1 for autoregressive,
+  ``static_sl + 1`` for static, ``sl_max + 1`` for dynamic policies) —
+  so a new policy gets correct admission behaviour for free;
+* **per-round planning** exposes ``SpecPolicy.lookahead`` over the live
+  per-sequence SL predictions the engine mirrors to the host each round
+  (``lookahead_slots``), surfacing intra-batch heterogeneity in the
+  engine's round telemetry.
+
 The scheduler owns: the waiting queue, the slot table, and the admission
-decision (does the remaining KV budget of a slot cover prompt + lookahead
-+ max_new_tokens?).
+decision (does the remaining KV budget of a slot cover prompt +
+worst-case lookahead + max_new_tokens?).
 """
 from __future__ import annotations
 
 import collections
-from typing import Dict, List, Optional
+from typing import List, Optional
 
 import numpy as np
 
 from repro.core.config import ServingConfig, SpecDecodeConfig
+from repro.core.policies import SpecPolicy, build_policy
 from repro.serving.request import Request, RequestState
 
 
 class LookaheadScheduler:
-    def __init__(self, serving: ServingConfig, spec: SpecDecodeConfig):
+    def __init__(self, serving: ServingConfig, spec: SpecDecodeConfig,
+                 policy: Optional[SpecPolicy] = None):
         self.serving = serving
         self.spec = spec
+        self.policy = policy if policy is not None else build_policy(spec)
         self.queue: collections.deque[Request] = collections.deque()
         self.slots: List[Optional[Request]] = [None] * serving.max_batch_size
+        # latest per-slot SL predictions (host mirror, engine-refreshed)
+        self.sl_pred = np.full((serving.max_batch_size,),
+                               self.policy.initial_sl_value(), np.int32)
 
     # ------------------------------------------------------------- admission
     def submit(self, req: Request) -> None:
         self.queue.append(req)
 
-    def lookahead_slots(self, sl_next: np.ndarray) -> np.ndarray:
-        """KV slots each sequence needs next round: SL_i + 1 (bonus)."""
-        return sl_next + 1
+    def update_predictions(self, sl_next: np.ndarray) -> None:
+        """Engine hook: refresh the host mirror of per-sequence SL
+        predictions after each round (copied — the scheduler owns its
+        mirror, never aliasing the engine's)."""
+        self.sl_pred = np.array(sl_next)
+
+    def lookahead_slots(self, sl_next: Optional[np.ndarray] = None
+                        ) -> np.ndarray:
+        """KV slots each sequence needs next round, per the policy."""
+        sl = self.sl_pred if sl_next is None else np.asarray(sl_next)
+        return self.policy.lookahead(sl)
 
     def _fits(self, req: Request) -> bool:
-        need = len(req.prompt) + req.max_new_tokens + self.spec.sl_max + 1
+        # admission must reserve the policy's WORST-case round footprint:
+        # a dynamic policy admitted at its initial SL can later predict up
+        # to its max, and the verification write would overrun the KV row
+        need = (len(req.prompt) + req.max_new_tokens
+                + self.policy.max_lookahead())
         return need <= self.serving.max_seq_len
 
     def free_slots(self) -> List[int]:

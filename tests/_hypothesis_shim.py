@@ -1,0 +1,98 @@
+"""Deterministic offline fallback for the ``hypothesis`` API surface the
+tier-1 suite uses (``given`` / ``settings`` / a handful of strategies).
+
+The container has no network access, so ``hypothesis`` may be absent; the
+property tests then still run as seeded random sweeps: each ``@given``
+test executes ``max_examples`` drawn examples from a fixed-seed RNG,
+always starting with the strategies' boundary values.  This is weaker
+than real shrinking-capable property testing but keeps every property
+exercised offline.  When ``hypothesis`` is importable the test modules
+use it directly and this module is never imported.
+"""
+from __future__ import annotations
+
+import zlib
+from typing import Any, Callable, List
+
+import numpy as np
+
+
+class _Strategy:
+    """A strategy is (boundary examples, random draw function)."""
+
+    def __init__(self, boundary: List[Any],
+                 draw: Callable[[np.random.RandomState], Any]):
+        self.boundary = boundary
+        self.draw = draw
+
+
+class strategies:
+    """Mirror of ``hypothesis.strategies`` for the subset the suite uses."""
+
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy([min_value, max_value],
+                         lambda r: int(r.randint(min_value, max_value + 1)))
+
+    @staticmethod
+    def floats(min_value: float, max_value: float) -> _Strategy:
+        return _Strategy(
+            [min_value, max_value],
+            lambda r: float(r.uniform(min_value, max_value)))
+
+    @staticmethod
+    def sampled_from(elements) -> _Strategy:
+        elements = list(elements)
+        return _Strategy([elements[0], elements[-1]],
+                         lambda r: elements[int(r.randint(len(elements)))])
+
+    @staticmethod
+    def lists(elem: _Strategy, min_size: int = 0,
+              max_size: int = 10) -> _Strategy:
+        def draw(r: np.random.RandomState):
+            n = int(r.randint(min_size, max_size + 1))
+            return [elem.draw(r) for _ in range(n)]
+        boundary = [[elem.boundary[0]] * max(min_size, 1),
+                    [elem.boundary[-1]] * max(min_size, 1)]
+        return _Strategy(boundary, draw)
+
+
+st = strategies
+
+
+def settings(max_examples: int = 10, deadline=None, **_kw):
+    """Decorator recording the example budget for ``given`` to pick up."""
+    def deco(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats: _Strategy):
+    """Run the test once per drawn example (boundaries first, then seeded
+    random draws up to the ``settings`` budget)."""
+    def deco(fn):
+        def wrapper(*args, **kwargs):
+            # read the budget lazily so BOTH decorator orders work (real
+            # hypothesis accepts @settings above or below @given)
+            max_examples = getattr(wrapper, "_shim_max_examples",
+                                   getattr(fn, "_shim_max_examples", 10))
+            # crc32, NOT hash(): str hashes are randomized per process
+            rng = np.random.RandomState(
+                zlib.crc32(fn.__qualname__.encode()) % (2 ** 31))
+            n_boundary = min(len(s.boundary) for s in strats)
+            for i in range(max(max_examples, n_boundary)):
+                if i < n_boundary:
+                    example = [s.boundary[i] for s in strats]
+                else:
+                    example = [s.draw(rng) for s in strats]
+                fn(*args, *example, **kwargs)
+
+        # no functools.wraps: pytest would read the wrapped signature and
+        # treat the drawn parameters as fixtures
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+    return deco

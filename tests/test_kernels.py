@@ -5,7 +5,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:   # offline container: deterministic fallback
+    from _hypothesis_shim import given, settings, strategies as st
 
 from repro.kernels import ref
 from repro.kernels.kld_accept import fused_kld_accept

@@ -1,0 +1,306 @@
+"""Tests for the pluggable speculation-policy API (repro/core/policies).
+
+Covers: registry round-trips, per-policy observe/predict state-shape
+invariants, jit-compatibility (no recompilation across rounds at a fixed
+(policy, K) bucket), scheduler lookahead routing, and an engine smoke
+test per registered policy.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import spec_decode as sd
+from repro.core.config import ServingConfig, SpecDecodeConfig
+from repro.core.policies import (GoodputPolicy, PolicyObservation, SpecPolicy,
+                                 available_policies, build_policy, register)
+from repro.models.module import init_params
+from repro.models.transformer import forward, model_specs
+from repro.serving.engine import ServingEngine
+from repro.serving.request import Request
+from repro.serving.scheduler import LookaheadScheduler
+
+jax.config.update("jax_platform_name", "cpu")
+
+KEY = jax.random.PRNGKey(0)
+ALL_POLICIES = ("adaedl", "autoregressive", "dsde", "goodput", "static")
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+def test_registry_lists_builtin_policies():
+    assert set(ALL_POLICIES) <= set(available_policies())
+
+
+@pytest.mark.parametrize("name", ALL_POLICIES)
+def test_build_policy_round_trip(name):
+    spec = SpecDecodeConfig(policy=name)
+    pol = build_policy(spec)
+    assert isinstance(pol, SpecPolicy)
+    assert pol.spec.policy == name
+    # frozen + hashable: usable inside a jit static argument
+    assert hash(pol) == hash(build_policy(spec))
+    assert pol == build_policy(spec)
+
+
+def test_build_policy_unknown_name_raises():
+    with pytest.raises(KeyError, match="registered"):
+        build_policy(SpecDecodeConfig(policy="nope"))
+
+
+def test_register_custom_policy():
+    @register("_test_fixed3")
+    @dataclasses.dataclass(frozen=True)
+    class Fixed3(SpecPolicy):
+        def initial_sl_value(self):
+            return 3
+
+        def predict(self, state, active=None):
+            return jnp.full((active.shape[0],), 3, jnp.int32), state, {}
+
+    try:
+        pol = build_policy(SpecDecodeConfig(policy="_test_fixed3"))
+        assert pol.initial_sl_value() == 3
+        assert "_test_fixed3" in available_policies()
+    finally:
+        from repro.core.policies import base
+        base._REGISTRY.pop("_test_fixed3", None)
+
+
+# ---------------------------------------------------------------------------
+# State-shape invariants
+# ---------------------------------------------------------------------------
+
+def _fake_obs(b, k, seed=0):
+    rng = np.random.RandomState(seed)
+    prop = rng.randint(0, k + 1, size=b).astype(np.int32)
+    valid = np.arange(k)[None, :] < prop[:, None]
+    acc = np.minimum(rng.randint(0, k + 1, size=b), prop).astype(np.int32)
+    return PolicyObservation(
+        kld=jnp.asarray(rng.rand(b, k).astype(np.float32)),
+        proposed_valid=jnp.asarray(valid),
+        num_accepted=jnp.asarray(acc),
+        num_proposed=jnp.asarray(prop),
+        active=jnp.ones((b,), bool))
+
+
+@pytest.mark.parametrize("name", ALL_POLICIES)
+def test_observe_predict_state_invariants(name):
+    b, k = 4, 5
+    spec = SpecDecodeConfig(policy=name)
+    pol = build_policy(spec)
+    state = pol.init_state(b)
+    struct0 = jax.tree_util.tree_structure(state)
+    shapes0 = [l.shape for l in jax.tree_util.tree_leaves(state)]
+
+    sl0 = pol.initial_sl(b)
+    assert sl0.shape == (b,) and sl0.dtype == jnp.int32
+
+    state = pol.observe(state, _fake_obs(b, k))
+    sl, state, tel = pol.predict(state, jnp.ones((b,), bool))
+
+    # state keeps its pytree structure and leaf shapes across the cycle
+    assert jax.tree_util.tree_structure(state) == struct0
+    assert [l.shape for l in jax.tree_util.tree_leaves(state)] == shapes0
+    # prediction is a well-formed per-sequence SL vector
+    assert sl.shape == (b,) and sl.dtype == jnp.int32
+    assert bool((sl >= 0).all()) and bool((sl <= spec.sl_max).all())
+    assert isinstance(tel, dict)
+
+
+@pytest.mark.parametrize("name", ALL_POLICIES)
+def test_reset_rows_restores_fresh_state(name):
+    b, k = 3, 4
+    pol = build_policy(SpecDecodeConfig(policy=name))
+    state = pol.observe(pol.init_state(b), _fake_obs(b, k, seed=3))
+    rows = jnp.array([True, False, True])
+    reset = pol.reset_rows(state, rows)
+    fresh = pol.init_state(b)
+    for r, s, f in zip(jax.tree_util.tree_leaves(reset),
+                       jax.tree_util.tree_leaves(state),
+                       jax.tree_util.tree_leaves(fresh)):
+        np.testing.assert_array_equal(np.asarray(r[0]), np.asarray(f[0]))
+        np.testing.assert_array_equal(np.asarray(r[1]), np.asarray(s[1]))
+
+
+# ---------------------------------------------------------------------------
+# Goodput controller behaviour
+# ---------------------------------------------------------------------------
+
+def test_goodput_sl_monotone_in_acceptance():
+    pol = build_policy(SpecDecodeConfig(policy="goodput", use_sl_cap=False))
+    state = pol.init_state(3)
+    state = state._replace(acc_ema=jnp.array([0.05, 0.5, 0.95]))
+    sl, _, _ = pol.predict(state, jnp.ones((3,), bool))
+    sl = np.asarray(sl)
+    assert sl[0] <= sl[1] <= sl[2]
+    assert sl[0] == pol.spec.sl_min       # hopeless draft -> floor
+    assert sl[2] > sl[0]                  # great draft -> deeper speculation
+
+
+def test_goodput_ema_update():
+    spec = SpecDecodeConfig(policy="goodput", goodput_ema=0.5,
+                            goodput_init_acc=0.8)
+    pol = build_policy(spec)
+    state = pol.init_state(2)
+    obs = PolicyObservation(
+        kld=jnp.zeros((2, 4), jnp.float32),
+        proposed_valid=jnp.ones((2, 4), bool),
+        num_accepted=jnp.array([4, 0], jnp.int32),
+        num_proposed=jnp.array([4, 0], jnp.int32),   # seq1 proposed nothing
+        active=jnp.ones((2,), bool))
+    state = pol.observe(state, obs)
+    # seq0: 0.5*0.8 + 0.5*1.0 = 0.9; seq1 unchanged (nothing proposed)
+    assert float(state.acc_ema[0]) == pytest.approx(0.9)
+    assert float(state.acc_ema[1]) == pytest.approx(0.8)
+    assert int(state.obs_count[0]) == 1 and int(state.obs_count[1]) == 0
+
+
+def test_goodput_cost_sensitivity():
+    """A more expensive draft step should never raise the chosen SL."""
+    cheap = GoodputPolicy(SpecDecodeConfig(policy="goodput",
+                                           goodput_draft_cost=0.01,
+                                           use_sl_cap=False))
+    dear = GoodputPolicy(SpecDecodeConfig(policy="goodput",
+                                          goodput_draft_cost=0.5,
+                                          use_sl_cap=False))
+    acc = jnp.array([0.3, 0.6, 0.9])
+    sl_cheap, _, _ = cheap.predict(
+        cheap.init_state(3)._replace(acc_ema=acc), jnp.ones((3,), bool))
+    sl_dear, _, _ = dear.predict(
+        dear.init_state(3)._replace(acc_ema=acc), jnp.ones((3,), bool))
+    assert np.all(np.asarray(sl_dear) <= np.asarray(sl_cheap))
+
+
+# ---------------------------------------------------------------------------
+# Host-side hooks: pick_bucket / lookahead / scheduler routing
+# ---------------------------------------------------------------------------
+
+def test_pick_bucket_per_policy():
+    sl = np.array([2, 7, 4])
+    act = np.array([True, True, True])
+    assert build_policy(SpecDecodeConfig(policy="dsde",
+                                         sl_min=2)).pick_bucket(sl, act) == 7
+    assert build_policy(SpecDecodeConfig(policy="dsde", sl_min=2)).pick_bucket(
+        sl, np.array([True, False, True])) == 4
+    assert build_policy(SpecDecodeConfig(
+        policy="autoregressive")).pick_bucket(sl, act) == 0
+
+
+def test_sd_pick_bucket_wrapper_back_compat():
+    spec = SpecDecodeConfig(policy="dsde", sl_min=2)
+    assert sd.pick_bucket(jnp.array([2, 7, 4]), spec,
+                          jnp.array([True, True, True])) == 7
+
+
+def test_policy_max_lookahead_bounds():
+    assert build_policy(SpecDecodeConfig(
+        policy="autoregressive")).max_lookahead() == 1
+    assert build_policy(SpecDecodeConfig(
+        policy="static", static_sl=4)).max_lookahead() == 5
+    assert build_policy(SpecDecodeConfig(
+        policy="adaedl", adaedl_base=7)).max_lookahead() == 8
+    # dynamic policies can grow to sl_max — admission must reserve that
+    assert build_policy(SpecDecodeConfig(
+        policy="dsde", sl_max=10)).max_lookahead() == 11
+    assert build_policy(SpecDecodeConfig(
+        policy="goodput", sl_max=10)).max_lookahead() == 11
+
+
+def test_scheduler_admission_uses_policy_lookahead():
+    serving = ServingConfig(max_batch_size=2, max_seq_len=64)
+    ar = LookaheadScheduler(serving, SpecDecodeConfig(policy="autoregressive"))
+    dsde = LookaheadScheduler(serving, SpecDecodeConfig(policy="dsde"))
+    # per-round planning view: policy lookahead over live SL predictions
+    np.testing.assert_array_equal(ar.lookahead_slots(np.array([0, 0])),
+                                  [1, 1])
+    np.testing.assert_array_equal(dsde.lookahead_slots(np.array([5, 3])),
+                                  [6, 4])
+    # admission reserves the worst case: prompt 33 + max_new 30 -> 64
+    # under AR (max_lookahead 1), 74 under dsde (max_lookahead 11)
+    fits_ar = Request(0, prompt=[1] * 33, max_new_tokens=30)
+    fits_dsde = Request(1, prompt=[1] * 33, max_new_tokens=30)
+    ar.submit(fits_ar), dsde.submit(fits_dsde)
+    assert len(ar.admit()) == 1
+    assert len(dsde.admit()) == 0          # rejected: over KV budget
+
+
+# ---------------------------------------------------------------------------
+# jit-compatibility + engine smoke
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def pair():
+    cfg = get_config("smollm-135m").reduced()
+    pt = init_params(model_specs(cfg), jax.random.PRNGKey(1), jnp.float32)
+    noise = init_params(model_specs(cfg), jax.random.PRNGKey(9), jnp.float32)
+    pd = jax.tree_util.tree_map(lambda a, b: a + 0.04 * b, pt, noise)
+    return cfg, pt, pd
+
+
+def _ready_state(cfg, pt, pd, batch, prompt_len, spec):
+    st = sd.init_round_state(cfg, cfg, spec, batch, 128, KEY)
+    toks = jax.random.randint(KEY, (batch, prompt_len), 0, cfg.vocab_size)
+    lt, tc, _ = forward(pt, cfg, toks, cache=st.target_cache, mode="prefill")
+    _, dc, _ = forward(pd, cfg, toks, cache=st.draft_cache, mode="prefill")
+    tc = dict(tc); tc["length"] = jnp.full((batch,), prompt_len, jnp.int32)
+    dc = dict(dc); dc["length"] = jnp.full((batch,), prompt_len, jnp.int32)
+    pend = jnp.argmax(lt[:, -1, :cfg.vocab_size], -1).astype(jnp.int32)
+    return st._replace(target_cache=tc, draft_cache=dc, pending=pend)
+
+
+@pytest.mark.parametrize("name", ALL_POLICIES)
+def test_round_no_recompile_at_fixed_bucket(pair, name):
+    """Consecutive rounds at the same (policy, K) reuse one XLA program."""
+    cfg, pt, pd = pair
+    spec = SpecDecodeConfig(policy=name, temperature=0.0)
+    st = _ready_state(cfg, pt, pd, 2, 8, spec)
+    active = jnp.ones((2,), bool)
+    k = max(4, sd.pick_bucket(st.sl_next, spec, active))
+    if not build_policy(spec).uses_draft():
+        k = 0
+    st, _ = sd.spec_decode_round(pt, pd, cfg, cfg, spec, k, st, active)
+    before = sd.spec_decode_round._cache_size()
+    for _ in range(3):
+        st, _ = sd.spec_decode_round(pt, pd, cfg, cfg, spec, k, st, active)
+    assert sd.spec_decode_round._cache_size() == before
+
+
+@pytest.mark.parametrize("name", ALL_POLICIES)
+def test_engine_smoke_per_policy(pair, name):
+    cfg, pt, pd = pair
+    rng = np.random.RandomState(0)
+    spec = SpecDecodeConfig(policy=name, temperature=0.0)
+    eng = ServingEngine(pt, cfg, pd, cfg, spec,
+                        ServingConfig(max_batch_size=2, max_seq_len=128))
+    reqs = [Request(i, prompt=rng.randint(0, cfg.vocab_size, size=6).tolist(),
+                    max_new_tokens=8) for i in range(3)]
+    m = eng.run(reqs)
+    assert m["requests_finished"] == 3
+    assert all(len(r.output) == 8 for r in reqs)
+    assert all(0 <= t < cfg.vocab_size for r in reqs for t in r.output)
+
+
+def test_goodput_greedy_exactness(pair):
+    """The new policy inherits spec decoding's exactness guarantee: greedy
+    output equals the target's greedy rollout."""
+    cfg, pt, pd = pair
+    prompt = list(range(1, 9))
+    n_new = 16
+    toks = list(prompt)
+    for _ in range(n_new):
+        lg, _, _ = forward(pt, cfg, jnp.asarray([toks], jnp.int32),
+                           mode="train")
+        toks.append(int(jnp.argmax(lg[0, -1, :cfg.vocab_size])))
+    ref = toks[len(prompt):]
+    spec = SpecDecodeConfig(policy="goodput", temperature=0.0)
+    eng = ServingEngine(pt, cfg, pd, cfg, spec,
+                        ServingConfig(max_batch_size=1, max_seq_len=128))
+    req = Request(0, prompt=prompt, max_new_tokens=n_new)
+    eng.run([req])
+    assert req.output == ref
