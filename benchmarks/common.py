@@ -135,7 +135,10 @@ def serve(cfg_t, cfg_d, pt, pd, prompts: List[List[int]], *,
           static_sl: int = 4, sl_max: int = 10, adaedl_base: int = 7,
           adaedl_threshold: float = 0.02, seed: int = 0,
           max_seq_len: int = 512,
-          goodput_draft_cost: Optional[float] = None
+          goodput_draft_cost: Optional[float] = None,
+          max_new_per_req: Optional[List[int]] = None,
+          paged: bool = False, kv_block_size: int = 16,
+          num_kv_blocks: Optional[int] = None
           ) -> Tuple[Dict, List[Request], ServingEngine]:
     extra = {}
     if goodput_draft_cost is not None:
@@ -151,8 +154,15 @@ def serve(cfg_t, cfg_d, pt, pd, prompts: List[List[int]], *,
                             sf_normalize=True, **extra)
     eng = ServingEngine(pt, cfg_t, pd, cfg_d, spec,
                         ServingConfig(max_batch_size=batch,
-                                      max_seq_len=max_seq_len), seed=seed)
-    reqs = [Request(i, prompt=p, max_new_tokens=max_new)
+                                      max_seq_len=max_seq_len,
+                                      paged_kv=paged,
+                                      kv_block_size=kv_block_size,
+                                      num_kv_blocks=num_kv_blocks),
+                        seed=seed)
+    reqs = [Request(i, prompt=p,
+                    max_new_tokens=(max_new_per_req[i]
+                                    if max_new_per_req is not None
+                                    else max_new))
             for i, p in enumerate(prompts)]
     metrics = eng.run(reqs)
     return metrics, reqs, eng

@@ -13,7 +13,7 @@ import sys
 import time
 import traceback
 
-SUITES = ("table1", "table2", "table3", "table4", "fig6", "fig9",
+SUITES = ("table1", "table2", "table3", "table4", "table5", "fig6", "fig9",
           "roofline")
 
 
@@ -32,6 +32,8 @@ def main() -> None:
                 from benchmarks.table3_latency_speedup import run
             elif suite == "table4":
                 from benchmarks.table4_low_acceptance import run
+            elif suite == "table5":
+                from benchmarks.table5_paged_capacity import run
             elif suite == "fig6":
                 from benchmarks.fig6_sensitivity import run
             elif suite == "fig9":

@@ -1,0 +1,92 @@
+"""Paged vs dense KV capacity on a heterogeneous-length workload.
+
+Dense admission plans by pessimism: every slot reserves a full
+``max_seq_len`` KV row, so the number of *concurrent* sequences is
+``total_kv_bytes / (max_seq_len * row_bytes)`` no matter how short the
+requests actually are.  The block-paged data plane charges each sequence
+only the blocks it currently needs (``committed + SL_i + 1``, grown per
+round from the policy's lookahead), so the same bytes pack far more
+in-flight sequences.
+
+Three engines serve the identical request mix (a few long-prompt/long-gen
+requests among many short ones, the paper's serving heterogeneity):
+
+* ``dense_full``  — dense rows, batch B             (KV budget = 100%)
+* ``paged_half``  — block pool sized at 50% of dense_full's KV bytes,
+  same B slots: admits and completes the whole mix concurrently,
+  preempting instead of rejecting if pressure spikes
+* ``dense_half``  — dense rows at the same 50% byte budget, i.e. B/2
+  slots: the only way dense can shed bytes is shedding concurrency, so
+  half the mix queues behind the other half
+
+Rows report completed/rejected counts, rounds, per-round batch
+efficiency, and the pool telemetry (`kv_blocks_in_use` peaks) that the
+round log now records for memory-vs-throughput plots.
+
+    PYTHONPATH=src python -m benchmarks.table5_paged_capacity
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+from benchmarks import common
+
+MAX_SEQ = 256
+BATCH = 8
+BLOCK = 16
+
+
+def workload():
+    """Heterogeneous mix: 4 long-prompt/long-gen + 8 short requests, all
+    wanting to run *concurrently* — the regime where dense admission's
+    worst-case row reservation, not compute, caps the batch."""
+    long_p = common.dataset("news").prompts(4, 96, seed=3)
+    short_p = common.dataset("code").prompts(8, 16, seed=4)
+    prompts = long_p + short_p
+    max_new = [64] * len(long_p) + [32] * len(short_p)
+    return prompts, max_new
+
+
+def run() -> List[str]:
+    cfg_t, cfg_d, pt, pd, ratio = common.build_pair("llama")
+    prompts, max_new = workload()
+    dense_blocks = BATCH * (MAX_SEQ // BLOCK)          # 100% KV budget
+    rows = []
+
+    def add_row(label, **kw):
+        t0 = time.monotonic()
+        m, reqs, eng = common.serve(cfg_t, cfg_d, pt, pd, prompts,
+                                    max_new_per_req=max_new,
+                                    max_seq_len=MAX_SEQ, **kw)
+        wall = (time.monotonic() - t0) * 1e6
+        lu = common.latency_units(m, ratio)
+        incomplete = sum(1 for r in reqs
+                         if len(r.output) < r.max_new_tokens
+                         and (r.eos_token_id is None
+                              or (r.output and r.output[-1] != r.eos_token_id)))
+        rows.append(common.row(
+            f"table5/{label}", wall,
+            f"finished={m['requests_finished']};"
+            f"rejected={m['requests_rejected']};"
+            f"preempt={m['preemptions']};rounds={m['rounds']};"
+            f"latency_units={lu:.1f};"
+            f"tok_per_round={m['batch_tokens_per_round']:.2f};"
+            f"kv_blocks={m['kv_blocks_peak']:.0f}/{m['kv_pool_blocks']:.0f};"
+            f"incomplete={incomplete}"))
+        return m
+
+    add_row(f"dense_full_b{BATCH}", batch=BATCH)
+    m_paged = add_row(f"paged_half_b{BATCH}", batch=BATCH, paged=True,
+                      kv_block_size=BLOCK, num_kv_blocks=dense_blocks // 2)
+    add_row(f"dense_half_b{BATCH // 2}", batch=BATCH // 2)
+
+    # the demonstration the ISSUE asks for: at <= 50% of the dense KV
+    # bytes the paged engine still completes the whole mix
+    assert m_paged["kv_pool_blocks"] <= dense_blocks / 2
+    assert m_paged["requests_finished"] == len(prompts)
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

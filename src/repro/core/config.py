@@ -254,6 +254,27 @@ class ServingConfig:
     eos_token_id: int = 1
     # continuous batching: admit new requests when slots free up.
     continuous_batching: bool = True
+    # --- paged KV cache (DESIGN.md §4) ---------------------------------
+    # block-pool KV layout: sequences hold block tables into a shared
+    # pool instead of one dense max_seq_len row per slot; admission is
+    # by free-block budget and the scheduler preempts (evict + requeue,
+    # recompute on readmit) instead of rejecting when the pool runs dry.
+    paged_kv: bool = False
+    kv_block_size: int = 16
+    # pool size in blocks; None = dense-equivalent capacity
+    # (max_batch_size rows of max_seq_len).  Size below that to pack
+    # more sequences per byte of HBM than dense rows ever could.
+    num_kv_blocks: Optional[int] = None
+
+    def blocks_per_seq(self) -> int:
+        """Block-table width: worst-case blocks one sequence can hold."""
+        return -(-self.max_seq_len // self.kv_block_size)
+
+    def pool_blocks(self) -> int:
+        """Resolved pool size in blocks."""
+        if self.num_kv_blocks is not None:
+            return self.num_kv_blocks
+        return self.max_batch_size * self.blocks_per_seq()
 
 
 # ---------------------------------------------------------------------------

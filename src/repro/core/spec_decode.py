@@ -49,7 +49,14 @@ PyTree = Any
 
 
 class RoundState(NamedTuple):
-    """Carried across rounds by the serving engine."""
+    """Carried across rounds by the serving engine.
+
+    With a paged serving configuration the cache pytrees are block-paged
+    (``models/cache.py``): they carry the shared KV pools plus the
+    per-sequence ``block_table`` rows the allocator maintains, so block
+    tables ride through the jitted round with no extra plumbing —
+    rollback stays pure length arithmetic and freed speculative blocks
+    simply return to the pool on the host side."""
     target_cache: PyTree
     draft_cache: PyTree
     policy_state: PyTree       # the SpecPolicy's per-sequence state pytree
@@ -68,7 +75,7 @@ class RoundOutput(NamedTuple):
 
 def _draft_loop(params_d: PyTree, cfg_d: ModelConfig, state: RoundState,
                 k: int, sl_i: jax.Array, policy: SpecPolicy,
-                key: jax.Array
+                key: jax.Array, active: jax.Array
                 ) -> Tuple[jax.Array, jax.Array, PyTree, jax.Array]:
     """K+1 draft decode steps (the final step only writes the last draft
     token's KV so the cache is complete on total acceptance).  Returns
@@ -78,8 +85,12 @@ def _draft_loop(params_d: PyTree, cfg_d: ModelConfig, state: RoundState,
 
     def step(carry, j):
         cache, tok, stop, eff = carry
+        # paged caches: step j writes position len+j, needed only up to
+        # the committed horizon (j <= SL_i); inactive rows never write
+        wm = ((j <= sl_i) & active)[:, None]
         logits, cache, _ = forward(params_d, cfg_d, tok[:, None],
-                                   cache=cache, mode="decode")
+                                   cache=cache, mode="decode",
+                                   write_mask=wm)
         lj = logits[:, 0]
         kj = jax.random.fold_in(key, j)
         nxt = sample_token(kj, lj, spec.temperature, cfg_d.vocab_size)
@@ -126,7 +137,7 @@ def spec_decode_round(params_t: PyTree, params_d: PyTree,
     # --- 1. draft -----------------------------------------------------------
     if k > 0:
         draft_tokens, draft_logits, draft_cache, eff_sl = _draft_loop(
-            params_d, cfg_d, state, k, sl_i, policy, k_draft)
+            params_d, cfg_d, state, k, sl_i, policy, k_draft, active)
         sl_i = jnp.minimum(sl_i, eff_sl)  # draft_keep early stop shrinks here
     else:  # no-draft bucket (autoregressive policy, or an all-idle batch)
         draft_tokens = jnp.zeros((b, 0), jnp.int32)
@@ -143,8 +154,13 @@ def spec_decode_round(params_t: PyTree, params_d: PyTree,
     # --- 2. verification ----------------------------------------------------
     verify_tokens = jnp.concatenate(
         [state.pending[:, None], safe_drafts], axis=1)          # [B, K+1]
+    # paged caches: verification writes positions len..len+K; only
+    # j <= SL_i can ever be committed, so the rest never leaves the
+    # sequence's own block budget (dense rings ignore the mask)
+    verify_wm = (jnp.arange(k + 1)[None] <= sl_i[:, None]) & active[:, None]
     t_logits, t_cache_v, _ = forward(params_t, cfg_t, verify_tokens,
-                                     cache=state.target_cache, mode="decode")
+                                     cache=state.target_cache, mode="decode",
+                                     write_mask=verify_wm)
 
     # --- 3. rejection sampling ----------------------------------------------
     if k > 0:
@@ -195,8 +211,24 @@ def spec_decode_round(params_t: PyTree, params_d: PyTree,
 def init_round_state(cfg_t: ModelConfig, cfg_d: ModelConfig,
                      spec: SpecDecodeConfig, batch: int, max_len: int,
                      key: jax.Array, dtype=jnp.float32,
-                     enc_len: Optional[int] = None) -> RoundState:
+                     enc_len: Optional[int] = None,
+                     paged: Optional[Tuple[int, int]] = None) -> RoundState:
+    """``paged=(num_blocks, block_size)`` builds block-paged caches for
+    both models: one allocator decision covers a block id in the target
+    pool and the same id in the draft pool (the tables mirror)."""
     policy = build_policy(spec)
+    if paged is not None:
+        n_blocks, bs = paged
+        t_cache = cache_lib.paged_cache_struct(cfg_t, batch, max_len,
+                                               n_blocks, bs, dtype)
+        d_cache = cache_lib.paged_cache_struct(cfg_d, batch, max_len,
+                                               n_blocks, bs, dtype)
+        return RoundState(
+            target_cache=t_cache, draft_cache=d_cache,
+            policy_state=policy.init_state(batch),
+            pending=jnp.zeros((batch,), jnp.int32),
+            sl_next=policy.initial_sl(batch),
+            key=key)
     t_cache = cache_lib.cache_struct(cfg_t, batch, max_len, dtype,
                                      enc_len=enc_len)
     d_cache = cache_lib.cache_struct(cfg_d, batch, max_len, dtype,

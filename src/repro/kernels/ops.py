@@ -14,11 +14,18 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.kld_accept import fused_kld_accept
-from repro.kernels.ragged_attention import ragged_verify_attention
+from repro.kernels.ragged_attention import (paged_ragged_verify_attention,
+                                            ragged_verify_attention)
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def on_tpu() -> bool:
+    """Trace-time backend check the model layer uses to pick between the
+    Pallas data plane and the XLA reference path."""
+    return _on_tpu()
 
 
 def ragged_attention(q: jax.Array, k_buf: jax.Array, v_buf: jax.Array,
@@ -34,6 +41,23 @@ def ragged_attention(q: jax.Array, k_buf: jax.Array, v_buf: jax.Array,
             else not _on_tpu())
     return ref.ragged_verify_attention_ref(q, k_buf, v_buf, q_pos, kv_pos,
                                            window=window)
+
+
+def paged_ragged_attention(q: jax.Array, pool_k: jax.Array,
+                           pool_v: jax.Array, block_table: jax.Array,
+                           q_pos: jax.Array, kv_pos: jax.Array, *,
+                           window: Optional[int] = None,
+                           force_kernel: bool = False,
+                           interpret: Optional[bool] = None) -> jax.Array:
+    """Decode/verify attention straight off the block-paged KV pool."""
+    if _on_tpu() or force_kernel:
+        return paged_ragged_verify_attention(
+            q, pool_k, pool_v, block_table, q_pos, kv_pos, window=window,
+            interpret=bool(interpret) if interpret is not None
+            else not _on_tpu())
+    return ref.paged_ragged_verify_attention_ref(q, pool_k, pool_v,
+                                                 block_table, q_pos, kv_pos,
+                                                 window=window)
 
 
 def kld_accept_signals(target_logits: jax.Array, draft_logits: jax.Array,

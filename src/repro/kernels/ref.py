@@ -34,6 +34,28 @@ def ragged_verify_attention_ref(q: jax.Array, k_buf: jax.Array,
     return out.reshape(b, t, h, d).astype(q.dtype)
 
 
+def paged_ragged_verify_attention_ref(q: jax.Array, pool_k: jax.Array,
+                                      pool_v: jax.Array,
+                                      block_table: jax.Array,
+                                      q_pos: jax.Array, kv_pos: jax.Array,
+                                      window: Optional[int] = None
+                                      ) -> jax.Array:
+    """Oracle for the block-paged kernel: gather each sequence's view out
+    of the pool through its block table, then run the dense oracle.
+
+    pool_k/pool_v [N, BS, KV, D]; block_table [B, MAXB] (-1 =
+    unallocated); kv_pos [N, BS] pool-level (-1 = empty)."""
+    b, maxb = block_table.shape
+    bs = pool_k.shape[1]
+    idx = jnp.maximum(block_table, 0)
+    k_view = pool_k[idx].reshape((b, maxb * bs) + pool_k.shape[2:])
+    v_view = pool_v[idx].reshape((b, maxb * bs) + pool_v.shape[2:])
+    pos = jnp.where((block_table >= 0)[:, :, None], kv_pos[idx], -1)
+    pos_view = pos.reshape(b, maxb * bs)
+    return ragged_verify_attention_ref(q, k_view, v_view, q_pos, pos_view,
+                                       window=window)
+
+
 def kld_accept_ref(target_logits: jax.Array, draft_logits: jax.Array,
                    draft_tokens: jax.Array
                    ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:

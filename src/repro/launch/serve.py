@@ -30,6 +30,9 @@ def main() -> None:
                     choices=list(available_policies()))
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--paged", action="store_true",
+                    help="serve from the block-paged KV pool at half the "
+                         "dense engine's KV bytes (DESIGN.md §4)")
     args = ap.parse_args()
 
     if args.demo:
@@ -49,9 +52,14 @@ def main() -> None:
         noise = init_params(model_specs(cfg), jax.random.PRNGKey(7),
                             jnp.float32)
         pd = jax.tree_util.tree_map(lambda a, b: a + 0.03 * b, pt, noise)
+        serving = ServingConfig(max_batch_size=4, max_seq_len=256)
+        if args.paged:
+            serving = ServingConfig(
+                max_batch_size=4, max_seq_len=256, paged_kv=True,
+                kv_block_size=16,
+                num_kv_blocks=4 * (256 // 16) // 2)   # 50% of dense bytes
         eng = ServingEngine(pt, cfg, pd, cfg,
-                            SpecDecodeConfig(policy=args.policy),
-                            ServingConfig(max_batch_size=4, max_seq_len=256))
+                            SpecDecodeConfig(policy=args.policy), serving)
         rng = np.random.RandomState(0)
         reqs = [Request(i, prompt=rng.randint(
             0, cfg.vocab_size, size=rng.randint(6, 20)).tolist(),

@@ -1,18 +1,34 @@
-"""Decode-time caches: ring-buffer KV + recurrent state.
+"""Decode-time caches: ring-buffer / block-paged KV + recurrent state.
 
 One cache pytree per model instance.  Common fields:
 
 * ``length [B]``   — number of tokens whose KV/state is *committed*.
-* ``kv_pos [B, W]`` — absolute sequence index stored in each ring slot
+* ``kv_pos`` — absolute sequence index stored in each KV slot
   (-1 = never written).  Validity of a slot for a query at position ``q`` is
   ``0 <= kv_pos <= q`` (and ``q - kv_pos < window`` for windowed layers).
   Rollback after speculative verification is therefore *free* for KV layers:
   resetting ``length`` masks the stale slots (see DESIGN.md §4).
 
-The ring buffer (slot = pos % W) makes windowed caches O(window) instead of
-O(seq): ``long_500k`` decode for SWA/hybrid archs holds a 2–4k ring, not a
-524k buffer.  Correctness requires window >> SL_max so one speculation
-round can never wrap past its own rollback horizon (asserted at build).
+Two physical KV layouts share those semantics:
+
+* **dense ring** (``kv_pos [B, W]``) — one W-wide row per batch slot,
+  slot = pos % W.  The ring makes windowed caches O(window) instead of
+  O(seq): ``long_500k`` decode for SWA/hybrid archs holds a 2–4k ring,
+  not a 524k buffer.  Correctness requires window >> SL_max so one
+  speculation round can never wrap past its own rollback horizon.
+* **block-paged pool** (``paged_cache_struct``) — a shared pool
+  ``[L, n_blocks, block_size, KV, D]`` plus per-sequence block tables
+  ``[B, max_blocks]`` (-1 = unallocated) and pool-level
+  ``kv_pos [n_blocks, block_size]``.  Position ``p`` of sequence ``b``
+  lives at physical slot ``block_table[b, p // bs] * bs + p % bs`` — a
+  *stable* mapping while the blocks stay allocated, so the dense
+  overwrite-or-mask rollback argument carries over unchanged and commit
+  stays pure length arithmetic.  Writes through an unallocated table
+  entry are dropped; the serving-side allocator grows tables on demand
+  and resets ``kv_pos`` of a block to -1 on (re)allocation so a block
+  recycled from another sequence can never leak stale-but-causally-valid
+  entries.  SSM / RG-LRU recurrent state is O(1) per sequence and stays
+  dense per-slot in both layouts.
 """
 from __future__ import annotations
 
@@ -83,9 +99,7 @@ def cache_struct(cfg: ModelConfig, batch: int, max_len: int,
         c["conv"] = mk((cfg.num_layers, batch, cfg.ssm.conv_width - 1, dc), dtype)
     elif fam == "hybrid":
         w = _local_window(cfg, max_len)
-        n_attn = sum(1 for i in range(cfg.num_layers)
-                     if hybrid_layer_is_attention(cfg, i))
-        n_rec = cfg.num_layers - n_attn
+        n_attn, n_rec = hybrid_layer_counts(cfg)
         c["k"] = mk(kv_buf_shape(cfg, batch, w, n_attn), dtype)
         c["v"] = mk(kv_buf_shape(cfg, batch, w, n_attn), dtype)
         c["kv_pos"] = mk_pos((batch, w))
@@ -111,8 +125,190 @@ def hybrid_layer_is_attention(cfg: ModelConfig, i: int) -> bool:
     return i % (cfg.rglru.blocks_per_attention + 1) == cfg.rglru.blocks_per_attention
 
 
+def hybrid_layer_counts(cfg: ModelConfig) -> Tuple[int, int]:
+    """(n_attention, n_recurrent) layers of a hybrid stack — the single
+    source for every cache builder's layer-axis sizes."""
+    n_attn = sum(1 for i in range(cfg.num_layers)
+                 if hybrid_layer_is_attention(cfg, i))
+    return n_attn, cfg.num_layers - n_attn
+
+
 def cache_window(cache: CacheT) -> int:
     return cache["kv_pos"].shape[-1]
+
+
+# ---------------------------------------------------------------------------
+# Block-paged layout
+# ---------------------------------------------------------------------------
+
+def supports_paged(cfg: ModelConfig) -> bool:
+    """Families whose attention KV can live in the shared block pool.
+    SSM is attention-free; audio's cross-KV is per-request encoder state."""
+    return cfg.family in ("dense", "moe", "vlm", "hybrid")
+
+
+def is_paged(cache: CacheT) -> bool:
+    return "block_table" in cache
+
+
+def max_blocks_per_seq(max_len: int, block_size: int) -> int:
+    return -(-max_len // block_size)
+
+
+def pool_buf_shape(cfg: ModelConfig, num_blocks: int, block_size: int,
+                   layers: int) -> Tuple[int, ...]:
+    return (layers, num_blocks, block_size, eff_kv_heads(cfg),
+            cfg.resolved_head_dim)
+
+
+def paged_cache_struct(cfg: ModelConfig, batch: int, max_len: int,
+                       num_blocks: int, block_size: int,
+                       dtype=jnp.bfloat16, abstract: bool = False) -> CacheT:
+    """Block-paged cache pytree: shared KV pool + per-sequence tables.
+
+    ``k``/``v`` are pools ``[L, n_blocks, bs, KV, D]`` (the same leading
+    layer axis the dense layout scans over), ``kv_pos [n_blocks, bs]`` is
+    pool-level, ``block_table [B, max_blocks]`` maps logical to physical
+    blocks (-1 = unallocated).  Recurrent state (hybrid lru/conv) stays
+    dense per-slot.
+    """
+    if not supports_paged(cfg):
+        raise ValueError(f"family {cfg.family!r} has no paged KV layout")
+    assert num_blocks * block_size >= max_len, (
+        "pool smaller than one max-length sequence: "
+        f"{num_blocks}x{block_size} < {max_len}")
+
+    def mk(shape, dt):
+        if abstract:
+            return jax.ShapeDtypeStruct(shape, dt)
+        return jnp.zeros(shape, dt)
+
+    def mk_neg(shape):
+        if abstract:
+            return jax.ShapeDtypeStruct(shape, jnp.int32)
+        return jnp.full(shape, -1, jnp.int32)
+
+    maxb = max_blocks_per_seq(max_len, block_size)
+    c: CacheT = {"length": mk((batch,), jnp.int32),
+                 "kv_pos": mk_neg((num_blocks, block_size)),
+                 "block_table": mk_neg((batch, maxb))}
+    if cfg.family == "hybrid":
+        n_attn, n_rec = hybrid_layer_counts(cfg)
+        c["k"] = mk(pool_buf_shape(cfg, num_blocks, block_size, n_attn), dtype)
+        c["v"] = mk(pool_buf_shape(cfg, num_blocks, block_size, n_attn), dtype)
+        c["lru"] = mk((n_rec, batch, cfg.rglru.lru_width), jnp.float32)
+        c["conv"] = mk((n_rec, batch, cfg.rglru.conv_width - 1,
+                        cfg.rglru.lru_width), dtype)
+    else:
+        c["k"] = mk(pool_buf_shape(cfg, num_blocks, block_size,
+                                   cfg.num_layers), dtype)
+        c["v"] = mk(pool_buf_shape(cfg, num_blocks, block_size,
+                                   cfg.num_layers), dtype)
+    return c
+
+
+def paged_prefill_view(cfg: ModelConfig, pool_k: jax.Array,
+                       pool_v: jax.Array, kv_pos: jax.Array,
+                       table_row: jax.Array) -> CacheT:
+    """Batch-1 paged cache view over the *shared* pools, for prefilling
+    one request straight into its allocated blocks: pool-shaped leaves
+    alias the live pools, per-sequence leaves (length, block table,
+    hybrid recurrent rows) are fresh batch-1 rows the engine scatters
+    back into the batched cache afterwards."""
+    c: CacheT = {"length": jnp.zeros((1,), jnp.int32),
+                 "k": pool_k, "v": pool_v, "kv_pos": kv_pos,
+                 "block_table": table_row}
+    if cfg.family == "hybrid":
+        _, n_rec = hybrid_layer_counts(cfg)
+        c["lru"] = jnp.zeros((n_rec, 1, cfg.rglru.lru_width), jnp.float32)
+        c["conv"] = jnp.zeros((n_rec, 1, cfg.rglru.conv_width - 1,
+                               cfg.rglru.lru_width), pool_k.dtype)
+    return c
+
+
+def _paged_flat_index(positions: jax.Array, block_table: jax.Array,
+                      block_size: int, num_blocks: int,
+                      keep: Optional[jax.Array]) -> jax.Array:
+    """[B,T] positions -> flat pool slot via the table; out-of-range,
+    unallocated, or ``~keep`` entries map past the pool (scatter-dropped)."""
+    maxb = block_table.shape[1]
+    blk = positions // block_size
+    phys = jnp.take_along_axis(block_table, jnp.clip(blk, 0, maxb - 1),
+                               axis=1)
+    ok = (positions >= 0) & (blk < maxb) & (phys >= 0)
+    if keep is not None:
+        ok = ok & keep
+    return jnp.where(ok, phys * block_size + positions % block_size,
+                     num_blocks * block_size)
+
+
+def write_kv_paged(pool_k: jax.Array, pool_v: jax.Array, k_new: jax.Array,
+                   v_new: jax.Array, positions: jax.Array,
+                   block_table: jax.Array,
+                   keep: Optional[jax.Array] = None
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Scatter [B,T,KV,D] new KV through the block table into the pool
+    ``[N, bs, KV, D]``.  Writes to unallocated table entries — and, when
+    ``keep [B,T]`` is given, masked positions — are dropped, which is what
+    lets the verification pass of a short-SL sequence stay inside its own
+    block budget while the batch runs a wider bucket."""
+    n, bs = pool_k.shape[:2]
+    flat = _paged_flat_index(positions, block_table, bs, n, keep).reshape(-1)
+    fk = pool_k.reshape((n * bs,) + pool_k.shape[2:])
+    fv = pool_v.reshape((n * bs,) + pool_v.shape[2:])
+    kf = k_new.reshape((-1,) + k_new.shape[2:]).astype(pool_k.dtype)
+    vf = v_new.reshape((-1,) + v_new.shape[2:]).astype(pool_v.dtype)
+    fk = fk.at[flat].set(kf, mode="drop")
+    fv = fv.at[flat].set(vf, mode="drop")
+    return fk.reshape(pool_k.shape), fv.reshape(pool_v.shape)
+
+
+def write_pos_paged(kv_pos: jax.Array, positions: jax.Array,
+                    block_table: jax.Array,
+                    valid: Optional[jax.Array] = None,
+                    keep: Optional[jax.Array] = None) -> jax.Array:
+    """Update the pool-level slot-position map (once per model call).
+    ``valid`` marks entries written as -1 (ragged prefill padding, dense
+    ``write_pos`` semantics); ``keep`` drops the write entirely (decode
+    write masking)."""
+    n, bs = kv_pos.shape
+    flat = _paged_flat_index(positions, block_table, bs, n, keep).reshape(-1)
+    newpos = positions if valid is None else jnp.where(valid, positions, -1)
+    return kv_pos.reshape(-1).at[flat].set(
+        newpos.reshape(-1), mode="drop").reshape(kv_pos.shape)
+
+
+def gather_paged_kv(pool_k: jax.Array, pool_v: jax.Array,
+                    block_table: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Per-sequence dense views [B, max_blocks*bs, KV, D] of the pool.
+
+    XLA reference path: functionally exact but materializes the view —
+    the TPU data plane reads through the table inside the Pallas kernel
+    instead (:func:`repro.kernels.ragged_attention
+    .paged_ragged_verify_attention`).  Unallocated entries gather block 0;
+    they are masked by the -1 entries of :func:`gather_paged_pos`."""
+    idx = jnp.maximum(block_table, 0)
+    b, maxb = block_table.shape
+    bs = pool_k.shape[1]
+    k = pool_k[idx].reshape((b, maxb * bs) + pool_k.shape[2:])
+    v = pool_v[idx].reshape((b, maxb * bs) + pool_v.shape[2:])
+    return k, v
+
+
+def gather_paged_pos(kv_pos: jax.Array, block_table: jax.Array) -> jax.Array:
+    """Per-sequence [B, max_blocks*bs] view of the pool-level kv_pos;
+    unallocated table entries read as -1 (never valid)."""
+    g = kv_pos[jnp.maximum(block_table, 0)]              # [B, MAXB, bs]
+    g = jnp.where((block_table >= 0)[:, :, None], g, -1)
+    return g.reshape(block_table.shape[0], -1)
+
+
+def reset_blocks(kv_pos: jax.Array, block_ids) -> jax.Array:
+    """Mark freshly (re)allocated blocks empty.  Mandatory on allocation:
+    a block recycled from another sequence still holds kv_pos values that
+    could satisfy ``0 <= kv_pos <= q`` for its new owner."""
+    ids = jnp.asarray(block_ids, jnp.int32)
+    return kv_pos.at[ids].set(-1)
 
 
 def write_kv(k_buf: jax.Array, v_buf: jax.Array, k_new: jax.Array,

@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.config import ModelConfig
+from repro.kernels import ops as kernel_ops
 from repro.models import cache as cache_lib
 from repro.models.flash import flash_attend
 from repro.models.layers import (attend, attention_specs, attn_output,
@@ -142,9 +143,21 @@ def _attn_sublayer(p: dict, cfg: ModelConfig, x: jax.Array, *,
                    window: Optional[int],
                    causal: bool = True,
                    attn_sharding=None,
+                   block_table: Optional[jax.Array] = None,
+                   write_mask: Optional[jax.Array] = None,
+                   kv_pos_pool: Optional[jax.Array] = None,
                    ) -> Tuple[jax.Array, Optional[Tuple[jax.Array, jax.Array]]]:
     """One attention sublayer.  ``positions`` are sequence indices (mask
-    logic); ``rope_positions`` feed RoPE/M-RoPE (identical except VLM)."""
+    logic); ``rope_positions`` feed RoPE/M-RoPE (identical except VLM).
+
+    With ``block_table`` set, ``kv_buf`` holds this layer's slice of the
+    shared block pool ``[N, bs, KV, D]`` and ``kv_pos`` the per-sequence
+    gathered position view; KV writes go through the table (``write_mask``
+    drops per-token writes so a sequence stays inside its block budget).
+    Decode attention then reads straight off the pool through the
+    block-table-indexed Pallas kernel on TPU (``kv_pos_pool`` is the
+    pool-level position map it needs), or over the gathered per-sequence
+    view on the XLA reference path (exact, materializing)."""
     q, k, v = qkv_project(p, cfg, x, rope_positions)
     b, t = x.shape[:2]
 
@@ -195,7 +208,7 @@ def _attn_sublayer(p: dict, cfg: ModelConfig, x: jax.Array, *,
         return attn_output(p, out), None
 
     if mode == "prefill":
-        # attend over fresh k/v, then store the trailing window in the ring
+        # attend over fresh k/v, then store into the ring / block pool
         kp_, vp_ = pad_kv(k, v)
         ke, ve = expand_kv(k, v)
         if t >= BLOCKWISE_THRESHOLD:
@@ -206,16 +219,34 @@ def _attn_sublayer(p: dict, cfg: ModelConfig, x: jax.Array, *,
                         else jnp.ones((b, t), bool))
             out = attend(q, ke, ve, q_pos=positions, kv_pos=positions,
                          kv_valid=kv_valid, window=window, causal=causal)
-        k_buf, v_buf = cache_lib.write_kv(kv_buf[0], kv_buf[1], kp_, vp_,
-                                          positions)
+        if block_table is not None:
+            k_buf, v_buf = cache_lib.write_kv_paged(
+                kv_buf[0], kv_buf[1], kp_, vp_, positions, block_table)
+        else:
+            k_buf, v_buf = cache_lib.write_kv(kv_buf[0], kv_buf[1], kp_, vp_,
+                                              positions)
         return attn_output(p, out), (k_buf, v_buf)
 
-    # decode / verify: write first, then attend over the ring
+    # decode / verify: write first, then attend over the ring / pool view
     kp_, vp_ = pad_kv(k, v)
-    k_buf, v_buf = cache_lib.write_kv(kv_buf[0], kv_buf[1], kp_, vp_,
-                                      positions)
+    if block_table is not None:
+        k_buf, v_buf = cache_lib.write_kv_paged(
+            kv_buf[0], kv_buf[1], kp_, vp_, positions, block_table,
+            keep=write_mask)
+        if kv_pos_pool is not None and kernel_ops.on_tpu():
+            # TPU data plane: the kernel's index maps dereference the
+            # block table — no per-sequence dense view is materialized
+            out = kernel_ops.paged_ragged_attention(
+                q, k_buf, v_buf, block_table, positions, kv_pos_pool,
+                window=window)
+            return attn_output(p, out), (k_buf, v_buf)
+        k_att, v_att = cache_lib.gather_paged_kv(k_buf, v_buf, block_table)
+    else:
+        k_buf, v_buf = cache_lib.write_kv(kv_buf[0], kv_buf[1], kp_, vp_,
+                                          positions)
+        k_att, v_att = k_buf, v_buf
     kv_valid = kv_pos >= 0
-    ke, ve = expand_kv(k_buf, v_buf)
+    ke, ve = expand_kv(k_att, v_att)
     out = attend(q, ke, ve, q_pos=positions, kv_pos=kv_pos,
                  kv_valid=kv_valid, window=window)
     return attn_output(p, out), (k_buf, v_buf)
@@ -244,7 +275,9 @@ def _token_block(p: dict, cfg: ModelConfig, x: jax.Array, layer_cache: PyTree,
         mode=ctx["mode"], positions=ctx["positions"],
         rope_positions=ctx["rope_positions"], input_mask=ctx.get("input_mask"),
         kv_buf=kv, kv_pos=ctx.get("kv_pos"), window=cfg.attention_window,
-        attn_sharding=ctx.get("attn_sharding"))
+        attn_sharding=ctx.get("attn_sharding"),
+        block_table=ctx.get("block_table"), write_mask=ctx.get("write_mask"),
+        kv_pos_pool=ctx.get("kv_pos_pool"))
     x = x + h
 
     if fam == "moe":
@@ -519,7 +552,10 @@ def _hybrid_forward(params: PyTree, cfg: ModelConfig, x: jax.Array,
             input_mask=ctx.get("input_mask"), kv_buf=kv,
             kv_pos=ctx.get("kv_pos"),
             window=cfg.rglru.local_attention_window,
-            attn_sharding=ctx.get("attn_sharding"))
+            attn_sharding=ctx.get("attn_sharding"),
+            block_table=ctx.get("block_table"),
+            write_mask=ctx.get("write_mask"),
+            kv_pos_pool=ctx.get("kv_pos_pool"))
         xx = xx + h
         xx = xx + mlp_apply(p_l["mlp"], rmsnorm(xx, p_l["ln2"], cfg.norm_eps))
         c_new = None
@@ -602,10 +638,17 @@ def forward(params: PyTree, cfg: ModelConfig, tokens: Optional[jax.Array],
             update_mask: Optional[jax.Array] = None,
             encoder_embeds: Optional[jax.Array] = None,
             enc_valid: Optional[jax.Array] = None,
+            write_mask: Optional[jax.Array] = None,
             act_sharding=None, attn_sharding=None, moe_sharding=None,
             remat: bool = False
             ) -> Tuple[jax.Array, Optional[cache_lib.CacheT], dict]:
-    """Unified forward. Returns (logits [B,T,Vp], new_cache, aux)."""
+    """Unified forward. Returns (logits [B,T,Vp], new_cache, aux).
+
+    ``write_mask [B, T]`` (decode mode, paged caches only): positions
+    whose mask is False skip the KV write entirely — the speculative
+    round masks per-sequence draft tails so a short-SL sequence never
+    writes outside its allocated blocks.  Dense ring caches ignore it
+    (writes behind ``length`` are overwritten-or-masked anyway)."""
     assert mode in ("train", "prefill", "decode")
     x = embeds if embeds is not None else _embed(params, cfg, tokens)
     b, t = x.shape[:2]
@@ -628,9 +671,23 @@ def forward(params: PyTree, cfg: ModelConfig, tokens: Optional[jax.Array],
            "attn_sharding": attn_sharding, "moe_sharding": moe_sharding}
     new_cache = None
 
+    kv_pos_store = None
     if cache is not None and "kv_pos" in cache:
         valid = input_mask if mode == "prefill" else None
-        ctx["kv_pos"] = cache_lib.write_pos(cache["kv_pos"], positions, valid)
+        if cache_lib.is_paged(cache):
+            keep = write_mask if mode == "decode" else None
+            kv_pos_store = cache_lib.write_pos_paged(
+                cache["kv_pos"], positions, cache["block_table"], valid, keep)
+            ctx["kv_pos"] = cache_lib.gather_paged_pos(kv_pos_store,
+                                                       cache["block_table"])
+            ctx["block_table"] = cache["block_table"]
+            if mode == "decode":
+                ctx["write_mask"] = write_mask
+                ctx["kv_pos_pool"] = kv_pos_store
+        else:
+            kv_pos_store = cache_lib.write_pos(cache["kv_pos"], positions,
+                                               valid)
+            ctx["kv_pos"] = kv_pos_store
     if cfg.family == "audio":
         if cache is not None:
             ctx["enc_valid"] = cache["enc_valid"]
@@ -644,8 +701,8 @@ def forward(params: PyTree, cfg: ModelConfig, tokens: Optional[jax.Array],
         aux = {}
         x, new_cache = _hybrid_forward(params, cfg, x, cache, ctx,
                                        remat and mode == "train")
-        if new_cache is not None:
-            new_cache["kv_pos"] = ctx.get("kv_pos", cache.get("kv_pos"))
+        if new_cache is not None and kv_pos_store is not None:
+            new_cache["kv_pos"] = kv_pos_store
     else:
         stacked = _stacked_cache_view(cfg, cache)
         if cfg.family == "audio" and cache is None:
@@ -655,8 +712,8 @@ def forward(params: PyTree, cfg: ModelConfig, tokens: Optional[jax.Array],
                                         ctx, remat and mode == "train")
         if cache is not None:
             new_cache = _store_stacked(cfg, cache, new_stack)
-            if "kv_pos" in ctx and "kv_pos" in cache:
-                new_cache["kv_pos"] = ctx["kv_pos"]
+            if kv_pos_store is not None and "kv_pos" in cache:
+                new_cache["kv_pos"] = kv_pos_store
 
     logits = _lm_head(params, cfg, x)
     return logits, new_cache, aux

@@ -1,11 +1,15 @@
 """DSDE serving engine: continuous batching + per-sequence dynamic SL.
 
 The engine composes:
-  * :class:`LookaheadScheduler`  — queue/slot admission from SL predictions;
+  * :class:`LookaheadScheduler`  — queue/slot admission from SL predictions
+    plus, under the paged KV layout, the block allocator (grow on demand,
+    preempt when the pool runs dry);
   * ``spec_decode_round``        — the jitted speculative round (bucketed by
     K so there is one XLA program per draft length, never per step);
   * slot-wise prefill            — prompts are bucketed to powers of two and
-    right-padded, so admission also reuses a small set of programs.
+    right-padded, so admission also reuses a small set of programs.  Dense
+    slots prefill a fresh cache row; paged requests prefill straight into
+    their allocated pool blocks through the block table.
 
 This runs for real on CPU (reduced models) and is the same code path the
 TPU launch scripts drive; only meshes/shardings differ (repro/launch).
@@ -32,7 +36,7 @@ from repro.serving.scheduler import LookaheadScheduler
 
 PyTree = Any
 
-_BATCH_AXIS0 = ("length", "kv_pos", "enc_valid")
+_BATCH_AXIS0 = ("length", "kv_pos", "enc_valid", "block_table")
 
 
 def _set_slot(big: PyTree, row: PyTree, slot) -> PyTree:
@@ -47,14 +51,11 @@ def _set_slot(big: PyTree, row: PyTree, slot) -> PyTree:
     return out
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "max_len", "prompt_bucket"))
-def _prefill_row(params: PyTree, cfg: ModelConfig, tokens: jax.Array,
-                 prompt_len: jax.Array, max_len: int, prompt_bucket: int,
-                 ) -> Tuple[PyTree, jax.Array]:
-    """Prefill one request into a fresh single-row cache.  ``tokens`` is
-    right-padded to ``prompt_bucket``.  Returns (cache_row, last_logits)."""
-    del prompt_bucket  # shape is already static via tokens
-    cache = cache_lib.cache_struct(cfg, 1, max_len, jnp.float32)
+def _prefill_forward(params: PyTree, cfg: ModelConfig, cache: PyTree,
+                     tokens: jax.Array, prompt_len: jax.Array
+                     ) -> Tuple[PyTree, jax.Array]:
+    """Shared prefill tail: masked forward over the right-padded prompt,
+    commit ``length``, pick the last real token's logits."""
     mask = (jnp.arange(tokens.shape[1])[None] < prompt_len)
     logits, cache, _ = forward(params, cfg, tokens, cache=cache,
                                mode="prefill", input_mask=mask)
@@ -63,8 +64,46 @@ def _prefill_row(params: PyTree, cfg: ModelConfig, tokens: jax.Array,
     return cache, last
 
 
-def _bucket(n: int, minimum: int = 16) -> int:
-    return max(minimum, 1 << math.ceil(math.log2(max(n, 1))))
+@functools.partial(jax.jit, static_argnames=("cfg", "max_len", "prompt_bucket"))
+def _prefill_row(params: PyTree, cfg: ModelConfig, tokens: jax.Array,
+                 prompt_len: jax.Array, max_len: int, prompt_bucket: int,
+                 ) -> Tuple[PyTree, jax.Array]:
+    """Prefill one request into a fresh single-row cache.  ``tokens`` is
+    right-padded to ``prompt_bucket``.  Returns (cache_row, last_logits)."""
+    del prompt_bucket  # shape is already static via tokens
+    cache = cache_lib.cache_struct(cfg, 1, max_len, jnp.float32)
+    return _prefill_forward(params, cfg, cache, tokens, prompt_len)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "prompt_bucket"),
+                   donate_argnames=("pool_k", "pool_v", "kv_pos"))
+def _prefill_paged_row(params: PyTree, cfg: ModelConfig, pool_k: jax.Array,
+                       pool_v: jax.Array, kv_pos: jax.Array,
+                       table_row: jax.Array, tokens: jax.Array,
+                       prompt_len: jax.Array, prompt_bucket: int
+                       ) -> Tuple[PyTree, jax.Array]:
+    """Prefill one request *straight into its allocated pool blocks*: the
+    batch-1 cache view aliases the shared pools and routes every KV write
+    through the request's block-table row.  The pools are donated — the
+    caller immediately replaces its references with the returned ones, so
+    admission never copies (or transiently doubles) the whole pool.
+    Returns (cache view with updated pools + fresh recurrent rows,
+    last_logits)."""
+    del prompt_bucket  # shape is already static via tokens
+    cache = cache_lib.paged_prefill_view(cfg, pool_k, pool_v, kv_pos,
+                                         table_row)
+    return _prefill_forward(params, cfg, cache, tokens, prompt_len)
+
+
+def _bucket(n: int, minimum: int = 16, cap: Optional[int] = None) -> int:
+    """Power-of-two prompt bucket, clamped so a long prompt can never
+    round up past the KV budget (a bucket wider than ``cap`` would build
+    a prefill program whose writes get truncated)."""
+    b = max(minimum, 1 << math.ceil(math.log2(max(n, 1))))
+    if cap is not None:
+        b = min(b, cap)
+        assert n <= b, f"prompt of {n} tokens exceeds the KV budget {cap}"
+    return b
 
 
 class ServingEngine:
@@ -77,13 +116,22 @@ class ServingEngine:
         self.spec = spec
         self.policy = build_policy(spec)
         self.serving = serving
+        self.paged = serving.paged_kv
+        if self.paged and not (cache_lib.supports_paged(cfg_target)
+                               and cache_lib.supports_paged(cfg_draft)):
+            raise ValueError(
+                "paged_kv=True but family pair "
+                f"({cfg_target.family}, {cfg_draft.family}) has no paged "
+                "KV layout (supported: dense/moe/vlm/hybrid)")
         self.scheduler = LookaheadScheduler(serving, spec,
                                             policy=self.policy)
         self.key = jax.random.PRNGKey(seed)
         b = serving.max_batch_size
+        paged_arg = ((serving.pool_blocks(), serving.kv_block_size)
+                     if self.paged else None)
         self.state = sd.init_round_state(
             cfg_target, cfg_draft, spec, b, serving.max_seq_len,
-            self._next_key())
+            self._next_key(), paged=paged_arg)
         # host-side mirror of state.sl_next, refreshed once per round while
         # the round's other outputs are already being transferred — the
         # bucket choice never triggers its own device->host sync.
@@ -114,37 +162,119 @@ class ServingEngine:
                 self.scheduler.release(req)
                 self._finished_at_prefill.append(req)
 
+    # ----------------------------------------------------------- block plane
+    def _table_row(self, req: Request) -> np.ndarray:
+        row = np.full((self.serving.blocks_per_seq(),), -1, np.int32)
+        row[:len(req.block_ids)] = req.block_ids
+        return row
+
+    def _sync_block_tables(self, rows: List[Tuple[int, np.ndarray]],
+                           fresh_ids: List[int]) -> None:
+        """Mirror host allocator decisions into both device caches: reset
+        ``kv_pos`` of freshly (re)allocated blocks (a recycled block must
+        never leak stale-but-causally-valid entries to its new owner) and
+        rewrite the affected block-table rows."""
+        if not rows and not fresh_ids:
+            return
+        st = self.state
+        tc, dc = dict(st.target_cache), dict(st.draft_cache)
+        if fresh_ids:
+            tc["kv_pos"] = cache_lib.reset_blocks(tc["kv_pos"], fresh_ids)
+            dc["kv_pos"] = cache_lib.reset_blocks(dc["kv_pos"], fresh_ids)
+        for slot, row in rows:
+            r = jnp.asarray(row, jnp.int32)
+            tc["block_table"] = tc["block_table"].at[slot].set(r)
+            dc["block_table"] = dc["block_table"].at[slot].set(r)
+        self.state = st._replace(target_cache=tc, draft_cache=dc)
+
+    def _plan_blocks(self) -> None:
+        """Pre-round capacity planning: grow every running sequence to
+        ``committed + policy.lookahead(SL_i)`` KV slots, preempting the
+        youngest sequences (evict-and-requeue, recompute-on-readmit) when
+        the pool runs dry instead of rejecting anybody."""
+        la = self.scheduler.lookahead_slots()
+        slot_of = {id(r): r.slot for r in self.scheduler.running}
+        fresh_ids: List[int] = []
+        rows: List[Tuple[int, np.ndarray]] = []
+        cleared: List[Tuple[int, np.ndarray]] = []
+        for req in sorted(self.scheduler.running, key=lambda r: r.admit_seq):
+            if req.slot is None:        # preempted by an earlier grow
+                continue
+            need = req.cache_len + int(la[req.slot])
+            new_blocks, preempted = self.scheduler.ensure_capacity(req, need)
+            if new_blocks:
+                fresh_ids += new_blocks
+                rows.append((req.slot, self._table_row(req)))
+            for victim in preempted:
+                cleared.append((slot_of[id(victim)],
+                                np.full((self.serving.blocks_per_seq(),),
+                                        -1, np.int32)))
+        self._sync_block_tables(rows + cleared, fresh_ids)
+
     def _prefill_into_slot(self, req: Request) -> None:
         slot = req.slot
-        bucket = _bucket(len(req.prompt))
+        prefix = req.prefill_tokens()
+        readmit = bool(req.output)      # recompute-on-readmit (preemption)
+        bucket = _bucket(len(prefix), cap=self.serving.max_seq_len)
         toks = np.full((1, bucket), 0, np.int32)
-        toks[0, :len(req.prompt)] = req.prompt
-        row_t, last_t = _prefill_row(self.pt, self.cfg_t, jnp.asarray(toks),
-                                     jnp.int32(len(req.prompt)),
-                                     self.serving.max_seq_len, bucket)
-        row_d, _ = _prefill_row(self.pd, self.cfg_d, jnp.asarray(toks),
-                                jnp.int32(len(req.prompt)),
-                                self.serving.max_seq_len, bucket)
-        st = self.state
-        tc = _set_slot(st.target_cache, row_t, slot)
-        dc = _set_slot(st.draft_cache, row_d, slot)
-        pend = sample_token(self._next_key(), last_t[None],
-                            self.spec.temperature,
-                            self.cfg_t.vocab_size)[0].astype(jnp.int32)
-        # the prefill-sampled token IS the first generated token
-        first = int(pend)
-        req.output.append(first)
-        self.emitted_total += 1
-        req.first_token_time = time.monotonic()
-        if ((req.eos_token_id is not None and first == req.eos_token_id)
-                or len(req.output) >= req.max_new_tokens):
-            req.state = RequestState.FINISHED
-            req.finish_time = req.first_token_time
+        toks[0, :len(prefix)] = prefix
+        toks = jnp.asarray(toks)
+        plen = jnp.int32(len(prefix))
+        if self.paged:
+            row = self._table_row(req)
+            self._sync_block_tables([(slot, row)], req.block_ids)
+            st = self.state
+            tc, dc = dict(st.target_cache), dict(st.draft_cache)
+            row_j = jnp.asarray(row, jnp.int32)[None]
+            row_t, last_t = _prefill_paged_row(
+                self.pt, self.cfg_t, tc["k"], tc["v"], tc["kv_pos"],
+                row_j, toks, plen, bucket)
+            row_d, _ = _prefill_paged_row(
+                self.pd, self.cfg_d, dc["k"], dc["v"], dc["kv_pos"],
+                row_j, toks, plen, bucket)
+            for big, r in ((tc, row_t), (dc, row_d)):
+                big["k"], big["v"] = r["k"], r["v"]
+                big["kv_pos"] = r["kv_pos"]
+                big["length"] = big["length"].at[slot].set(r["length"][0])
+                for key in ("lru", "conv"):    # hybrid recurrent rows
+                    if key in big:
+                        big[key] = big[key].at[:, slot].set(r[key][:, 0])
+        else:
+            st = self.state
+            row_t, last_t = _prefill_row(self.pt, self.cfg_t, toks, plen,
+                                         self.serving.max_seq_len, bucket)
+            row_d, _ = _prefill_row(self.pd, self.cfg_d, toks, plen,
+                                    self.serving.max_seq_len, bucket)
+            tc = _set_slot(st.target_cache, row_t, slot)
+            dc = _set_slot(st.draft_cache, row_d, slot)
+        req.cache_len = len(prefix)
+        if readmit:
+            # the last emitted token IS the pending token; re-sampling
+            # would fork the RNG stream and (at temperature > 0) the output
+            pend = jnp.int32(req.output[-1])
+        else:
+            pend = sample_token(self._next_key(), last_t[None],
+                                self.spec.temperature,
+                                self.cfg_t.vocab_size)[0].astype(jnp.int32)
+            # the prefill-sampled token IS the first generated token
+            first = int(pend)
+            req.output.append(first)
+            self.emitted_total += 1
+            req.first_token_time = time.monotonic()
+            if ((req.eos_token_id is not None and first == req.eos_token_id)
+                    or len(req.output) >= req.max_new_tokens):
+                req.state = RequestState.FINISHED
+                req.finish_time = req.first_token_time
         rows = jnp.zeros((self.serving.max_batch_size,), bool).at[slot].set(True)
         ps = self.policy.reset_rows(st.policy_state, rows)
         sl0_val = self.policy.initial_sl_value()
         sl0 = st.sl_next.at[slot].set(sl0_val)
         self._sl_next_host[slot] = sl0_val
+        # refresh the scheduler's mirror too: block planning for this
+        # round must see the fresh request's initial SL, not the slot's
+        # previous occupant's last prediction (a stale low SL would
+        # under-allocate blocks and silently drop accepted KV writes)
+        self.scheduler.update_predictions(self._sl_next_host)
         self.state = st._replace(
             target_cache=tc, draft_cache=dc, policy_state=ps,
             pending=st.pending.at[slot].set(pend), sl_next=sl0)
@@ -152,13 +282,17 @@ class ServingEngine:
     # ------------------------------------------------------------------ step
     def step(self) -> List[Request]:
         """Admit, run one speculative round, distribute tokens.  Returns
-        requests finished this step."""
+        requests that reached a terminal state this step (finished OR
+        rejected-at-admission)."""
+        t_step = time.monotonic()
         self._admit()
-        finished_early = self._finished_at_prefill
+        done_early = self._finished_at_prefill + self.scheduler.pop_rejected()
         self._finished_at_prefill = []
+        if not self.scheduler.running:
+            return done_early
+        if self.paged:
+            self._plan_blocks()         # may preempt (slots go inactive)
         running = self.scheduler.running
-        if not running:
-            return finished_early
         active_mask = self.scheduler.active_mask
         active = jnp.asarray(active_mask)
         k = self.policy.pick_bucket(self._sl_next_host, active_mask)
@@ -182,10 +316,12 @@ class ServingEngine:
             "accepted": float(n_acc.sum()), "proposed": float(n_prop.sum()),
         }
 
-        finished = finished_early
+        finished = done_early
+        shrunk_rows: List[Tuple[int, np.ndarray]] = []
         now = time.monotonic()
         for req in list(running):
             i = req.slot
+            req.cache_len += 1 + int(n_acc[i])   # mirrors the device commit
             toks = emitted[i, :n_emit[i]].tolist()
             if req.first_token_time is None and toks:
                 req.first_token_time = now
@@ -204,14 +340,31 @@ class ServingEngine:
                     req.finish_time = now
                     break
             if req.done:
-                self.scheduler.release(req)
+                self.scheduler.release(req)      # frees its blocks too
                 finished.append(req)
+            elif self.paged:
+                # rollback is free: speculative-tail blocks beyond the
+                # committed length go straight back to the pool.  The
+                # device table row must drop the freed entries NOW: a
+                # freed block can be reallocated at the next admission,
+                # and a stale row entry would gather the new owner's
+                # causally-valid KV into this sequence's attention.
+                if self.scheduler.shrink_to(req, req.cache_len):
+                    shrunk_rows.append((req.slot, self._table_row(req)))
+        if shrunk_rows:
+            self._sync_block_tables(shrunk_rows, [])
         # per-sequence KV slots the policy plans for the NEXT round — the
         # capacity-planning view of intra-batch heterogeneity.  Logged
         # after release so just-finished slots are not counted.
         round_rec["lookahead"] = float(
             self.scheduler.lookahead_slots()[self.scheduler.active_mask]
             .sum())
+        round_rec["kv_blocks_in_use"] = float(
+            self.scheduler.kv_blocks_in_use())
+        round_rec["kv_pool_utilization"] = (
+            round_rec["kv_blocks_in_use"]
+            / max(self.scheduler.kv_blocks_total(), 1))
+        round_rec["wall_s"] = time.monotonic() - t_step
         self.round_log.append(round_rec)
         return finished
 
@@ -227,21 +380,29 @@ class ServingEngine:
             if max_rounds is not None and self.rounds >= max_rounds:
                 break
         wall = time.monotonic() - t0
-        lat = [r.latency() for r in done if r.latency() is not None]
+        fin = [r for r in done if r.state == RequestState.FINISHED]
+        rej = [r for r in done if r.state == RequestState.REJECTED]
+        lat = [r.latency() for r in fin if r.latency() is not None]
         return {
             "wall_time_s": wall,
-            "requests_finished": len(done),
+            "requests_finished": len(fin),
+            "requests_rejected": len(rej),
+            "preemptions": self.scheduler.preempted_total,
             "tokens_emitted": self.emitted_total,
             "rounds": self.rounds,
             "draft_steps": self.draft_steps,
             "draft_steps_effective": self.draft_steps_effective,
             # paper's BE: tokens per target verification, per sequence
             "block_efficiency": float(np.mean(
-                [r.block_efficiency() for r in done])) if done else float("nan"),
+                [r.block_efficiency() for r in fin])) if fin else float("nan"),
             "batch_tokens_per_round": self.emitted_total / max(self.rounds, 1),
             "throughput_tok_s": self.emitted_total / max(wall, 1e-9),
             "mean_latency_s": float(np.mean(lat)) if lat else float("nan"),
             "p95_latency_s": float(np.percentile(lat, 95)) if lat else float("nan"),
             "mean_acceptance": float(np.mean(
-                [r.acceptance_rate() for r in done])) if done else float("nan"),
+                [r.acceptance_rate() for r in fin])) if fin else float("nan"),
+            "kv_blocks_peak": float(max(
+                (r["kv_blocks_in_use"] for r in self.round_log),
+                default=0.0)),
+            "kv_pool_blocks": float(self.scheduler.kv_blocks_total()),
         }

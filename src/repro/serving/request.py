@@ -11,6 +11,10 @@ class RequestState(enum.Enum):
     QUEUED = "queued"
     RUNNING = "running"
     FINISHED = "finished"
+    # oversize at admission: can never fit prompt + max_new_tokens +
+    # the policy's worst-case lookahead inside max_seq_len.  Terminal;
+    # surfaced from ``ServingEngine.step`` and counted in the run summary.
+    REJECTED = "rejected"
 
 
 @dataclasses.dataclass
@@ -29,10 +33,23 @@ class Request:
     rounds: int = 0                    # target verifications consumed
     accepted_tokens: int = 0
     proposed_tokens: int = 0
+    # --- paged-KV fields ----------------------------------------------------
+    block_ids: List[int] = dataclasses.field(default_factory=list)
+    cache_len: int = 0                 # committed tokens in the KV cache
+    preemptions: int = 0               # evict-and-requeue count
+    admit_seq: int = -1                # admission order (LIFO preemption key)
 
     @property
     def done(self) -> bool:
-        return self.state == RequestState.FINISHED
+        return self.state in (RequestState.FINISHED, RequestState.REJECTED)
+
+    def prefill_tokens(self) -> List[int]:
+        """Tokens to prefill on (re)admission.  A preempted request is
+        recomputed from prompt + already-emitted output; its last emitted
+        token is the pending token, not yet in any cache."""
+        if self.output:
+            return self.prompt + self.output[:-1]
+        return self.prompt
 
     def latency(self) -> Optional[float]:
         if self.finish_time is None:

@@ -1,4 +1,4 @@
-"""Look-ahead slot scheduler (paper §3.2).
+"""Look-ahead scheduler (paper §3.2) over a block-budget data plane.
 
 Computes per-sequence look-ahead KV slots directly from ``SL_i^(t)`` and is
 applied uniformly to prefill and decode admission — the vLLM modification
@@ -8,29 +8,87 @@ heterogeneity").
 
 Capacity planning is policy-owned on both horizons:
 
-* **admission** reserves ``SpecPolicy.max_lookahead()`` — the worst-case
-  KV slots one round can write under that policy (1 for autoregressive,
-  ``static_sl + 1`` for static, ``sl_max + 1`` for dynamic policies) —
-  so a new policy gets correct admission behaviour for free;
+* **feasibility** — a request whose worst case (``prompt + max_new_tokens
+  + policy.max_lookahead()``) cannot fit ``max_seq_len`` is terminally
+  ``REJECTED`` (surfaced through ``pop_rejected``), never silently
+  dropped;
 * **per-round planning** exposes ``SpecPolicy.lookahead`` over the live
   per-sequence SL predictions the engine mirrors to the host each round
-  (``lookahead_slots``), surfacing intra-batch heterogeneity in the
-  engine's round telemetry.
+  (``lookahead_slots``).
 
-The scheduler owns: the waiting queue, the slot table, and the admission
-decision (does the remaining KV budget of a slot cover prompt +
-worst-case lookahead + max_new_tokens?).
+Two admission regimes share that planning:
+
+* **dense** (``paged_kv=False``) — one max_seq_len KV row per slot;
+  admission is worst-case reservation: a free slot IS the budget.
+* **paged** (``paged_kv=True``) — a :class:`BlockAllocator` owns a free
+  list over the shared block pool.  Admission charges only the blocks the
+  prefill actually needs; each round the engine asks
+  :meth:`ensure_capacity` to grow a sequence to ``committed + SL_i + 1``
+  tokens (``policy.lookahead``), and when the pool runs dry the youngest
+  running request is **preempted** — its blocks return to the pool and it
+  is requeued at the front for recompute-on-readmit — instead of anybody
+  being rejected.  After each round the engine returns the speculative
+  tail blocks via :meth:`shrink_to` (rollback stays free length
+  arithmetic).  The pool must hold at least one max-length sequence
+  (asserted), which guarantees preemption always converges.
+
+The scheduler owns: the waiting queue, the slot table, the block
+allocator, and both admission decisions.
 """
 from __future__ import annotations
 
 import collections
-from typing import List, Optional
+import time
+from typing import List, Optional, Tuple
 
 import numpy as np
 
 from repro.core.config import ServingConfig, SpecDecodeConfig
 from repro.core.policies import SpecPolicy, build_policy
 from repro.serving.request import Request, RequestState
+
+
+class BlockAllocator:
+    """Free-list allocator over the shared KV block pool.
+
+    Block ids are logical handles: id ``i`` names slot ``i`` of *both*
+    the target and draft pools (the block tables mirror), so one
+    allocation decision covers the whole speculative pair.
+    """
+
+    def __init__(self, num_blocks: int, block_size: int):
+        assert num_blocks > 0 and block_size > 0
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        # LIFO free list, seeded so the first allocations come out in
+        # ascending id order (pleasant for debugging, irrelevant for
+        # correctness — the block table indirection absorbs any order)
+        self._free = list(range(num_blocks - 1, -1, -1))
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_used(self) -> int:
+        return self.num_blocks - len(self._free)
+
+    def blocks_for(self, n_tokens: int) -> int:
+        return max(0, -(-n_tokens // self.block_size))
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """n blocks, or None (and no state change) if the pool is short."""
+        if n > len(self._free):
+            return None
+        if n <= 0:
+            return []
+        out = self._free[-n:][::-1]
+        del self._free[-n:]
+        return out
+
+    def free(self, blocks: List[int]) -> None:
+        self._free.extend(reversed(blocks))
+        assert len(self._free) <= self.num_blocks
 
 
 class LookaheadScheduler:
@@ -41,9 +99,20 @@ class LookaheadScheduler:
         self.policy = policy if policy is not None else build_policy(spec)
         self.queue: collections.deque[Request] = collections.deque()
         self.slots: List[Optional[Request]] = [None] * serving.max_batch_size
+        self.allocator: Optional[BlockAllocator] = None
+        if serving.paged_kv:
+            self.allocator = BlockAllocator(serving.pool_blocks(),
+                                            serving.kv_block_size)
+            assert (self.allocator.num_blocks * self.allocator.block_size
+                    >= serving.max_seq_len), (
+                "KV pool smaller than one max-length sequence — "
+                "preemption could never free enough blocks")
         # latest per-slot SL predictions (host mirror, engine-refreshed)
         self.sl_pred = np.full((serving.max_batch_size,),
                                self.policy.initial_sl_value(), np.int32)
+        self._rejected: List[Request] = []
+        self._admit_seq = 0
+        self.preempted_total = 0
 
     # ------------------------------------------------------------- admission
     def submit(self, req: Request) -> None:
@@ -62,9 +131,9 @@ class LookaheadScheduler:
         return self.policy.lookahead(sl)
 
     def _fits(self, req: Request) -> bool:
-        # admission must reserve the policy's WORST-case round footprint:
+        # feasibility must cover the policy's WORST-case round footprint:
         # a dynamic policy admitted at its initial SL can later predict up
-        # to its max, and the verification write would overrun the KV row
+        # to its max, and the verification write would overrun the budget
         need = (len(req.prompt) + req.max_new_tokens
                 + self.policy.max_lookahead())
         return need <= self.serving.max_seq_len
@@ -73,25 +142,109 @@ class LookaheadScheduler:
         return [i for i, r in enumerate(self.slots) if r is None]
 
     def admit(self) -> List[Request]:
-        """Move queued requests into free slots (continuous batching)."""
+        """Move queued requests into free slots (continuous batching).
+
+        Dense: a free slot is a full max_seq_len reservation.  Paged: the
+        request is also charged ``ceil(prefill_len / block_size)`` pool
+        blocks up front; if the pool cannot cover the next request's
+        prefill it stays queued (preemption during the round, not
+        admission, resolves sustained pressure).  Infeasible (oversize)
+        requests become ``REJECTED`` and are drained via
+        :meth:`pop_rejected`."""
         admitted = []
-        for i in self.free_slots():
-            if not self.queue:
-                break
-            req = self.queue.popleft()
+        free = collections.deque(self.free_slots())
+        while free and self.queue:
+            req = self.queue[0]
             if not self._fits(req):
-                req.state = RequestState.FINISHED   # reject oversize
+                self.queue.popleft()
+                req.state = RequestState.REJECTED
+                req.finish_time = time.monotonic()
+                self._rejected.append(req)
                 continue
+            if self.allocator is not None:
+                need = self.allocator.blocks_for(len(req.prefill_tokens()))
+                blocks = self.allocator.alloc(need)
+                if blocks is None:
+                    break               # pool dry: keep queued, stop here
+                req.block_ids = blocks
+            self.queue.popleft()
+            i = free.popleft()
             req.slot = i
             req.state = RequestState.RUNNING
+            req.admit_seq = self._admit_seq
+            self._admit_seq += 1
             self.slots[i] = req
             admitted.append(req)
         return admitted
+
+    def pop_rejected(self) -> List[Request]:
+        out, self._rejected = self._rejected, []
+        return out
+
+    # ---------------------------------------------------------- block budget
+    def ensure_capacity(self, req: Request, n_tokens: int
+                        ) -> Tuple[List[int], List[Request]]:
+        """Grow ``req``'s allocation to cover ``n_tokens`` KV slots,
+        preempting the youngest other running requests while the pool is
+        dry.  Returns (newly allocated block ids, preempted requests).
+        The caller must reset ``kv_pos`` of the new blocks and mirror the
+        table rows to the device caches."""
+        assert self.allocator is not None
+        need = self.allocator.blocks_for(n_tokens) - len(req.block_ids)
+        if need <= 0:
+            return [], []
+        preempted: List[Request] = []
+        while True:
+            blocks = self.allocator.alloc(need)
+            if blocks is not None:
+                req.block_ids.extend(blocks)
+                return blocks, preempted
+            victim = self._pick_victim(exclude=req)
+            assert victim is not None, (
+                "pool exhausted with nothing to preempt — the single-"
+                "sequence pool guarantee should make this unreachable")
+            self.preempt(victim)
+            preempted.append(victim)
+
+    def _pick_victim(self, exclude: Request) -> Optional[Request]:
+        running = [r for r in self.slots if r is not None and r is not exclude]
+        if not running:
+            return None
+        return max(running, key=lambda r: r.admit_seq)   # LIFO: youngest
+
+    def preempt(self, req: Request) -> None:
+        """Evict-and-requeue: free every block, requeue at the *front* so
+        the request readmits first and recomputes its prefix
+        (prompt + emitted output) on readmission."""
+        assert self.allocator is not None and req.slot is not None
+        self.allocator.free(req.block_ids)
+        req.block_ids = []
+        self.slots[req.slot] = None
+        req.slot = None
+        req.cache_len = 0
+        req.state = RequestState.QUEUED
+        req.preemptions += 1
+        self.preempted_total += 1
+        self.queue.appendleft(req)
+
+    def shrink_to(self, req: Request, n_tokens: int) -> List[int]:
+        """Return the speculative-tail blocks beyond ``n_tokens`` committed
+        slots to the pool (post-round rollback is free)."""
+        assert self.allocator is not None
+        keep = self.allocator.blocks_for(n_tokens)
+        freed = req.block_ids[keep:]
+        if freed:
+            del req.block_ids[keep:]
+            self.allocator.free(freed)
+        return freed
 
     def release(self, req: Request) -> None:
         if req.slot is not None:
             self.slots[req.slot] = None
             req.slot = None
+        if self.allocator is not None and req.block_ids:
+            self.allocator.free(req.block_ids)
+            req.block_ids = []
 
     # ------------------------------------------------------------- telemetry
     @property
@@ -101,6 +254,19 @@ class LookaheadScheduler:
     @property
     def running(self) -> List[Request]:
         return [r for r in self.slots if r is not None]
+
+    def kv_blocks_in_use(self) -> int:
+        """Blocks charged against the pool (paged), or the dense-row
+        equivalent (active slots x blocks-per-row) so the same telemetry
+        field plots memory-vs-throughput across both layouts."""
+        if self.allocator is not None:
+            return self.allocator.n_used
+        return int(self.active_mask.sum()) * self.serving.blocks_per_seq()
+
+    def kv_blocks_total(self) -> int:
+        if self.allocator is not None:
+            return self.allocator.num_blocks
+        return self.serving.max_batch_size * self.serving.blocks_per_seq()
 
     def has_work(self) -> bool:
         return bool(self.queue) or any(r is not None for r in self.slots)

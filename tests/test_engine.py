@@ -125,6 +125,25 @@ def test_eos_stops_early(small_pair):
     assert req.output == ref[:len(req.output)]
 
 
+def test_prompt_bucket_clamped_to_kv_budget(small_pair):
+    """Regression: a prompt whose power-of-two bucket rounds past
+    max_seq_len used to build a prefill program wider than the cache —
+    write_kv then silently dropped the prompt's leading tokens."""
+    from repro.serving.engine import _bucket
+    assert _bucket(33, cap=48) == 48
+    assert _bucket(33, cap=128) == 64
+    assert _bucket(5, cap=48) == 16
+    cfg, pt, pd = small_pair
+    prompt = list(range(1, 34))          # 33 tokens -> bucket 64 > 48
+    ref_out = greedy_rollout(pt, cfg, prompt, 8)
+    spec = SpecDecodeConfig(policy="autoregressive", temperature=0.0)
+    eng = ServingEngine(pt, cfg, pd, cfg, spec,
+                        ServingConfig(max_batch_size=1, max_seq_len=48))
+    req = Request(0, prompt=prompt, max_new_tokens=8)
+    eng.run([req])
+    assert req.output == ref_out
+
+
 def test_sampling_temperature_runs(small_pair):
     """Stochastic sampling path (temp 1.0) produces in-vocab tokens and
     respects max_new_tokens."""

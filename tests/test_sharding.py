@@ -152,7 +152,11 @@ def test_scheduler_rejects_oversize():
     big = Request(0, prompt=[0] * 30, max_new_tokens=30)
     s.submit(big)
     assert s.admit() == []
-    assert big.state == RequestState.FINISHED
+    # terminal REJECTED (with a finish_time), surfaced via pop_rejected —
+    # never a silent FINISHED that no engine list ever sees
+    assert big.state == RequestState.REJECTED
+    assert big.finish_time is not None
+    assert s.pop_rejected() == [big]
 
 
 def test_lookahead_slots():

@@ -24,6 +24,10 @@ from repro.training.train import train_loop
 
 jax.config.update("jax_platform_name", "cpu")
 
+# trains a miniature model pair — dominates the tier-1 wall clock; the
+# fast CI job deselects it with -m "not slow"
+pytestmark = pytest.mark.slow
+
 
 @pytest.fixture(scope="module")
 def trained_pair():

@@ -22,6 +22,10 @@ from repro.training.train import cross_entropy, train_loop, train_step
 jax.config.update("jax_platform_name", "cpu")
 KEY = jax.random.PRNGKey(0)
 
+# training loops dominate the tier-1 wall clock alongside test_system;
+# the fast CI job deselects both with -m "not slow"
+pytestmark = pytest.mark.slow
+
 
 def test_lr_schedule_shape():
     cfg = OptimizerConfig(learning_rate=1e-3, warmup_steps=10,
