@@ -104,6 +104,17 @@ def _train_cached(tag: str, cfg: ModelConfig, stream: np.ndarray,
     return params
 
 
+def untrained_pair():
+    """Random-init target/draft pair for smoke lanes: acceptance
+    dynamics are noise, but schedule/exactness behaviour is unchanged
+    and there is no multi-minute training step.  Same return shape as
+    :func:`build_pair`."""
+    cfg_t, cfg_d = target_config(), draft_config()
+    pt = init_params(model_specs(cfg_t), jax.random.PRNGKey(1), jnp.float32)
+    pd = init_params(model_specs(cfg_d), jax.random.PRNGKey(2), jnp.float32)
+    return cfg_t, cfg_d, pt, pd, 0.1
+
+
 def build_pair(regime: str = "llama"):
     """Returns (cfg_t, cfg_d, params_t, params_d, cost_ratio)."""
     os.makedirs(CACHE_DIR, exist_ok=True)
@@ -138,7 +149,8 @@ def serve(cfg_t, cfg_d, pt, pd, prompts: List[List[int]], *,
           goodput_draft_cost: Optional[float] = None,
           max_new_per_req: Optional[List[int]] = None,
           paged: bool = False, kv_block_size: int = 16,
-          num_kv_blocks: Optional[int] = None
+          num_kv_blocks: Optional[int] = None,
+          pipelined: bool = False
           ) -> Tuple[Dict, List[Request], ServingEngine]:
     extra = {}
     if goodput_draft_cost is not None:
@@ -157,7 +169,8 @@ def serve(cfg_t, cfg_d, pt, pd, prompts: List[List[int]], *,
                                       max_seq_len=max_seq_len,
                                       paged_kv=paged,
                                       kv_block_size=kv_block_size,
-                                      num_kv_blocks=num_kv_blocks),
+                                      num_kv_blocks=num_kv_blocks,
+                                      pipelined=pipelined),
                         seed=seed)
     reqs = [Request(i, prompt=p,
                     max_new_tokens=(max_new_per_req[i]

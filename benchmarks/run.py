@@ -13,8 +13,8 @@ import sys
 import time
 import traceback
 
-SUITES = ("table1", "table2", "table3", "table4", "table5", "fig6", "fig9",
-          "roofline")
+SUITES = ("table1", "table2", "table3", "table4", "table5", "table6",
+          "fig6", "fig9", "roofline")
 
 
 def main() -> None:
@@ -34,6 +34,8 @@ def main() -> None:
                 from benchmarks.table4_low_acceptance import run
             elif suite == "table5":
                 from benchmarks.table5_paged_capacity import run
+            elif suite == "table6":
+                from benchmarks.table6_pipeline_overlap import run
             elif suite == "fig6":
                 from benchmarks.fig6_sensitivity import run
             elif suite == "fig9":

@@ -5,11 +5,18 @@ controller added purely through the SpecPolicy API).
 
 This is the full paper pipeline at CPU scale: training-free calibration,
 per-sequence per-iteration SL from KLD-variance stability (WVIR), and the
-adaptive SL cap against stragglers.
+adaptive SL cap against stragglers.  Both engine schedules are exercised:
+the synchronous lockstep loop and the plan → dispatch → collect pipeline
+(DESIGN.md §7), which must emit byte-identical greedy streams.
 
 Run:  PYTHONPATH=src python examples/serve_dynamic_sl.py
       (first run trains the pair, ~3 min on CPU; cached afterwards)
+
+      PYTHONPATH=src python examples/serve_dynamic_sl.py --smoke
+      (CI lane: untrained pair, tiny mix, seconds not minutes)
 """
+import argparse
+
 import numpy as np
 
 import os
@@ -19,26 +26,39 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 from benchmarks import common
 
 
+def build_pair(smoke: bool):
+    return common.untrained_pair() if smoke else common.build_pair("llama")
+
+
 def main():
-    print("== building trained target/draft pair (cached) ==")
-    cfg_t, cfg_d, pt, pd, ratio = common.build_pair("llama")
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="untrained pair + tiny mix (CI lane)")
+    args = ap.parse_args()
+
+    label = "untrained (smoke)" if args.smoke else "trained (cached)"
+    print(f"== building target/draft pair: {label} ==")
+    cfg_t, cfg_d, pt, pd, ratio = build_pair(args.smoke)
     print(f"   draft/target FLOP ratio: {ratio:.3f}")
 
     # heterogeneous workload: code-like + dialogue-like requests interleaved
+    per = 2 if args.smoke else 4
+    max_new = 12 if args.smoke else 48
     prompts = []
     for i, name in enumerate(common.DATASETS):
-        prompts += common.dataset(name).prompts(4, 16, seed=42 + i)
+        prompts += common.dataset(name).prompts(per, 16, seed=42 + i)
     rng = np.random.RandomState(0)
     rng.shuffle(prompts)
 
-    print(f"== serving {len(prompts)} requests, batch=8, max_new=48 ==")
+    print(f"== serving {len(prompts)} requests, batch=8, "
+          f"max_new={max_new} ==")
     header = (f"{'policy':16s} {'rounds':>7s} {'BE':>6s} {'accept':>7s} "
               f"{'latency_units':>14s} {'speedup':>8s}")
     print(header)
     lu_ar = None
     for policy in ("autoregressive", "static", "adaedl", "dsde", "goodput"):
         m, reqs, eng = common.serve(cfg_t, cfg_d, pt, pd, prompts,
-                                    policy=policy, max_new=48, batch=8,
+                                    policy=policy, max_new=max_new, batch=8,
                                     goodput_draft_cost=ratio)
         lu = common.latency_units(m, ratio)
         if policy == "autoregressive":   # the speedup baseline row
@@ -47,9 +67,25 @@ def main():
               f"{m['mean_acceptance']:7.2f} {lu:14.1f} "
               f"{lu_ar / lu:7.2f}x")
 
+    print("\n== sync vs pipelined schedule (dsde, identical streams) ==")
+    streams = {}
+    for pipelined in (False, True):
+        m, reqs, eng = common.serve(cfg_t, cfg_d, pt, pd, prompts,
+                                    policy="dsde", max_new=max_new, batch=8,
+                                    pipelined=pipelined)
+        streams[pipelined] = [r.output for r in reqs]
+        mode = "pipelined" if pipelined else "sync"
+        print(f"  {mode:9s}: wall={m['wall_time_s']:.2f}s "
+              f"rounds={m['rounds']} "
+              f"host_blocked/round={m['host_blocked_per_round_s'] * 1e3:.1f}ms "
+              f"ttft_mean={m['ttft_mean_s'] * 1e3:.0f}ms "
+              f"queue_wait={m['queue_wait_mean_s'] * 1e3:.0f}ms")
+    assert streams[False] == streams[True], "schedules must not change tokens"
+    print("  token streams byte-identical across schedules: OK")
+
     print("\n== DSDE per-round dynamics (first 12 rounds) ==")
     _, _, eng = common.serve(cfg_t, cfg_d, pt, pd, prompts, policy="dsde",
-                             max_new=48, batch=8)
+                             max_new=max_new, batch=8)
     for i, r in enumerate(eng.round_log[:12]):
         print(f"  round {i:2d}: K={r['k']} emitted={r['emitted']:.0f} "
               f"accepted={r['accepted']:.0f}/{r['proposed']:.0f}")

@@ -254,6 +254,12 @@ class ServingConfig:
     eos_token_id: int = 1
     # continuous batching: admit new requests when slots free up.
     continuous_batching: bool = True
+    # plan -> dispatch -> collect pipeline (DESIGN.md §7): enqueue round
+    # N+1 while round N's outputs are still on the wire and reconcile
+    # the host one round behind.  Relies on device-side termination in
+    # the round, so greedy token streams are byte-identical to the
+    # synchronous engine; False keeps the lockstep step() loop.
+    pipelined: bool = False
     # --- paged KV cache (DESIGN.md §4) ---------------------------------
     # block-pool KV layout: sequences hold block tables into a shared
     # pool instead of one dense max_seq_len row per slot; admission is

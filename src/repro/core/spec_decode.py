@@ -56,20 +56,33 @@ class RoundState(NamedTuple):
     per-sequence ``block_table`` rows the allocator maintains, so block
     tables ride through the jitted round with no extra plumbing —
     rollback stays pure length arithmetic and freed speculative blocks
-    simply return to the pool on the host side."""
+    simply return to the pool on the host side.
+
+    Termination is *device-side* (DESIGN.md §7): a slot that emits its
+    EOS or exhausts ``tokens_budget`` mid-round raises its own ``done``
+    flag and stops consuming draft/verify work in every later round, so
+    the engine can chain round N+1 onto round N before the host has
+    reconciled round N's outputs (the plan → dispatch → collect
+    pipeline).  The engine resets all three fields when it prefills a
+    new request into a slot."""
     target_cache: PyTree
     draft_cache: PyTree
     policy_state: PyTree       # the SpecPolicy's per-sequence state pytree
     pending: jax.Array         # [B] last emitted token, not yet in caches
     sl_next: jax.Array         # [B] per-sequence SL for the next round
     key: jax.Array
+    done: jax.Array            # [B] bool — slot terminated itself in-round
+    tokens_budget: jax.Array   # [B] int32 — tokens the slot may still emit
+    eos_id: jax.Array          # [B] int32 — per-slot EOS token (-1 = none)
 
 
 class RoundOutput(NamedTuple):
     emitted: jax.Array         # [B, K+1] new tokens (pad beyond num_emitted)
-    num_emitted: jax.Array     # [B]
+    num_emitted: jax.Array     # [B] — already truncated to EOS / budget
     num_accepted: jax.Array    # [B]
     num_proposed: jax.Array    # [B]
+    finished: jax.Array        # [B] bool — slot terminated THIS round
+    live: jax.Array            # [B] bool — slot did real work this round
     telemetry: Dict[str, jax.Array]
 
 
@@ -126,18 +139,24 @@ def spec_decode_round(params_t: PyTree, params_d: PyTree,
                       ) -> Tuple[RoundState, RoundOutput]:
     """One full speculative round with draft bucket size ``k``.
 
-    ``active [B]`` masks live request slots (continuous batching)."""
+    ``active [B]`` masks occupied request slots (continuous batching);
+    the round intersects it with ``~state.done`` so a slot that
+    terminated itself device-side in an earlier — possibly not yet
+    host-reconciled — round does no draft/verify work and emits
+    nothing.  This is what makes back-to-back dispatch sound: the
+    engine may enqueue round N+1 before it has looked at round N."""
     policy = build_policy(spec)     # trace-time: spec is static
     key, k_draft, k_rej = jax.random.split(state.key, 3)
     b = state.pending.shape[0]
     pad_id = cfg_t.vocab_size  # reserved padding token id (paper §3.2)
 
-    sl_i = jnp.minimum(state.sl_next, k) * active.astype(jnp.int32)
+    live = active & ~state.done
+    sl_i = jnp.minimum(state.sl_next, k) * live.astype(jnp.int32)
 
     # --- 1. draft -----------------------------------------------------------
     if k > 0:
         draft_tokens, draft_logits, draft_cache, eff_sl = _draft_loop(
-            params_d, cfg_d, state, k, sl_i, policy, k_draft, active)
+            params_d, cfg_d, state, k, sl_i, policy, k_draft, live)
         sl_i = jnp.minimum(sl_i, eff_sl)  # draft_keep early stop shrinks here
     else:  # no-draft bucket (autoregressive policy, or an all-idle batch)
         draft_tokens = jnp.zeros((b, 0), jnp.int32)
@@ -157,7 +176,7 @@ def spec_decode_round(params_t: PyTree, params_d: PyTree,
     # paged caches: verification writes positions len..len+K; only
     # j <= SL_i can ever be committed, so the rest never leaves the
     # sequence's own block budget (dense rings ignore the mask)
-    verify_wm = (jnp.arange(k + 1)[None] <= sl_i[:, None]) & active[:, None]
+    verify_wm = (jnp.arange(k + 1)[None] <= sl_i[:, None]) & live[:, None]
     t_logits, t_cache_v, _ = forward(params_t, cfg_t, verify_tokens,
                                      cache=state.target_cache, mode="decode",
                                      write_mask=verify_wm)
@@ -179,11 +198,11 @@ def spec_decode_round(params_t: PyTree, params_d: PyTree,
         kld = jnp.zeros((b, 0), jnp.float32)
     obs = PolicyObservation(
         kld=kld, proposed_valid=proposed, num_accepted=rej.num_accepted,
-        num_proposed=sl_i, active=active)
+        num_proposed=sl_i, active=live)
     new_pstate = policy.observe(state.policy_state, obs)
 
     # --- 5. commit ------------------------------------------------------------
-    n_committed = (1 + rej.num_accepted) * active.astype(jnp.int32)
+    n_committed = (1 + rej.num_accepted) * live.astype(jnp.int32)
     t_cache = commit(params_t, cfg_t, verify_tokens, state.target_cache,
                      t_cache_v, n_committed)
     if k > 0:
@@ -192,18 +211,42 @@ def spec_decode_round(params_t: PyTree, params_d: PyTree,
     else:  # the draft model was never consulted
         d_cache = state.draft_cache
 
-    # --- 6. predict next SL ----------------------------------------------------
-    sl_next, new_pstate, telemetry = policy.predict(new_pstate, active)
+    # --- 6. device-side termination -------------------------------------------
+    # Truncate the emitted stream exactly the way the host loop used to:
+    # walk the tokens in order, stop after the first EOS or once the
+    # remaining ``tokens_budget`` is spent, and raise ``done`` so later
+    # rounds skip the slot.  The host merely mirrors these decisions at
+    # reconciliation — which may be a full round later.
+    n_raw = rej.num_emitted                                    # [B]
+    pos1 = jnp.arange(k + 1)[None, :]
+    in_raw = pos1 < n_raw[:, None]
+    is_eos = ((rej.emitted == state.eos_id[:, None])
+              & in_raw & (state.eos_id >= 0)[:, None])
+    inf = jnp.int32(k + 2)                                     # > any n_raw
+    eos_cut = jnp.where(is_eos.any(1),
+                        jnp.argmax(is_eos, 1).astype(jnp.int32) + 1, inf)
+    n_emit = jnp.minimum(n_raw, jnp.minimum(eos_cut, state.tokens_budget))
+    n_emit = jnp.where(live, n_emit, 0)
+    finished = live & ((n_emit == eos_cut) | (n_emit == state.tokens_budget))
+    new_done = state.done | finished
+    new_budget = jnp.maximum(state.tokens_budget - n_emit, 0)
+
+    # --- 7. predict next SL ----------------------------------------------------
+    sl_next, new_pstate, telemetry = policy.predict(new_pstate, live)
 
     new_state = RoundState(
         target_cache=t_cache, draft_cache=d_cache, policy_state=new_pstate,
-        pending=jnp.where(active, rej.next_token, state.pending),
-        sl_next=sl_next, key=key)
+        pending=jnp.where(live, rej.next_token, state.pending),
+        sl_next=sl_next, key=key,
+        done=new_done, tokens_budget=new_budget, eos_id=state.eos_id)
     out = RoundOutput(
-        emitted=jnp.where(active[:, None], rej.emitted, pad_id),
-        num_emitted=rej.num_emitted * active.astype(jnp.int32),
-        num_accepted=rej.num_accepted * active.astype(jnp.int32),
+        emitted=jnp.where(live[:, None] & (pos1 < n_emit[:, None]),
+                          rej.emitted, pad_id),
+        num_emitted=n_emit,
+        num_accepted=rej.num_accepted * live.astype(jnp.int32),
         num_proposed=sl_i,
+        finished=finished,
+        live=live,
         telemetry=telemetry)
     return new_state, out
 
@@ -215,8 +258,18 @@ def init_round_state(cfg_t: ModelConfig, cfg_d: ModelConfig,
                      paged: Optional[Tuple[int, int]] = None) -> RoundState:
     """``paged=(num_blocks, block_size)`` builds block-paged caches for
     both models: one allocator decision covers a block id in the target
-    pool and the same id in the draft pool (the tables mirror)."""
+    pool and the same id in the draft pool (the tables mirror).
+
+    The termination fields default to "never terminate" (``done`` clear,
+    effectively infinite ``tokens_budget``, no EOS) so direct round
+    drivers — benchmarks, the policy invariant suite — keep the
+    pre-pipeline semantics; the serving engine overwrites all three per
+    slot at prefill."""
     policy = build_policy(spec)
+    no_term = dict(
+        done=jnp.zeros((batch,), bool),
+        tokens_budget=jnp.full((batch,), jnp.int32(2 ** 30), jnp.int32),
+        eos_id=jnp.full((batch,), -1, jnp.int32))
     if paged is not None:
         n_blocks, bs = paged
         t_cache = cache_lib.paged_cache_struct(cfg_t, batch, max_len,
@@ -228,7 +281,7 @@ def init_round_state(cfg_t: ModelConfig, cfg_d: ModelConfig,
             policy_state=policy.init_state(batch),
             pending=jnp.zeros((batch,), jnp.int32),
             sl_next=policy.initial_sl(batch),
-            key=key)
+            key=key, **no_term)
     t_cache = cache_lib.cache_struct(cfg_t, batch, max_len, dtype,
                                      enc_len=enc_len)
     d_cache = cache_lib.cache_struct(cfg_d, batch, max_len, dtype,
@@ -238,7 +291,7 @@ def init_round_state(cfg_t: ModelConfig, cfg_d: ModelConfig,
         policy_state=policy.init_state(batch),
         pending=jnp.zeros((batch,), jnp.int32),
         sl_next=policy.initial_sl(batch),
-        key=key)
+        key=key, **no_term)
 
 
 def pick_bucket(sl_next, spec: SpecDecodeConfig, active) -> int:

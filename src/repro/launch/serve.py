@@ -33,6 +33,10 @@ def main() -> None:
     ap.add_argument("--paged", action="store_true",
                     help="serve from the block-paged KV pool at half the "
                          "dense engine's KV bytes (DESIGN.md §4)")
+    ap.add_argument("--pipelined", action="store_true",
+                    help="plan/dispatch/collect pipelined schedule: "
+                         "reconcile the host one round behind the device "
+                         "(DESIGN.md §7); byte-identical greedy streams")
     args = ap.parse_args()
 
     if args.demo:
@@ -52,11 +56,12 @@ def main() -> None:
         noise = init_params(model_specs(cfg), jax.random.PRNGKey(7),
                             jnp.float32)
         pd = jax.tree_util.tree_map(lambda a, b: a + 0.03 * b, pt, noise)
-        serving = ServingConfig(max_batch_size=4, max_seq_len=256)
+        serving = ServingConfig(max_batch_size=4, max_seq_len=256,
+                                pipelined=args.pipelined)
         if args.paged:
             serving = ServingConfig(
                 max_batch_size=4, max_seq_len=256, paged_kv=True,
-                kv_block_size=16,
+                kv_block_size=16, pipelined=args.pipelined,
                 num_kv_blocks=4 * (256 // 16) // 2)   # 50% of dense bytes
         eng = ServingEngine(pt, cfg, pd, cfg,
                             SpecDecodeConfig(policy=args.policy), serving)

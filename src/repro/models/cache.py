@@ -209,19 +209,23 @@ def paged_cache_struct(cfg: ModelConfig, batch: int, max_len: int,
 
 def paged_prefill_view(cfg: ModelConfig, pool_k: jax.Array,
                        pool_v: jax.Array, kv_pos: jax.Array,
-                       table_row: jax.Array) -> CacheT:
-    """Batch-1 paged cache view over the *shared* pools, for prefilling
-    one request straight into its allocated blocks: pool-shaped leaves
-    alias the live pools, per-sequence leaves (length, block table,
-    hybrid recurrent rows) are fresh batch-1 rows the engine scatters
-    back into the batched cache afterwards."""
-    c: CacheT = {"length": jnp.zeros((1,), jnp.int32),
+                       table_rows: jax.Array) -> CacheT:
+    """Batch-R paged cache view over the *shared* pools, for prefilling a
+    group of requests straight into their allocated blocks in ONE
+    multi-row program (``table_rows [R, max_blocks]``, one row per
+    request): pool-shaped leaves alias the live pools and every row's KV
+    writes route through its own block-table row, so the rows land in
+    disjoint blocks; per-sequence leaves (length, block table, hybrid
+    recurrent rows) are fresh batch-R rows the engine scatters back into
+    the batched cache afterwards."""
+    rows = table_rows.shape[0]
+    c: CacheT = {"length": jnp.zeros((rows,), jnp.int32),
                  "k": pool_k, "v": pool_v, "kv_pos": kv_pos,
-                 "block_table": table_row}
+                 "block_table": table_rows}
     if cfg.family == "hybrid":
         _, n_rec = hybrid_layer_counts(cfg)
-        c["lru"] = jnp.zeros((n_rec, 1, cfg.rglru.lru_width), jnp.float32)
-        c["conv"] = jnp.zeros((n_rec, 1, cfg.rglru.conv_width - 1,
+        c["lru"] = jnp.zeros((n_rec, rows, cfg.rglru.lru_width), jnp.float32)
+        c["conv"] = jnp.zeros((n_rec, rows, cfg.rglru.conv_width - 1,
                                cfg.rglru.lru_width), pool_k.dtype)
     return c
 

@@ -1,15 +1,32 @@
-"""DSDE serving engine: continuous batching + per-sequence dynamic SL.
+"""DSDE serving engine: a plan → dispatch → collect pipeline over the
+jitted speculative round (DESIGN.md §7).
 
 The engine composes:
   * :class:`LookaheadScheduler`  — queue/slot admission from SL predictions
     plus, under the paged KV layout, the block allocator (grow on demand,
     preempt when the pool runs dry);
   * ``spec_decode_round``        — the jitted speculative round (bucketed by
-    K so there is one XLA program per draft length, never per step);
-  * slot-wise prefill            — prompts are bucketed to powers of two and
-    right-padded, so admission also reuses a small set of programs.  Dense
-    slots prefill a fresh cache row; paged requests prefill straight into
-    their allocated pool blocks through the block table.
+    K so there is one XLA program per draft length, never per step) with
+    *device-side termination*: a slot that emits EOS or exhausts its token
+    budget deactivates itself in-round, so rounds can be chained
+    back-to-back without waiting for host EOS checks;
+  * batched prefill              — requests admitted together that share a
+    prompt bucket prefill as ONE multi-row program (dense rows or a
+    multi-row paged-table view), not two jit calls per request.
+
+Two execution modes share every phase:
+
+  * synchronous (default)       — ``step()`` = plan, dispatch, collect;
+    the host reconciles each round before dispatching the next (the
+    lockstep loop, simplest to reason about, what the unit tests drive).
+  * pipelined (``ServingConfig.pipelined``) — ``run()`` enqueues round
+    N+1 immediately after round N and reconciles the host ONE ROUND
+    BEHIND: token distribution, EOS bookkeeping, block shrink and the
+    round log all happen while the device is already crunching the next
+    round.  Greedy token streams are byte-identical to the synchronous
+    engine (speculative decoding is exact, and truncation semantics live
+    on the device); scheduling-side telemetry (round counts, bucket
+    sequence) may differ by the one-round lag.
 
 This runs for real on CPU (reduced models) and is the same code path the
 TPU launch scripts drive; only meshes/shardings differ (repro/launch).
@@ -39,60 +56,66 @@ PyTree = Any
 _BATCH_AXIS0 = ("length", "kv_pos", "enc_valid", "block_table")
 
 
-def _set_slot(big: PyTree, row: PyTree, slot) -> PyTree:
-    """Scatter a batch=1 cache row into the batched cache at ``slot``."""
+def _set_slots(big: PyTree, rows: PyTree, idx: jax.Array) -> PyTree:
+    """Scatter a batch=R cache-row group into the batched cache at the R
+    slots ``idx`` (one fused scatter per leaf, not one per request)."""
     out = {}
     for k, v in big.items():
-        r = row[k]
+        r = rows[k]
         if k in _BATCH_AXIS0:
-            out[k] = v.at[slot].set(r[0])
+            out[k] = v.at[idx].set(r)
         else:
-            out[k] = v.at[:, slot].set(r[:, 0])
+            out[k] = v.at[:, idx].set(r)
     return out
 
 
 def _prefill_forward(params: PyTree, cfg: ModelConfig, cache: PyTree,
-                     tokens: jax.Array, prompt_len: jax.Array
+                     tokens: jax.Array, prompt_lens: jax.Array
                      ) -> Tuple[PyTree, jax.Array]:
-    """Shared prefill tail: masked forward over the right-padded prompt,
-    commit ``length``, pick the last real token's logits."""
-    mask = (jnp.arange(tokens.shape[1])[None] < prompt_len)
+    """Shared multi-row prefill tail: masked forward over the
+    right-padded prompts [R, bucket], commit per-row ``length``, pick
+    each row's last real token's logits."""
+    mask = (jnp.arange(tokens.shape[1])[None] < prompt_lens[:, None])
     logits, cache, _ = forward(params, cfg, tokens, cache=cache,
                                mode="prefill", input_mask=mask)
-    cache["length"] = jnp.full((1,), prompt_len, jnp.int32)
-    last = logits[0, jnp.maximum(prompt_len - 1, 0)]
+    cache["length"] = prompt_lens.astype(jnp.int32)
+    rows = jnp.arange(tokens.shape[0])
+    last = logits[rows, jnp.maximum(prompt_lens - 1, 0)]
     return cache, last
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "max_len", "prompt_bucket"))
-def _prefill_row(params: PyTree, cfg: ModelConfig, tokens: jax.Array,
-                 prompt_len: jax.Array, max_len: int, prompt_bucket: int,
-                 ) -> Tuple[PyTree, jax.Array]:
-    """Prefill one request into a fresh single-row cache.  ``tokens`` is
-    right-padded to ``prompt_bucket``.  Returns (cache_row, last_logits)."""
-    del prompt_bucket  # shape is already static via tokens
-    cache = cache_lib.cache_struct(cfg, 1, max_len, jnp.float32)
-    return _prefill_forward(params, cfg, cache, tokens, prompt_len)
+@functools.partial(jax.jit, static_argnames=("cfg", "max_len"))
+def _prefill_rows(params: PyTree, cfg: ModelConfig, tokens: jax.Array,
+                  prompt_lens: jax.Array, max_len: int
+                  ) -> Tuple[PyTree, jax.Array]:
+    """Prefill a same-bucket group of R requests into fresh cache rows in
+    one program.  ``tokens [R, bucket]`` is right-padded; the (R, bucket)
+    pair keys the compiled-program cache.  Returns (cache rows [*, R, *],
+    last_logits [R, V])."""
+    cache = cache_lib.cache_struct(cfg, tokens.shape[0], max_len,
+                                   jnp.float32)
+    return _prefill_forward(params, cfg, cache, tokens, prompt_lens)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "prompt_bucket"),
+@functools.partial(jax.jit, static_argnames=("cfg",),
                    donate_argnames=("pool_k", "pool_v", "kv_pos"))
-def _prefill_paged_row(params: PyTree, cfg: ModelConfig, pool_k: jax.Array,
-                       pool_v: jax.Array, kv_pos: jax.Array,
-                       table_row: jax.Array, tokens: jax.Array,
-                       prompt_len: jax.Array, prompt_bucket: int
-                       ) -> Tuple[PyTree, jax.Array]:
-    """Prefill one request *straight into its allocated pool blocks*: the
-    batch-1 cache view aliases the shared pools and routes every KV write
-    through the request's block-table row.  The pools are donated — the
-    caller immediately replaces its references with the returned ones, so
+def _prefill_paged_rows(params: PyTree, cfg: ModelConfig, pool_k: jax.Array,
+                        pool_v: jax.Array, kv_pos: jax.Array,
+                        table_rows: jax.Array, tokens: jax.Array,
+                        prompt_lens: jax.Array
+                        ) -> Tuple[PyTree, jax.Array]:
+    """Prefill a same-bucket group of R requests *straight into their
+    allocated pool blocks* as one multi-row program: the batch-R cache
+    view aliases the shared pools and routes every row's KV writes
+    through that row of ``table_rows [R, max_blocks]`` — rows land in
+    disjoint blocks by construction.  The pools are donated — the caller
+    immediately replaces its references with the returned ones, so
     admission never copies (or transiently doubles) the whole pool.
-    Returns (cache view with updated pools + fresh recurrent rows,
-    last_logits)."""
-    del prompt_bucket  # shape is already static via tokens
+    Returns (cache view with updated pools + fresh per-row state,
+    last_logits [R, V])."""
     cache = cache_lib.paged_prefill_view(cfg, pool_k, pool_v, kv_pos,
-                                         table_row)
-    return _prefill_forward(params, cfg, cache, tokens, prompt_len)
+                                         table_rows)
+    return _prefill_forward(params, cfg, cache, tokens, prompt_lens)
 
 
 def _bucket(n: int, minimum: int = 16, cap: Optional[int] = None) -> int:
@@ -104,6 +127,28 @@ def _bucket(n: int, minimum: int = 16, cap: Optional[int] = None) -> int:
         b = min(b, cap)
         assert n <= b, f"prompt of {n} tokens exceeds the KV budget {cap}"
     return b
+
+
+class _DispatchRecord:
+    """Host-side snapshot of one dispatched round, reconciled by
+    ``collect`` — possibly a full round later, after ``plan`` has already
+    mutated the engine's device state.  Everything ``collect`` needs is
+    captured here by reference at dispatch time: the (request, slot)
+    occupancy as the round saw it, the prefill-sampled first tokens
+    riding this round, and the round's output arrays (immutable jax
+    arrays whose host copies were started with ``copy_to_host_async``).
+    """
+
+    __slots__ = ("k", "rows", "admits", "out", "sl_next", "t_dispatch")
+
+    def __init__(self, k: int, rows, admits, out, sl_next, t_dispatch):
+        self.k = k
+        self.rows = rows          # [(req, slot, preemptions-at-dispatch)]
+        self.admits = admits      # [(fresh_reqs, pend [R] jax, fresh_idx,
+                                  #   preemptions-at-prefill)]
+        self.out = out            # RoundOutput (device futures)
+        self.sl_next = sl_next    # [B] jax — post-round SL predictions
+        self.t_dispatch = t_dispatch
 
 
 class ServingEngine:
@@ -132,13 +177,22 @@ class ServingEngine:
         self.state = sd.init_round_state(
             cfg_target, cfg_draft, spec, b, serving.max_seq_len,
             self._next_key(), paged=paged_arg)
-        # host-side mirror of state.sl_next, refreshed once per round while
-        # the round's other outputs are already being transferred — the
-        # bucket choice never triggers its own device->host sync.
+        # host-side mirror of state.sl_next, refreshed once per collect
+        # while the round's other outputs are already being transferred —
+        # the bucket choice never triggers its own device->host sync.
+        # Under the pipelined loop this mirror is ONE ROUND STALE at
+        # dispatch time; block planning adds worst-case slack for that.
         self._sl_next_host = np.full((b,), self.policy.initial_sl_value(),
                                      np.int32)
+        # pipeline bookkeeping
+        self._inflight: Optional[_DispatchRecord] = None
+        # (fresh requests, pend tokens [R], their row indices, their
+        # preemption counts at prefill) awaiting the next dispatch
+        self._pending_admits: List[Tuple[List[Request], jax.Array,
+                                         List[int], List[int]]] = []
+        self._planned_k: Optional[int] = None
+        self._finished_at_prefill: List[Request] = []
         # telemetry
-        self._finished_at_prefill = []
         self.rounds = 0
         self.draft_steps = 0            # padded bucket steps (k+1)
         self.draft_steps_effective = 0  # max per-seq proposals + 1 (what a
@@ -154,13 +208,6 @@ class ServingEngine:
     # ------------------------------------------------------------- lifecycle
     def submit(self, req: Request) -> None:
         self.scheduler.submit(req)
-
-    def _admit(self) -> None:
-        for req in self.scheduler.admit():
-            self._prefill_into_slot(req)
-            if req.done:   # finished at prefill (eos / max_new_tokens == 1)
-                self.scheduler.release(req)
-                self._finished_at_prefill.append(req)
 
     # ----------------------------------------------------------- block plane
     def _table_row(self, req: Request) -> np.ndarray:
@@ -188,11 +235,30 @@ class ServingEngine:
         self.state = st._replace(target_cache=tc, draft_cache=dc)
 
     def _plan_blocks(self) -> None:
-        """Pre-round capacity planning: grow every running sequence to
-        ``committed + policy.lookahead(SL_i)`` KV slots, preempting the
+        """Pre-round capacity planning: grow every running sequence's
+        allocation to cover the next round's write extent, preempting the
         youngest sequences (evict-and-requeue, recompute-on-readmit) when
-        the pool runs dry instead of rejecting anybody."""
-        la = self.scheduler.lookahead_slots()
+        the pool runs dry instead of rejecting anybody.
+
+        Synchronous mode plans exactly: ``committed +
+        policy.lookahead(SL_i)``.  Pipelined mode plans from ONE-ROUND-
+        STALE mirrors, so it must never trust a per-slot value that the
+        in-flight round could raise; instead it uses the staleness-slack
+        bound (DESIGN.md §7):
+
+            need_i = cache_len_i(stale) + (1 + K_inflight) + (1 + K_next)
+
+        where ``1 + K_inflight`` covers the largest commit the not yet
+        reconciled round can apply and ``1 + K_next`` covers the next
+        round's widest write (per-slot SL is capped by the bucket
+        ``K_next`` on device, so the bound holds regardless of what the
+        stale mirror says).  Lagged information can therefore only ever
+        OVER-allocate — the tail comes back at the next shrink."""
+        pipelined = self.serving.pipelined
+        la = None if pipelined else self.scheduler.lookahead_slots()
+        k_next = self._planned_k or 0
+        inflight_ids = ({id(r) for r, _, _ in self._inflight.rows}
+                        if self._inflight is not None else set())
         slot_of = {id(r): r.slot for r in self.scheduler.running}
         fresh_ids: List[int] = []
         rows: List[Tuple[int, np.ndarray]] = []
@@ -200,7 +266,13 @@ class ServingEngine:
         for req in sorted(self.scheduler.running, key=lambda r: r.admit_seq):
             if req.slot is None:        # preempted by an earlier grow
                 continue
-            need = req.cache_len + int(la[req.slot])
+            if pipelined:
+                slack = ((1 + self._inflight.k)
+                         if id(req) in inflight_ids else 0)
+                need = min(req.cache_len + slack + k_next + 1,
+                           self.serving.max_seq_len)
+            else:
+                need = req.cache_len + int(la[req.slot])
             new_blocks, preempted = self.scheduler.ensure_capacity(req, need)
             if new_blocks:
                 fresh_ids += new_blocks
@@ -211,148 +283,331 @@ class ServingEngine:
                                         -1, np.int32)))
         self._sync_block_tables(rows + cleared, fresh_ids)
 
-    def _prefill_into_slot(self, req: Request) -> None:
-        slot = req.slot
-        prefix = req.prefill_tokens()
-        readmit = bool(req.output)      # recompute-on-readmit (preemption)
-        bucket = _bucket(len(prefix), cap=self.serving.max_seq_len)
-        toks = np.full((1, bucket), 0, np.int32)
-        toks[0, :len(prefix)] = prefix
-        toks = jnp.asarray(toks)
-        plen = jnp.int32(len(prefix))
-        if self.paged:
-            row = self._table_row(req)
-            self._sync_block_tables([(slot, row)], req.block_ids)
-            st = self.state
-            tc, dc = dict(st.target_cache), dict(st.draft_cache)
-            row_j = jnp.asarray(row, jnp.int32)[None]
-            row_t, last_t = _prefill_paged_row(
-                self.pt, self.cfg_t, tc["k"], tc["v"], tc["kv_pos"],
-                row_j, toks, plen, bucket)
-            row_d, _ = _prefill_paged_row(
-                self.pd, self.cfg_d, dc["k"], dc["v"], dc["kv_pos"],
-                row_j, toks, plen, bucket)
-            for big, r in ((tc, row_t), (dc, row_d)):
-                big["k"], big["v"] = r["k"], r["v"]
-                big["kv_pos"] = r["kv_pos"]
-                big["length"] = big["length"].at[slot].set(r["length"][0])
-                for key in ("lru", "conv"):    # hybrid recurrent rows
-                    if key in big:
-                        big[key] = big[key].at[:, slot].set(r[key][:, 0])
-        else:
-            st = self.state
-            row_t, last_t = _prefill_row(self.pt, self.cfg_t, toks, plen,
-                                         self.serving.max_seq_len, bucket)
-            row_d, _ = _prefill_row(self.pd, self.cfg_d, toks, plen,
-                                    self.serving.max_seq_len, bucket)
-            tc = _set_slot(st.target_cache, row_t, slot)
-            dc = _set_slot(st.draft_cache, row_d, slot)
-        req.cache_len = len(prefix)
-        if readmit:
-            # the last emitted token IS the pending token; re-sampling
-            # would fork the RNG stream and (at temperature > 0) the output
-            pend = jnp.int32(req.output[-1])
-        else:
-            pend = sample_token(self._next_key(), last_t[None],
-                                self.spec.temperature,
-                                self.cfg_t.vocab_size)[0].astype(jnp.int32)
-            # the prefill-sampled token IS the first generated token
-            first = int(pend)
-            req.output.append(first)
+    # --------------------------------------------------------------- prefill
+    def _commit_first_tokens(self, items: List[Tuple[Request, int]],
+                             now: float) -> List[Request]:
+        """Append prefill-sampled first tokens host-side and apply the
+        EOS / max_new_tokens terminal checks (the host mirror of the
+        device-side ``done`` computation at prefill)."""
+        finished = []
+        for req, tok in items:
+            req.output.append(tok)
             self.emitted_total += 1
-            req.first_token_time = time.monotonic()
-            if ((req.eos_token_id is not None and first == req.eos_token_id)
+            if req.first_token_time is None:
+                req.first_token_time = now
+            if ((req.eos_token_id is not None and tok == req.eos_token_id)
                     or len(req.output) >= req.max_new_tokens):
                 req.state = RequestState.FINISHED
-                req.finish_time = req.first_token_time
-        rows = jnp.zeros((self.serving.max_batch_size,), bool).at[slot].set(True)
-        ps = self.policy.reset_rows(st.policy_state, rows)
+                req.finish_time = now
+                finished.append(req)
+        return finished
+
+    def _admit(self) -> None:
+        """Admission: move queued requests into free slots and prefill
+        them, grouped by prompt bucket — every same-bucket group runs as
+        ONE multi-row program (2 jit calls per *group*, not per
+        request)."""
+        admitted = self.scheduler.admit()
+        if not admitted:
+            return
+        now = time.monotonic()
+        groups: Dict[int, List[Request]] = {}
+        for req in admitted:
+            if req.first_dispatch_time is None:
+                req.first_dispatch_time = now
+            b = _bucket(len(req.prefill_tokens()),
+                        cap=self.serving.max_seq_len)
+            groups.setdefault(b, []).append(req)
+        for bucket in sorted(groups):
+            self._prefill_group(groups[bucket], bucket)
+
+    def _prefill_group(self, reqs: List[Request], bucket: int) -> None:
+        r = len(reqs)
+        slots = [req.slot for req in reqs]
+        idx = jnp.asarray(slots, jnp.int32)
+        toks_np = np.zeros((r, bucket), np.int32)
+        plens = np.zeros((r,), np.int32)
+        readmit = np.zeros((r,), bool)
+        budgets = np.zeros((r,), np.int32)
+        eos = np.full((r,), -1, np.int32)
+        pend_host = np.zeros((r,), np.int32)
+        for i, req in enumerate(reqs):
+            prefix = req.prefill_tokens()
+            toks_np[i, :len(prefix)] = prefix
+            plens[i] = len(prefix)
+            # recompute-on-readmit (preemption): the last emitted token
+            # IS the pending token; re-sampling would fork the RNG
+            # stream and (at temperature > 0) the output
+            readmit[i] = bool(req.output)
+            # prefill itself emits one token for a fresh request
+            budgets[i] = req.max_new_tokens - (len(req.output)
+                                               if req.output else 1)
+            if req.eos_token_id is not None:
+                eos[i] = req.eos_token_id
+            if req.output:
+                pend_host[i] = req.output[-1]
+            req.cache_len = len(prefix)
+        toks = jnp.asarray(toks_np)
+        plen_j = jnp.asarray(plens)
+        if self.paged:
+            rows_np = [self._table_row(req) for req in reqs]
+            alloc_ids = [b for req in reqs for b in req.block_ids]
+            self._sync_block_tables(list(zip(slots, rows_np)), alloc_ids)
+            st = self.state
+            tc, dc = dict(st.target_cache), dict(st.draft_cache)
+            rows_j = jnp.asarray(np.stack(rows_np), jnp.int32)
+            rows_t, last_t = _prefill_paged_rows(
+                self.pt, self.cfg_t, tc["k"], tc["v"], tc["kv_pos"],
+                rows_j, toks, plen_j)
+            rows_d, _ = _prefill_paged_rows(
+                self.pd, self.cfg_d, dc["k"], dc["v"], dc["kv_pos"],
+                rows_j, toks, plen_j)
+            for big, rr in ((tc, rows_t), (dc, rows_d)):
+                big["k"], big["v"] = rr["k"], rr["v"]
+                big["kv_pos"] = rr["kv_pos"]
+                big["length"] = big["length"].at[idx].set(rr["length"])
+                for key in ("lru", "conv"):    # hybrid recurrent rows
+                    if key in big:
+                        big[key] = big[key].at[:, idx].set(rr[key])
+        else:
+            st = self.state
+            rows_t, last_t = _prefill_rows(self.pt, self.cfg_t, toks, plen_j,
+                                           self.serving.max_seq_len)
+            rows_d, _ = _prefill_rows(self.pd, self.cfg_d, toks, plen_j,
+                                      self.serving.max_seq_len)
+            tc = _set_slots(st.target_cache, rows_t, idx)
+            dc = _set_slots(st.draft_cache, rows_d, idx)
+        # pending token per row: sampled at prefill for fresh requests,
+        # the already-emitted last token for readmits
+        sampled = sample_token(self._next_key(), last_t,
+                               self.spec.temperature,
+                               self.cfg_t.vocab_size).astype(jnp.int32)
+        readmit_j = jnp.asarray(readmit)
+        budgets_j = jnp.asarray(budgets)
+        eos_j = jnp.asarray(eos)
+        pend = jnp.where(readmit_j, jnp.asarray(pend_host), sampled)
+        # device-side termination seed: a first token that is already EOS
+        # (or a 1-token budget) marks the slot done WITHOUT a host sync,
+        # so the pipelined loop can keep dispatching blind
+        done0 = ((pend == eos_j) & (eos_j >= 0)) | (budgets_j <= 0)
+        rows_mask = jnp.zeros((self.serving.max_batch_size,),
+                              bool).at[idx].set(True)
+        ps = self.policy.reset_rows(st.policy_state, rows_mask)
         sl0_val = self.policy.initial_sl_value()
-        sl0 = st.sl_next.at[slot].set(sl0_val)
-        self._sl_next_host[slot] = sl0_val
         # refresh the scheduler's mirror too: block planning for this
-        # round must see the fresh request's initial SL, not the slot's
-        # previous occupant's last prediction (a stale low SL would
+        # round must see the fresh requests' initial SL, not the slots'
+        # previous occupants' last predictions (a stale low SL would
         # under-allocate blocks and silently drop accepted KV writes)
+        self._sl_next_host[np.asarray(slots)] = sl0_val
         self.scheduler.update_predictions(self._sl_next_host)
         self.state = st._replace(
             target_cache=tc, draft_cache=dc, policy_state=ps,
-            pending=st.pending.at[slot].set(pend), sl_next=sl0)
+            pending=st.pending.at[idx].set(pend),
+            sl_next=st.sl_next.at[idx].set(jnp.int32(sl0_val)),
+            done=st.done.at[idx].set(done0),
+            tokens_budget=st.tokens_budget.at[idx].set(budgets_j),
+            eos_id=st.eos_id.at[idx].set(eos_j))
+        fresh = [(i, req) for i, req in enumerate(reqs) if not readmit[i]]
+        if not fresh:
+            return
+        if self.serving.pipelined:
+            # defer materialization: the tokens ride the next dispatch
+            # record and reach the host at its reconciliation.  The
+            # preemption count pins the prefill this token came from —
+            # a stub whose request was evicted before the round even
+            # dispatched is discarded at collect (the restart samples
+            # its own first token from its own re-prefill)
+            self._pending_admits.append(
+                ([req for _, req in fresh], pend, [i for i, _ in fresh],
+                 [req.preemptions for _, req in fresh]))
+        else:
+            pend_np = np.asarray(pend)
+            fin = self._commit_first_tokens(
+                [(req, int(pend_np[i])) for i, req in fresh],
+                time.monotonic())
+            for req in fin:    # finished at prefill (eos / max_new == 1)
+                self.scheduler.release(req)
+                self._finished_at_prefill.append(req)
 
-    # ------------------------------------------------------------------ step
-    def step(self) -> List[Request]:
-        """Admit, run one speculative round, distribute tokens.  Returns
-        requests that reached a terminal state this step (finished OR
-        rejected-at-admission)."""
-        t_step = time.monotonic()
+    # ------------------------------------------------------------- the phases
+    def plan(self) -> None:
+        """Phase 1 — host-side planning from *reconciled* state (which in
+        pipelined mode lags the device by one round): admission + batched
+        prefill, the next round's bucket choice, and paged block growth
+        under the staleness-slack invariant."""
         self._admit()
-        done_early = self._finished_at_prefill + self.scheduler.pop_rejected()
-        self._finished_at_prefill = []
+        self._planned_k = None
+        if self.scheduler.running:
+            if self.serving.pipelined:
+                self._planned_k = self.policy.pick_bucket(
+                    self._sl_next_host, self.scheduler.active_mask)
+            if self.paged:
+                before = self.scheduler.preempted_total
+                self._plan_blocks()         # may preempt (slots go inactive)
+                if (self.serving.pipelined and self.scheduler.running
+                        and self.scheduler.preempted_total != before):
+                    # an evicted slot must not size the bucket: re-pick
+                    # over the survivors.  A smaller K only shrinks
+                    # write extents, so the block growth just planned
+                    # (with the wider K) still over-covers.
+                    self._planned_k = self.policy.pick_bucket(
+                        self._sl_next_host, self.scheduler.active_mask)
+
+    def dispatch(self) -> Optional[_DispatchRecord]:
+        """Phase 2 — enqueue one speculative round.  Returns the dispatch
+        record ``collect`` later reconciles, or None when no slot is
+        occupied.  Never blocks on device results: the round's outputs
+        stay futures, and their host copies are started asynchronously so
+        they overlap the next round's compute."""
         if not self.scheduler.running:
-            return done_early
-        if self.paged:
-            self._plan_blocks()         # may preempt (slots go inactive)
-        running = self.scheduler.running
+            assert not self._pending_admits
+            return None
+        rows = [(r, r.slot, r.preemptions) for r in self.scheduler.running]
         active_mask = self.scheduler.active_mask
-        active = jnp.asarray(active_mask)
-        k = self.policy.pick_bucket(self._sl_next_host, active_mask)
+        k = (self._planned_k if self._planned_k is not None
+             else self.policy.pick_bucket(self._sl_next_host, active_mask))
+        self._planned_k = None
+        t_dispatch = time.monotonic()
         self.state, out = sd.spec_decode_round(
             self.pt, self.pd, self.cfg_t, self.cfg_d, self.spec, k,
-            self.state, active)
+            self.state, jnp.asarray(active_mask))
         self.rounds += 1
         self.draft_steps += (k + 1) if k > 0 else 0
+        sl_next = self.state.sl_next
+        for arr in (out.emitted, out.num_emitted, out.num_accepted,
+                    out.num_proposed, out.finished, out.live, sl_next):
+            try:
+                arr.copy_to_host_async()
+            except AttributeError:      # older jax / non-array leaf
+                pass
+        rec = _DispatchRecord(k=k, rows=rows, admits=self._pending_admits,
+                              out=out, sl_next=sl_next,
+                              t_dispatch=t_dispatch)
+        self._pending_admits = []
+        self._inflight = rec
+        return rec
 
-        emitted = np.asarray(out.emitted)
-        n_emit = np.asarray(out.num_emitted)
-        n_acc = np.asarray(out.num_accepted)
-        n_prop = np.asarray(out.num_proposed)
-        self._sl_next_host = np.array(self.state.sl_next)   # writable copy
+    def collect(self, rec: _DispatchRecord) -> List[Request]:
+        """Phase 3 — reconcile a dispatched round: first block on its
+        output transfer (already in flight since dispatch; the blocked
+        interval is recorded per round), then mirror the device's
+        decisions — token distribution, terminal states, SL mirror
+        refresh, shrink-to-committed — on the host.  In pipelined mode
+        this runs while the NEXT round is already executing, so shrink
+        keeps the in-flight round's write extent resident."""
+        t0 = time.monotonic()
+        emitted = np.asarray(rec.out.emitted)
+        n_emit = np.asarray(rec.out.num_emitted)
+        n_acc = np.asarray(rec.out.num_accepted)
+        n_prop = np.asarray(rec.out.num_proposed)
+        fin = np.asarray(rec.out.finished)
+        live = np.asarray(rec.out.live)
+        sl_next = np.array(rec.sl_next)     # writable copy
+        admit_pends = [np.asarray(p) for _, p, _, _ in rec.admits]
+        host_blocked = time.monotonic() - t0
+        # refresh the SL mirror only for slots STILL OWNED by the request
+        # the round ran: a slot re-admitted at this iteration's plan (or
+        # preempted) already carries its new occupant's initial SL, which
+        # the dispatched round's snapshot — one occupant stale — must not
+        # clobber
+        for req, slot, _ in rec.rows:
+            if self.scheduler.slots[slot] is req:
+                self._sl_next_host[slot] = sl_next[slot]
         self.scheduler.update_predictions(self._sl_next_host)
-        if k > 0:
-            self.draft_steps_effective += int(n_prop.max()) + 1
-        round_rec = {
-            "k": k,
-            "emitted": float(n_emit[active_mask].sum()),
-            "accepted": float(n_acc.sum()), "proposed": float(n_prop.sum()),
-        }
-
-        finished = done_early
-        shrunk_rows: List[Tuple[int, np.ndarray]] = []
         now = time.monotonic()
-        for req in list(running):
-            i = req.slot
-            req.cache_len += 1 + int(n_acc[i])   # mirrors the device commit
-            toks = emitted[i, :n_emit[i]].tolist()
-            if req.first_token_time is None and toks:
-                req.first_token_time = now
-            req.rounds += 1
-            req.accepted_tokens += int(n_acc[i])
-            req.proposed_tokens += int(n_prop[i])
-            for t in toks:
-                if t == self.cfg_t.vocab_size:   # pad sentinel
-                    continue
-                req.output.append(int(t))
-                self.emitted_total += 1
-                eos = req.eos_token_id
-                if ((eos is not None and t == eos)
-                        or len(req.output) >= req.max_new_tokens):
+        finished: List[Request] = []
+        # (a) first tokens from the prefill groups riding this record.
+        # A stub whose request was preempted BEFORE this round was
+        # dispatched (not in rec.rows) never ran on this prefill: drop
+        # it, the readmission produces its own first token.  A request
+        # preempted AFTER dispatch keeps the token (its round-emitted
+        # tokens in step (b) follow it), and if the token finishes it
+        # while it sits in the requeue it must be dropped from the
+        # queue, not released — release would no-op on the empty slot
+        # and the FINISHED request would be readmitted as a zombie.
+        in_rows = {id(r) for r, _, _ in rec.rows}
+        for (fresh_reqs, _, fresh_idx, pcounts), pend_np in zip(rec.admits,
+                                                                admit_pends):
+            items = [(req, int(pend_np[i]), pc)
+                     for req, i, pc in zip(fresh_reqs, fresh_idx, pcounts)
+                     if id(req) in in_rows]
+            for req in self._commit_first_tokens(
+                    [(r, t) for r, t, _ in items], now):
+                pc = next(p for r, _, p in items if r is req)
+                if req.preemptions != pc or req.slot is None:
+                    self.scheduler.drop_from_queue(req)
+                else:
+                    self.scheduler.release(req)
+                finished.append(req)
+        # (b) per-slot reconciliation against the dispatch-time snapshot
+        # (the CURRENT slot table may already differ: collect runs after
+        # the next plan, which can have preempted or re-admitted slots)
+        inflight_k = (self._inflight.k
+                      if (self._inflight is not None
+                          and self._inflight is not rec) else None)
+        shrunk_rows: List[Tuple[int, np.ndarray]] = []
+        for req, slot, pcount in rec.rows:
+            if req.done:
+                continue       # reconciled to terminal by an earlier round
+            # preempted (or re-admitted elsewhere) since dispatch: its
+            # emitted tokens are real — the readmission prefix must
+            # include them — but slot-side state (cache_len, blocks) was
+            # reset by the eviction and must not be touched here
+            displaced = req.preemptions != pcount or req.slot != slot
+            if live[slot]:
+                if not displaced:
+                    req.cache_len += 1 + int(n_acc[slot])
+                req.rounds += 1
+                req.accepted_tokens += int(n_acc[slot])
+                req.proposed_tokens += int(n_prop[slot])
+                toks = emitted[slot, :n_emit[slot]].tolist()
+                if req.first_token_time is None and toks:
+                    req.first_token_time = now
+                for t in toks:
+                    if t == self.cfg_t.vocab_size:   # pad sentinel
+                        continue
+                    req.output.append(int(t))
+                    self.emitted_total += 1
+                if fin[slot]:
                     req.state = RequestState.FINISHED
                     req.finish_time = now
-                    break
             if req.done:
-                self.scheduler.release(req)      # frees its blocks too
+                if displaced:
+                    # finished while sitting in the requeue: it must not
+                    # be readmitted and recomputed
+                    self.scheduler.drop_from_queue(req)
+                else:
+                    self.scheduler.release(req)      # frees its blocks too
                 finished.append(req)
-            elif self.paged:
+            elif not displaced and self.paged and req.slot is not None:
                 # rollback is free: speculative-tail blocks beyond the
                 # committed length go straight back to the pool.  The
                 # device table row must drop the freed entries NOW: a
                 # freed block can be reallocated at the next admission,
                 # and a stale row entry would gather the new owner's
                 # causally-valid KV into this sequence's attention.
-                if self.scheduler.shrink_to(req, req.cache_len):
+                # With a round in flight, its write extent (committed +
+                # K_inflight + 1) stays resident — those writes land in
+                # device order whatever the host does, and the blocks
+                # must still be this sequence's when they do.
+                keep = (req.cache_len if inflight_k is None
+                        else min(req.cache_len + inflight_k + 1,
+                                 self.serving.max_seq_len))
+                if self.scheduler.shrink_to(req, keep):
                     shrunk_rows.append((req.slot, self._table_row(req)))
         if shrunk_rows:
             self._sync_block_tables(shrunk_rows, [])
+        # (c) round log — emitted/accepted/proposed all masked by the
+        # SAME per-round live-row set (slots that did real work), and
+        # draft_steps_effective takes its max over that set too
+        round_rec = {
+            "k": rec.k,
+            "emitted": float(n_emit[live].sum()),
+            "accepted": float(n_acc[live].sum()),
+            "proposed": float(n_prop[live].sum()),
+        }
+        if rec.k > 0 and live.any():
+            self.draft_steps_effective += int(n_prop[live].max()) + 1
         # per-sequence KV slots the policy plans for the NEXT round — the
         # capacity-planning view of intra-batch heterogeneity.  Logged
         # after release so just-finished slots are not counted.
@@ -364,9 +619,34 @@ class ServingEngine:
         round_rec["kv_pool_utilization"] = (
             round_rec["kv_blocks_in_use"]
             / max(self.scheduler.kv_blocks_total(), 1))
-        round_rec["wall_s"] = time.monotonic() - t_step
+        round_rec["host_blocked_s"] = host_blocked
+        # per-round cadence: with a successor round already in flight,
+        # dispatch-to-dispatch (so pipelined per-round walls sum to the
+        # run wall instead of double-counting the overlapped round);
+        # otherwise — sync, or the drain of the last round — dispatch to
+        # reconciliation end, the full lockstep round cost
+        if self._inflight is not None and self._inflight is not rec:
+            round_rec["wall_s"] = self._inflight.t_dispatch - rec.t_dispatch
+        else:
+            round_rec["wall_s"] = time.monotonic() - rec.t_dispatch
         self.round_log.append(round_rec)
+        if self._inflight is rec:
+            self._inflight = None
         return finished
+
+    # ------------------------------------------------------------------ step
+    def step(self) -> List[Request]:
+        """Synchronous lockstep: plan, dispatch, collect — the round is
+        fully reconciled before control returns.  Returns requests that
+        reached a terminal state this step (finished OR rejected-at-
+        admission)."""
+        self.plan()
+        done_early = self._finished_at_prefill + self.scheduler.pop_rejected()
+        self._finished_at_prefill = []
+        if not self.scheduler.running:
+            return done_early
+        rec = self.dispatch()
+        return done_early + self.collect(rec)
 
     # ------------------------------------------------------------------- run
     def run(self, requests: Sequence[Request],
@@ -375,14 +655,33 @@ class ServingEngine:
         for r in requests:
             self.submit(r)
         done: List[Request] = []
-        while self.scheduler.has_work():
-            done += self.step()
-            if max_rounds is not None and self.rounds >= max_rounds:
-                break
+        if self.serving.pipelined:
+            # plan(N+1) → dispatch(N+1) → collect(N): the host reconciles
+            # one round behind while the device never waits for it
+            while self.scheduler.has_work() or self._inflight is not None:
+                self.plan()
+                done += self.scheduler.pop_rejected()
+                prev = self._inflight
+                rec = self.dispatch()
+                if prev is not None:
+                    done += self.collect(prev)
+                if max_rounds is not None and self.rounds >= max_rounds:
+                    break
+            if self._inflight is not None:      # drain the last round
+                done += self.collect(self._inflight)
+        else:
+            while self.scheduler.has_work():
+                done += self.step()
+                if max_rounds is not None and self.rounds >= max_rounds:
+                    break
         wall = time.monotonic() - t0
         fin = [r for r in done if r.state == RequestState.FINISHED]
         rej = [r for r in done if r.state == RequestState.REJECTED]
         lat = [r.latency() for r in fin if r.latency() is not None]
+        ttft = [r.ttft() for r in fin if r.ttft() is not None]
+        qw = [r.queue_wait() for r in fin if r.queue_wait() is not None]
+        blocked = float(sum(r.get("host_blocked_s", 0.0)
+                            for r in self.round_log))
         return {
             "wall_time_s": wall,
             "requests_finished": len(fin),
@@ -399,6 +698,15 @@ class ServingEngine:
             "throughput_tok_s": self.emitted_total / max(wall, 1e-9),
             "mean_latency_s": float(np.mean(lat)) if lat else float("nan"),
             "p95_latency_s": float(np.percentile(lat, 95)) if lat else float("nan"),
+            # serving-side metrics the paper's §5 tables are framed
+            # around: time-to-first-token and scheduler queue wait
+            "ttft_mean_s": float(np.mean(ttft)) if ttft else float("nan"),
+            "ttft_p95_s": float(np.percentile(ttft, 95)) if ttft else float("nan"),
+            "queue_wait_mean_s": float(np.mean(qw)) if qw else float("nan"),
+            # host time spent blocked on device output transfers — the
+            # pipeline's figure of merit (benchmarks/table6)
+            "host_blocked_s": blocked,
+            "host_blocked_per_round_s": blocked / max(len(self.round_log), 1),
             "mean_acceptance": float(np.mean(
                 [r.acceptance_rate() for r in fin])) if fin else float("nan"),
             "kv_blocks_peak": float(max(

@@ -34,6 +34,16 @@ Two admission regimes share that planning:
 
 The scheduler owns: the waiting queue, the slot table, the block
 allocator, and both admission decisions.
+
+Under the pipelined engine (DESIGN.md §7) every scheduler decision is
+made from state that may be ONE ROUND STALE: plan(N+1) runs before
+round N is reconciled, so slots freed by round N become visible one
+iteration later and per-sequence ``cache_len``/SL mirrors lag by one
+round.  Admission and preemption are safe under that lag by
+construction — a slot is only handed out after its previous occupant
+was host-reconciled and released, and the engine's block planning adds
+the worst-case in-flight slack (see ``ServingEngine._plan_blocks``) so
+stale mirrors can only ever OVER-allocate, never under-allocate.
 """
 from __future__ import annotations
 
@@ -173,6 +183,8 @@ class LookaheadScheduler:
             req.state = RequestState.RUNNING
             req.admit_seq = self._admit_seq
             self._admit_seq += 1
+            if req.admit_time is None:       # readmits keep the first wait
+                req.admit_time = time.monotonic()
             self.slots[i] = req
             admitted.append(req)
         return admitted
@@ -180,6 +192,17 @@ class LookaheadScheduler:
     def pop_rejected(self) -> List[Request]:
         out, self._rejected = self._rejected, []
         return out
+
+    def drop_from_queue(self, req: Request) -> None:
+        """Remove a queued request that reached a terminal state while
+        waiting.  Pipelined reconciliation needs this: a request can be
+        preempted at plan time and then FINISH when the round it was
+        still part of is collected one iteration later — it must not be
+        readmitted and recomputed."""
+        try:
+            self.queue.remove(req)
+        except ValueError:
+            pass
 
     # ---------------------------------------------------------- block budget
     def ensure_capacity(self, req: Request, n_tokens: int
