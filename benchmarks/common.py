@@ -32,6 +32,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.core.config import (ModelConfig, OptimizerConfig, ServingConfig,
                                SpecDecodeConfig, TrainConfig)
+from repro.core.drafters import build_drafter
 from repro.models.module import count_params
 from repro.models.transformer import model_specs
 from repro.serving.engine import ServingEngine
@@ -150,20 +151,24 @@ def serve(cfg_t, cfg_d, pt, pd, prompts: List[List[int]], *,
           max_new_per_req: Optional[List[int]] = None,
           paged: bool = False, kv_block_size: int = 16,
           num_kv_blocks: Optional[int] = None,
-          pipelined: bool = False
+          pipelined: bool = False, drafter: str = "model"
           ) -> Tuple[Dict, List[Request], ServingEngine]:
     extra = {}
     if goodput_draft_cost is not None:
         # the goodput controller's cost model should use the same pair
-        # cost ratio the latency_units report uses
+        # cost ratio the latency_units report uses (None = sourced from
+        # the drafter's own step_cost())
         extra["goodput_draft_cost"] = goodput_draft_cost
-    spec = SpecDecodeConfig(policy=policy, temperature=temperature,
+    spec = SpecDecodeConfig(policy=policy, drafter=drafter,
+                            temperature=temperature,
                             use_sl_cap=use_cap, static_sl=static_sl,
                             sl_max=sl_max, adaedl_base=adaedl_base,
                             adaedl_threshold=adaedl_threshold,
                             # miniature-regime KLD scales (DESIGN.md §3):
                             # scale-invariant SF keeps Eq. 2's dynamic range
                             sf_normalize=True, **extra)
+    if not build_drafter(spec, cfg_t, cfg_d).uses_draft_model():
+        pd, cfg_d = None, None   # model-free proposer: no draft params
     eng = ServingEngine(pt, cfg_t, pd, cfg_d, spec,
                         ServingConfig(max_batch_size=batch,
                                       max_seq_len=max_seq_len,

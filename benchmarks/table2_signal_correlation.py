@@ -22,6 +22,7 @@ import numpy as np
 
 from benchmarks import common
 from repro.core.config import SpecDecodeConfig
+from repro.core.drafters import build_drafter
 from repro.core.rejection import rejection_sample
 from repro.core.signals import (KLDHistory, draft_entropy, kld_per_position,
                                 wvir)
@@ -68,8 +69,9 @@ def collect_signals(cfg_t, cfg_d, pt, pd, prompts, temperature, sl=4,
         # signals available BEFORE this round's verification
         mean_kld10 = np.asarray(hist.chronological(10)[0]).mean(axis=1)
         w = np.asarray(wvir(hist, 10, 30, 0.85))
-        state2, out = sd.spec_decode_round(pt, pd, cfg_t, cfg_d, spec, sl,
-                                           state, active)
+        state2, out = sd.spec_decode_round(pt, pd, cfg_t,
+                                           build_drafter(spec, cfg_t, cfg_d),
+                                           spec, sl, state, active)
         # re-derive per-position stats from this round (entropies/accepts)
         acc = np.asarray(out.num_accepted)
         prop = np.asarray(out.num_proposed)

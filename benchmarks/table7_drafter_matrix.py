@@ -1,0 +1,123 @@
+"""Drafter × policy matrix: every registered proposer under every
+registered SL controller, one serving run per cell (beyond-paper; the
+extensibility proof for the drafter seam, DESIGN.md §9).
+
+Each cell serves the same heterogeneous mix and reports the numbers the
+two seams trade off against each other:
+
+* ``latency_units`` — rounds + effective draft cost, with the per-cell
+  draft-step cost taken from the drafter's OWN ``step_cost()`` (a model
+  drafter pays its FLOP ratio per step; lookup drafting is free), so
+  cells are comparable on one hardware-neutral axis;
+* ``BE`` / acceptance — proposal quality per drafter;
+* ``kv_peak`` / ``draft_kv_peak`` — capacity: model-free drafters hold
+  ZERO draft-side blocks and the paged pool admits proportionally more
+  sequences (the scheduler returns the draft mirror's budget).
+
+Rows print as ``table7/<drafter>/<policy>``.  The whole grid is driven
+purely through ``SpecDecodeConfig(policy=..., drafter=...)`` — no
+engine-side special cases per cell.
+
+    PYTHONPATH=src python -m benchmarks.table7_drafter_matrix
+    PYTHONPATH=src python -m benchmarks.table7_drafter_matrix \
+        --smoke --json /tmp/table7.json     # CI: untrained pair, tiny mix
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from benchmarks import common
+from repro.core.drafters import available_drafters
+from repro.core.policies import available_policies
+
+BATCH = 8
+MAX_SEQ = 256
+KV_BLOCK = 8
+
+
+def workload(smoke: bool):
+    prompts: List[List[int]] = []
+    per = 2 if smoke else 4
+    for i, name in enumerate(common.DATASETS):
+        # repetitive task mixes give lookup drafting something to find;
+        # the high-entropy tasks keep it honest
+        prompts += common.dataset(name).prompts(per, 16, seed=42 + i)
+    rng = np.random.RandomState(0)
+    rng.shuffle(prompts)
+    return prompts, (10 if smoke else 32)
+
+
+def run(smoke: bool = False, json_path: Optional[str] = None) -> List[str]:
+    if smoke:
+        cfg_t, cfg_d, pt, pd, _ = common.untrained_pair()
+    else:
+        cfg_t, cfg_d, pt, pd, _ = common.build_pair("llama")
+    prompts, max_new = workload(smoke)
+
+    rows: List[str] = []
+    out: Dict[str, Dict] = {}
+    for drafter in available_drafters():
+        for policy in available_policies():
+            t0 = time.monotonic()
+            m, reqs, eng = common.serve(
+                cfg_t, cfg_d, pt, pd, prompts, policy=policy,
+                drafter=drafter, max_new=max_new, batch=BATCH,
+                max_seq_len=MAX_SEQ, paged=True, kv_block_size=KV_BLOCK)
+            wall = (time.monotonic() - t0) * 1e6
+            # per-cell cost model from the drafter's own step cost — the
+            # satellite point: goodput/latency accounting no longer needs
+            # a hand-set constant
+            lu = common.latency_units(m, m["draft_step_cost"])
+            cell = {
+                "latency_units": lu,
+                "rounds": m["rounds"],
+                "block_efficiency": m["block_efficiency"],
+                "mean_acceptance": m["mean_acceptance"],
+                "draft_step_cost": m["draft_step_cost"],
+                "draft_cost_effective": m["draft_cost_effective"],
+                "kv_blocks_peak": m["kv_blocks_peak"],
+                "kv_pool_blocks": m["kv_pool_blocks"],
+                "draft_kv_blocks_peak": m["draft_kv_blocks_peak"],
+                "requests_finished": m["requests_finished"],
+            }
+            out[f"{drafter}/{policy}"] = cell
+            rows.append(common.row(
+                f"table7/{drafter}/{policy}", wall,
+                f"lu={lu:.1f};BE={m['block_efficiency']:.2f};"
+                f"acc={m['mean_acceptance']:.2f};"
+                f"c_draft={m['draft_step_cost']:.3f};"
+                f"kv_peak={m['kv_blocks_peak']:.0f}/"
+                f"{m['kv_pool_blocks']:.0f};"
+                f"draft_kv_peak={m['draft_kv_blocks_peak']:.0f};"
+                f"fin={m['requests_finished']}"))
+            assert m["requests_finished"] == len(prompts), (drafter, policy)
+    # capacity headline: model-free drafters double the paged pool at
+    # identical ServingConfig (the mirror budget returns to the target)
+    pools = {d: out[f"{d}/dsde"]["kv_pool_blocks"]
+             for d in available_drafters()}
+    rows.append(common.row(
+        "table7/pool_blocks", 0.0,
+        ";".join(f"{d}={int(v)}" for d, v in sorted(pools.items()))))
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(out, f, indent=2, sort_keys=True)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="untrained pair + tiny mix (CI lane)")
+    ap.add_argument("--json", default=None,
+                    help="write the full grid as JSON (CI artifact)")
+    args = ap.parse_args()
+    print("\n".join(run(smoke=args.smoke, json_path=args.json)))
+
+
+if __name__ == "__main__":
+    main()

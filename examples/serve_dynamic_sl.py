@@ -31,15 +31,23 @@ def build_pair(smoke: bool):
 
 
 def main():
+    from repro.core.drafters import available_drafters
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="untrained pair + tiny mix (CI lane)")
+    ap.add_argument("--drafter", default="model",
+                    choices=list(available_drafters()),
+                    help="proposer for every policy row (DESIGN.md §9); "
+                         "model-free drafters serve with ZERO draft "
+                         "params and zero draft KV blocks")
     args = ap.parse_args()
 
     label = "untrained (smoke)" if args.smoke else "trained (cached)"
     print(f"== building target/draft pair: {label} ==")
     cfg_t, cfg_d, pt, pd, ratio = build_pair(args.smoke)
     print(f"   draft/target FLOP ratio: {ratio:.3f}")
+    print(f"   drafter: {args.drafter}")
 
     # heterogeneous workload: code-like + dialogue-like requests interleaved
     per = 2 if args.smoke else 4
@@ -56,11 +64,16 @@ def main():
               f"{'latency_units':>14s} {'speedup':>8s}")
     print(header)
     lu_ar = None
+    # model drafter: the pair's emulated cost ratio; model-free
+    # drafters let the engine source the cost from Drafter.step_cost()
+    cost_kw = ({"goodput_draft_cost": ratio}
+               if args.drafter == "model" else {})
     for policy in ("autoregressive", "static", "adaedl", "dsde", "goodput"):
         m, reqs, eng = common.serve(cfg_t, cfg_d, pt, pd, prompts,
                                     policy=policy, max_new=max_new, batch=8,
-                                    goodput_draft_cost=ratio)
-        lu = common.latency_units(m, ratio)
+                                    drafter=args.drafter, **cost_kw)
+        lu = common.latency_units(
+            m, ratio if args.drafter == "model" else m["draft_step_cost"])
         if policy == "autoregressive":   # the speedup baseline row
             lu_ar = lu
         print(f"{policy:16s} {m['rounds']:7d} {m['block_efficiency']:6.2f} "
@@ -72,6 +85,7 @@ def main():
     for pipelined in (False, True):
         m, reqs, eng = common.serve(cfg_t, cfg_d, pt, pd, prompts,
                                     policy="dsde", max_new=max_new, batch=8,
+                                    drafter=args.drafter,
                                     pipelined=pipelined)
         streams[pipelined] = [r.output for r in reqs]
         mode = "pipelined" if pipelined else "sync"
@@ -85,7 +99,7 @@ def main():
 
     print("\n== DSDE per-round dynamics (first 12 rounds) ==")
     _, _, eng = common.serve(cfg_t, cfg_d, pt, pd, prompts, policy="dsde",
-                             max_new=max_new, batch=8)
+                             drafter=args.drafter, max_new=max_new, batch=8)
     for i, r in enumerate(eng.round_log[:12]):
         print(f"  round {i:2d}: K={r['k']} emitted={r['emitted']:.0f} "
               f"accepted={r['accepted']:.0f}/{r['proposed']:.0f}")

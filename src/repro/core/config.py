@@ -206,8 +206,14 @@ class SpecDecodeConfig:
 
     ``policy`` names a registered :class:`repro.core.policies.SpecPolicy`
     ("dsde" | "static" | "adaedl" | "autoregressive" | "goodput" | any
-    policy registered via ``repro.core.policies.register``)."""
+    policy registered via ``repro.core.policies.register``).
+
+    ``drafter`` names a registered :class:`repro.core.drafters.Drafter`
+    ("model" | "ngram" | "self" | any drafter registered via
+    ``repro.core.drafters.register_drafter``) — the proposer half of a
+    speculation round (DESIGN.md §9), orthogonal to the SL policy."""
     policy: str = "dsde"
+    drafter: str = "model"
     sl_min: int = 2                    # paper §3.1.2
     sl_max: int = 10                   # bucket upper bound; Eq.(1) calibrates
     static_sl: int = 4                 # for the static baseline
@@ -235,9 +241,19 @@ class SpecDecodeConfig:
     # EMA decay of the per-round acceptance fraction, the per-draft-step
     # cost relative to one verification (in latency units), and the
     # optimistic acceptance prior used before any observation.
+    # ``goodput_draft_cost=None`` (the default) sources the cost from the
+    # serving drafter's own ``Drafter.step_cost()`` (model drafters:
+    # draft/target FLOP ratio; lookup drafters: ~0); a float here is an
+    # explicit override.  Contexts with no drafter in scope (direct
+    # policy unit use) fall back to the historical 0.08.
     goodput_ema: float = 0.75
-    goodput_draft_cost: float = 0.08
+    goodput_draft_cost: Optional[float] = None
     goodput_init_acc: float = 0.7
+    # --- drafter knobs (DESIGN.md §9) ----------------------------------
+    # ngram: prompt-lookup suffix-match length (the "n" of the n-gram)
+    ngram_n: int = 3
+    # self: how many leading target layers the early-exit self-draft runs
+    self_draft_layers: int = 1
     # sampling
     temperature: float = 0.0           # 0.0 = greedy
     # penalty floor condition (Eq. 8): if SF*WVIR >= penalty_cutoff, SL=SL_min

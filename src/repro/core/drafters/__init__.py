@@ -1,0 +1,27 @@
+"""Pluggable speculation drafters (DESIGN.md §9).
+
+Importing this package registers the built-in proposers:
+
+* ``model`` — separate small draft model with a mirrored KV cache (the
+  paper's small-draft paradigm; the seed behavior);
+* ``ngram`` — prompt-lookup suffix matching over the sequence's own
+  generated prefix: zero draft params, zero draft KV blocks;
+* ``self``  — early-exit self-speculation: the target truncated to its
+  first ``self_draft_layers`` layers, sharing the target cache.
+
+Build one from a config with ``build_drafter(spec, cfg_t, cfg_d)``;
+register new ones with ``@register_drafter("name")``.
+"""
+from repro.core.drafters.base import (DraftProposal, Drafter,
+                                      available_drafters, build_drafter,
+                                      model_flops_per_token,
+                                      register_drafter)
+from repro.core.drafters.model import ModelDrafter, autoregressive_draft_loop
+from repro.core.drafters.ngram import NGramDrafter
+from repro.core.drafters.self_draft import SelfDrafter
+
+__all__ = [
+    "DraftProposal", "Drafter", "ModelDrafter", "NGramDrafter",
+    "SelfDrafter", "autoregressive_draft_loop", "available_drafters",
+    "build_drafter", "model_flops_per_token", "register_drafter",
+]

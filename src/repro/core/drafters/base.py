@@ -1,0 +1,207 @@
+"""The pluggable drafter interface (DESIGN.md §9).
+
+DSDE's post-hoc KLD signals are a diagnostic layer *above* whatever
+produces proposals.  This module defines the seam that makes the
+proposer half of a speculation round pluggable — the mirror image of the
+:class:`~repro.core.policies.SpecPolicy` seam for the controller half:
+
+* :class:`Drafter` — the interface.  A drafter is a *frozen, hashable*
+  object built from ``(SpecDecodeConfig, target ModelConfig, optional
+  draft ModelConfig)``, so it rides through ``spec_decode_round`` as a
+  jit static argument: drafter dispatch costs nothing at runtime and
+  each (drafter-config, K) pair traces exactly one XLA program.
+* device-side hooks — the drafter owns proposal generation
+  (:meth:`propose`) and its own per-sequence cache/state pytree
+  (:meth:`init_cache` / :meth:`prefill` / :meth:`commit` /
+  :meth:`reset_rows`), which the round threads through
+  ``RoundState.draft_cache``.  ``propose`` returns the proposal
+  *distribution* too (:class:`DraftProposal.logits`), so exact
+  rejection sampling and the policy's ``PolicyObservation`` stay
+  well-defined for every proposer: real logits for model drafters,
+  one-hot q for lookup drafters (whose KLD signal degrades gracefully
+  to the target's surprise of the proposed token,
+  :meth:`observation_kld`).
+* host-side hooks — :meth:`uses_draft_model` (does the engine need
+  draft params at all), :meth:`mirrors_kv` (does the drafter hold a
+  paged KV pool mirroring the target's block ids — model-free drafters
+  return False and the scheduler returns the mirror's block budget to
+  the target pool), and :meth:`step_cost` (per-draft-step cost in
+  target-verification units, sourced by the goodput policy).
+* a string registry (:func:`register_drafter` / :func:`build_drafter`)
+  keyed by ``SpecDecodeConfig.drafter``.
+
+Writing a new drafter (see DESIGN.md §9 for the full guide)::
+
+    @register_drafter("my_drafter")
+    @dataclasses.dataclass(frozen=True)
+    class MyDrafter(Drafter):
+        def init_cache(self, batch, max_len, dtype, paged=None): ...
+        def prefill(self, params_d, cache, idx, tokens, lens, **kw): ...
+        def propose(self, params_t, params_d, draft_cache, target_cache,
+                    pending, k, sl_i, policy, step_keys, live): ...
+        def commit(self, params_d, tokens, snapshot, drafted, n): ...
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple, Type
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import ModelConfig, SpecDecodeConfig
+from repro.core.signals import kld_per_position
+
+PyTree = Any
+
+
+class DraftProposal(NamedTuple):
+    """What :meth:`Drafter.propose` hands back to the round."""
+    tokens: jax.Array      # [B, K] int32 proposed draft tokens
+    logits: jax.Array      # [B, K, V] f32 — the proposal distribution q
+    cache: jax.Array       # drafter cache pytree after proposing (pre-commit)
+    eff_sl: jax.Array      # [B] int32 — positions actually proposed (<= sl_i)
+
+
+def model_flops_per_token(cfg: ModelConfig) -> float:
+    """Rough decode-time FLOPs/token of one forward — the single source
+    for :meth:`Drafter.step_cost` ratios.  An *estimate* (projections +
+    MLP/MoE + LM head; attention-score terms omitted as length-dependent
+    and common to both sides), good to the factor the goodput controller
+    needs, not a roofline."""
+    d, dh = cfg.d_model, cfg.resolved_head_dim
+    attn = 2 * d * dh * (2 * cfg.num_heads + 2 * cfg.num_kv_heads)
+    if cfg.moe is not None:
+        mlp = 2 * d * cfg.moe.expert_d_ff * 3 * cfg.moe.top_k
+    else:
+        mlp = 2 * d * cfg.d_ff * 3
+    head = 2 * d * cfg.vocab_size
+    return float(cfg.num_layers * (attn + mlp) + head)
+
+
+@dataclasses.dataclass(frozen=True)
+class Drafter:
+    """Proposal generator for one speculative round.
+
+    Frozen (hashable) so instances ride as jit static arguments; all
+    per-sequence mutable state lives in the cache pytree returned by
+    :meth:`init_cache` and threaded through ``RoundState.draft_cache``.
+    ``cfg_d`` is None for drafters with no separate draft model.
+    """
+
+    spec: SpecDecodeConfig
+    cfg_t: ModelConfig
+    cfg_d: Optional[ModelConfig] = None
+
+    # --------------------------------------------------------- host-side
+    def uses_draft_model(self) -> bool:
+        """True => the engine must be handed draft-model params."""
+        return False
+
+    def mirrors_kv(self) -> bool:
+        """True => the drafter holds a paged KV pool whose block ids
+        mirror the target pool's (one allocator decision covers both).
+        False => no draft-side KV: the engine skips draft block-table
+        mirroring and the scheduler returns the draft mirror's block
+        budget to the target pool (DESIGN.md §9)."""
+        return False
+
+    def step_cost(self) -> float:
+        """Cost of ONE draft step relative to one target verification —
+        the quantity the goodput policy charges per speculated token."""
+        return 0.0
+
+    # ------------------------------------------------------- device-side
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.float32,
+                   paged: Optional[Tuple[int, int]] = None) -> PyTree:
+        """Fresh per-sequence drafter cache (a pytree; ``()`` if
+        stateless).  ``paged=(num_blocks, block_size)`` is the target
+        pool's geometry — drafters that mirror it build a matching
+        pool; everyone else ignores it."""
+        return ()
+
+    def prefill(self, params_d: PyTree, cache: PyTree, idx: jax.Array,
+                tokens: jax.Array, prompt_lens: jax.Array, *,
+                max_len: int, table_rows: Optional[jax.Array] = None
+                ) -> PyTree:
+        """Absorb a same-bucket admission group: ``tokens [R, bucket]``
+        right-padded prompts landing in batch slots ``idx [R]``.  Must
+        fully re-initialize those rows (they may hold a previous
+        occupant's state).  ``table_rows [R, max_blocks]`` is set iff
+        the serving cache is paged AND the drafter mirrors it."""
+        return cache
+
+    def propose(self, params_t: PyTree, params_d: PyTree,
+                draft_cache: PyTree, target_cache: PyTree,
+                pending: jax.Array, k: int, sl_i: jax.Array,
+                policy: Any, step_keys: jax.Array, live: jax.Array
+                ) -> DraftProposal:
+        """Generate up to ``k`` proposals per sequence (``sl_i [B]`` the
+        per-sequence budget, 0 for dead rows).  ``step_keys [B]`` are
+        per-row PRNG keys (already bound to request identity + round
+        ordinal — fold in the step index only), so sampled proposals are
+        schedule-invariant.  ``policy`` supplies the ``draft_keep``
+        early-stop hook.  Must NOT mutate ``target_cache`` semantics:
+        verification runs on the unmodified target cache."""
+        raise NotImplementedError
+
+    def commit(self, params_d: PyTree, tokens: jax.Array,
+               snapshot: PyTree, drafted: PyTree,
+               n_committed: jax.Array) -> PyTree:
+        """Commit ``n_committed[b]`` of the round's ``tokens [B, K+1]``
+        (pending + proposals) into the drafter cache.  ``snapshot`` is
+        the pre-round cache, ``drafted`` the one ``propose`` returned."""
+        return snapshot
+
+    def reset_rows(self, cache: PyTree, rows: jax.Array) -> PyTree:
+        """Clear rows being replaced under continuous batching.  The
+        default is identity: every built-in drafter's ``prefill`` fully
+        rewrites the rows it lands in, so no separate wipe is needed."""
+        return cache
+
+    def observation_kld(self, target_logits: jax.Array,
+                        draft_logits: jax.Array, tokens: jax.Array,
+                        valid: jax.Array) -> jax.Array:
+        """Per-position divergence signal for ``PolicyObservation.kld``.
+        Model drafters: KL(p_target ‖ q_draft) — the paper's signal.
+        One-hot proposers override with the finite surrogate
+        −log p_target(token) (= KL(q ‖ p) for a point-mass q): the
+        target's surprise of the proposal, same monotone "how unstable
+        is this draft source" semantics, never infinite."""
+        return kld_per_position(target_logits, draft_logits, valid)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Type[Drafter]] = {}
+
+
+def register_drafter(name: str) -> Callable[[Type[Drafter]], Type[Drafter]]:
+    """Class decorator: ``@register_drafter("ngram")`` binds the class to
+    the ``SpecDecodeConfig.drafter`` string ``"ngram"``."""
+    def deco(cls: Type[Drafter]) -> Type[Drafter]:
+        _REGISTRY[name] = cls
+        return cls
+    return deco
+
+
+def available_drafters() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def build_drafter(spec: SpecDecodeConfig, cfg_t: ModelConfig,
+                  cfg_d: Optional[ModelConfig] = None) -> Drafter:
+    """Instantiate the drafter named by ``spec.drafter``.
+
+    All three constructor inputs are frozen/hashable, so equal configs
+    yield equal (interchangeable) drafters — safe to call at trace time
+    inside a jitted function whose static arguments include them."""
+    try:
+        cls = _REGISTRY[spec.drafter]
+    except KeyError:
+        raise KeyError(
+            f"unknown drafter {spec.drafter!r}; "
+            f"registered: {', '.join(available_drafters())}") from None
+    return cls(spec, cfg_t, cfg_d)

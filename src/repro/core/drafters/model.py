@@ -1,0 +1,149 @@
+"""The classic draft-model proposer (the paper's small-draft paradigm).
+
+``ModelDrafter`` is the seed behavior migrated onto the public
+:class:`~repro.core.drafters.Drafter` API: a separate small
+autoregressive model proposes K tokens per round from its own KV cache,
+which mirrors the target cache's layout (dense rows, or a paged pool
+sharing the target's block ids so one allocator decision covers both).
+
+The draft scan loop is shared with :class:`SelfDrafter` (early-exit
+self-speculation runs the *same* loop over a truncated view of the
+target model), so the K+1-step structure — the final step only writes
+the last draft token's KV so the cache is complete on total acceptance —
+lives in exactly one place.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import prefill as prefill_lib
+from repro.core.config import ModelConfig
+from repro.core.drafters.base import (DraftProposal, Drafter,
+                                      model_flops_per_token,
+                                      register_drafter)
+from repro.core.sampling import sample_token
+from repro.models import cache as cache_lib
+from repro.models.transformer import commit as commit_model
+from repro.models.transformer import forward
+
+PyTree = Any
+
+
+def autoregressive_draft_loop(params: PyTree, cfg: ModelConfig,
+                              cache: PyTree, pending: jax.Array, k: int,
+                              sl_i: jax.Array, policy: Any,
+                              step_keys: jax.Array, active: jax.Array,
+                              temperature: float
+                              ) -> Tuple[jax.Array, jax.Array, PyTree,
+                                         jax.Array]:
+    """K+1 single-token decode steps of ``params``/``cfg`` against
+    ``cache`` (``lax.scan``; the final step only writes the last draft
+    token's KV so the cache is complete on total acceptance).
+    Per-sequence validity ``j < sl_i`` implements ragged SL inside the
+    fixed bucket; ``policy.draft_keep`` may stop early (trace-time
+    branch).  Sampling is per-row keyed (``step_keys [B]``, step index
+    folded in), so temperature>0 draws depend only on (request, round
+    ordinal, step) — never on batch composition or bucket width.
+    Returns (draft_tokens [B,K], draft_logits [B,K,V], drafted_cache,
+    eff_sl [B])."""
+    b = pending.shape[0]
+
+    def step(carry, j):
+        cache, tok, stop, eff = carry
+        # paged caches: step j writes position len+j, needed only up to
+        # the committed horizon (j <= SL_i); inactive rows never write
+        wm = ((j <= sl_i) & active)[:, None]
+        logits, cache, _ = forward(params, cfg, tok[:, None],
+                                   cache=cache, mode="decode",
+                                   write_mask=wm)
+        lj = logits[:, 0]
+        kjs = jax.vmap(lambda kb: jax.random.fold_in(kb, j))(step_keys)
+        nxt = jax.vmap(
+            lambda kk, lg: sample_token(kk, lg, temperature,
+                                        cfg.vocab_size))(kjs, lj)
+        keep = policy.draft_keep(lj)
+        if keep is not None:       # in-draft early stop (trace-time branch)
+            stop = stop | ~keep
+        live = (j < sl_i) & (j < k) & ~stop
+        eff = eff + live.astype(jnp.int32)
+        # cache length bookkeeping: each step wrote one KV at len + j; the
+        # cache's ``length`` field is only advanced at commit time, so we
+        # thread an explicit position via a temp length bump.
+        cache = dict(cache)
+        cache["length"] = cache["length"] + 1
+        return (cache, nxt.astype(jnp.int32), stop, eff), (nxt, lj)
+
+    cache0 = dict(cache)
+    init = (cache0, pending, jnp.zeros((b,), bool),
+            jnp.zeros((b,), jnp.int32))
+    (cache_k, _, _, eff), (toks, logits) = jax.lax.scan(
+        step, init, jnp.arange(k + 1))
+    cache_k = dict(cache_k)
+    cache_k["length"] = cache["length"]     # restore; commit later
+    draft_tokens = jnp.moveaxis(toks[:k], 0, 1).astype(jnp.int32)  # [B,K]
+    draft_logits = jnp.moveaxis(logits[:k], 0, 1)                  # [B,K,V]
+    return draft_tokens, draft_logits, cache_k, eff
+
+
+@register_drafter("model")
+@dataclasses.dataclass(frozen=True)
+class ModelDrafter(Drafter):
+    """Separate small draft model with a mirrored KV cache."""
+
+    # --------------------------------------------------------- host-side
+    def uses_draft_model(self) -> bool:
+        return True
+
+    def mirrors_kv(self) -> bool:
+        return True
+
+    def step_cost(self) -> float:
+        assert self.cfg_d is not None
+        return (model_flops_per_token(self.cfg_d)
+                / max(model_flops_per_token(self.cfg_t), 1.0))
+
+    # ------------------------------------------------------- device-side
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.float32,
+                   paged: Optional[Tuple[int, int]] = None) -> PyTree:
+        assert self.cfg_d is not None, "ModelDrafter needs a draft config"
+        if paged is not None:
+            n_blocks, bs = paged
+            return cache_lib.paged_cache_struct(self.cfg_d, batch, max_len,
+                                                n_blocks, bs, dtype)
+        return cache_lib.cache_struct(self.cfg_d, batch, max_len, dtype)
+
+    def prefill(self, params_d: PyTree, cache: PyTree, idx: jax.Array,
+                tokens: jax.Array, prompt_lens: jax.Array, *,
+                max_len: int, table_rows: Optional[jax.Array] = None
+                ) -> PyTree:
+        # module-attribute calls so the engine's batched-prefill program
+        # accounting (and its tests) see one program per model per bucket
+        if table_rows is not None:
+            rows, _ = prefill_lib.prefill_paged_rows(
+                params_d, self.cfg_d, cache["k"], cache["v"],
+                cache["kv_pos"], table_rows, tokens, prompt_lens)
+            return prefill_lib.scatter_paged_rows(cache, rows, idx)
+        rows, _ = prefill_lib.prefill_rows(params_d, self.cfg_d, tokens,
+                                           prompt_lens, max_len)
+        return prefill_lib.set_slots(cache, rows, idx)
+
+    def propose(self, params_t: PyTree, params_d: PyTree,
+                draft_cache: PyTree, target_cache: PyTree,
+                pending: jax.Array, k: int, sl_i: jax.Array,
+                policy: Any, step_keys: jax.Array, live: jax.Array
+                ) -> DraftProposal:
+        toks, logits, cache, eff = autoregressive_draft_loop(
+            params_d, self.cfg_d, draft_cache, pending, k, sl_i, policy,
+            step_keys, live, self.spec.temperature)
+        return DraftProposal(tokens=toks, logits=logits, cache=cache,
+                             eff_sl=eff)
+
+    def commit(self, params_d: PyTree, tokens: jax.Array,
+               snapshot: PyTree, drafted: PyTree,
+               n_committed: jax.Array) -> PyTree:
+        return commit_model(params_d, self.cfg_d, tokens, snapshot,
+                            drafted, n_committed)

@@ -1,0 +1,118 @@
+"""Prompt-lookup n-gram drafter: zero draft params, zero draft KV.
+
+``NGramDrafter`` proposes by replaying the sequence's own text: find the
+most recent earlier occurrence of the trailing ``ngram_n``-gram in the
+(prompt + emitted) prefix and propose the tokens that followed it
+(Saxena-style prompt lookup decoding).  Its entire per-sequence state is
+an int32 token-history buffer — no draft model, no draft KV blocks, so
+under the paged layout the scheduler returns the draft mirror's whole
+block budget to the target pool (DESIGN.md §9).
+
+Exactness: the proposal distribution handed to rejection sampling is the
+point mass q = 1 on the proposed token (the deterministic lookup IS a
+sample from that q), so speculative sampling stays exact at every
+temperature.  The KLD observation uses the finite one-hot surrogate
+−log p_target(token) (see ``Drafter.observation_kld``).
+
+The suffix match runs on a Pallas kernel on TPU
+(:mod:`repro.kernels.ngram_match`) with a bit-exact pure-jnp oracle
+elsewhere (:func:`repro.kernels.ref.ngram_propose_ref`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.drafters.base import DraftProposal, Drafter, register_drafter
+from repro.kernels import ops as kernel_ops
+
+PyTree = Any
+
+NEG = -1e30
+
+
+@register_drafter("ngram")
+@dataclasses.dataclass(frozen=True)
+class NGramDrafter(Drafter):
+    """Suffix-match lookup over the sequence's own generated prefix."""
+
+    # --------------------------------------------------------- host-side
+    # uses_draft_model / mirrors_kv: base defaults (False / False)
+
+    def step_cost(self) -> float:
+        return 0.0          # a table lookup is free next to a verification
+
+    # ------------------------------------------------------- device-side
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.float32,
+                   paged: Optional[Tuple[int, int]] = None) -> PyTree:
+        # token history, NOT a KV cache: ``length`` counts committed
+        # tokens, mirroring the target cache's commit arithmetic exactly
+        return {"tokens": jnp.zeros((batch, max_len), jnp.int32),
+                "length": jnp.zeros((batch,), jnp.int32)}
+
+    def prefill(self, params_d: PyTree, cache: PyTree, idx: jax.Array,
+                tokens: jax.Array, prompt_lens: jax.Array, *,
+                max_len: int, table_rows: Optional[jax.Array] = None
+                ) -> PyTree:
+        r = tokens.shape[0]
+        rows = jnp.zeros((r, max_len), jnp.int32)
+        rows = rows.at[:, :tokens.shape[1]].set(tokens.astype(jnp.int32))
+        # full-row writes: no stale text from a slot's previous occupant
+        return {"tokens": cache["tokens"].at[idx].set(rows),
+                "length": cache["length"].at[idx].set(
+                    prompt_lens.astype(jnp.int32))}
+
+    def propose(self, params_t: PyTree, params_d: PyTree,
+                draft_cache: PyTree, target_cache: PyTree,
+                pending: jax.Array, k: int, sl_i: jax.Array,
+                policy: Any, step_keys: jax.Array, live: jax.Array
+                ) -> DraftProposal:
+        buf = draft_cache["tokens"]
+        ln = draft_cache["length"]
+        b, h = buf.shape
+        bi = jnp.arange(b)
+        # the proposal conditions on committed history + pending token
+        work = buf.at[bi, ln].set(pending.astype(jnp.int32), mode="drop")
+        ctx = jnp.minimum(ln + 1, h)
+        toks, cnt = kernel_ops.ngram_propose(work, ctx,
+                                             n=self.spec.ngram_n, k=k)
+        v = self.cfg_t.padded_vocab(128)
+        onehot = jax.nn.one_hot(toks, v, dtype=jnp.float32)     # [B,K,V]
+        logits = jnp.where(onehot > 0, 0.0, NEG)
+        return DraftProposal(tokens=toks, logits=logits,
+                             cache=draft_cache, eff_sl=cnt)
+
+    def commit(self, params_d: PyTree, tokens: jax.Array,
+               snapshot: PyTree, drafted: PyTree,
+               n_committed: jax.Array) -> PyTree:
+        buf = snapshot["tokens"]
+        ln = snapshot["length"]
+        b, h = buf.shape
+        t = tokens.shape[1]
+        bi = jnp.arange(b)
+        pos = ln[:, None] + jnp.arange(t)[None]
+        keep = (jnp.arange(t)[None] < n_committed[:, None]) & (pos < h)
+        tgt = jnp.where(keep, pos, h)      # out-of-range => dropped
+        buf = buf.at[bi[:, None], tgt].set(tokens.astype(jnp.int32),
+                                           mode="drop")
+        return {"tokens": buf,
+                "length": ln + n_committed.astype(jnp.int32)}
+
+    def reset_rows(self, cache: PyTree, rows: jax.Array) -> PyTree:
+        return {"tokens": jnp.where(rows[:, None],
+                                    jnp.zeros_like(cache["tokens"]),
+                                    cache["tokens"]),
+                "length": jnp.where(rows, 0, cache["length"])}
+
+    def observation_kld(self, target_logits: jax.Array,
+                        draft_logits: jax.Array, tokens: jax.Array,
+                        valid: jax.Array) -> jax.Array:
+        # one-hot q makes KL(p||q) infinite; use the target's surprise of
+        # the proposal, −log p(token) = KL(q||p) for point-mass q
+        lp = jax.nn.log_softmax(target_logits.astype(jnp.float32), axis=-1)
+        lp_tok = jnp.take_along_axis(lp, tokens[..., None].astype(jnp.int32),
+                                     axis=-1)[..., 0]
+        return jnp.where(valid, -lp_tok, 0.0)

@@ -1,0 +1,92 @@
+"""Early-exit self-speculation: the target's own shallow prefix drafts.
+
+``SelfDrafter`` runs the draft scan loop over the target model truncated
+to its first ``self_draft_layers`` layers — final norm + LM head applied
+to the truncated hidden state (the standard early-exit head) — reading
+and writing a *sliced view* of the target cache's leading layer slice.
+No second model, no second cache: the drafted KV in those leading layers
+is discarded after the loop because verification rewrites positions
+``len..len+K`` across ALL layers on the unmodified pre-round target
+cache, so the overwrite-or-mask rollback argument (DESIGN.md §4) makes
+the slice causally clean again at commit.
+
+Supported families: the scanned homogeneous stacks (dense / moe / vlm)
+whose stacked ``layers`` params and ``[L, ...]`` cache pools slice
+cleanly along the leading layer axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.drafters.base import (DraftProposal, Drafter,
+                                      model_flops_per_token,
+                                      register_drafter)
+from repro.core.drafters.model import autoregressive_draft_loop
+
+PyTree = Any
+
+_SELF_DRAFT_FAMILIES = ("dense", "moe", "vlm")
+
+
+@register_drafter("self")
+@dataclasses.dataclass(frozen=True)
+class SelfDrafter(Drafter):
+    """Truncated-target early-exit proposer sharing the target cache."""
+
+    def __post_init__(self):
+        if self.cfg_t.family not in _SELF_DRAFT_FAMILIES:
+            raise ValueError(
+                f"self-draft supports scanned stacks {_SELF_DRAFT_FAMILIES}"
+                f", not family {self.cfg_t.family!r}")
+        n = self.spec.self_draft_layers
+        if not 1 <= n < self.cfg_t.num_layers:
+            raise ValueError(
+                f"self_draft_layers={n} must be in [1, "
+                f"{self.cfg_t.num_layers - 1}] for {self.cfg_t.name}")
+
+    # --------------------------------------------------------- host-side
+    # uses_draft_model / mirrors_kv: base defaults (False / False) — the
+    # draft KV lives inside the target cache's own (already charged)
+    # blocks and never outlives the round
+
+    def step_cost(self) -> float:
+        return (model_flops_per_token(self._truncated_cfg())
+                / max(model_flops_per_token(self.cfg_t), 1.0))
+
+    # ------------------------------------------------------- device-side
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.float32,
+                   paged: Optional[Tuple[int, int]] = None) -> PyTree:
+        return ()          # stateless: everything lives in the target cache
+
+    def propose(self, params_t: PyTree, params_d: PyTree,
+                draft_cache: PyTree, target_cache: PyTree,
+                pending: jax.Array, k: int, sl_i: jax.Array,
+                policy: Any, step_keys: jax.Array, live: jax.Array
+                ) -> DraftProposal:
+        n = self.spec.self_draft_layers
+        cfg_s = self._truncated_cfg()
+        params_s = {kk: vv for kk, vv in params_t.items() if kk != "layers"}
+        params_s["layers"] = jax.tree_util.tree_map(
+            lambda a: a[:n], params_t["layers"])
+        cache_s = dict(target_cache)
+        cache_s["k"] = target_cache["k"][:n]
+        cache_s["v"] = target_cache["v"][:n]
+        toks, logits, _, eff = autoregressive_draft_loop(
+            params_s, cfg_s, cache_s, pending, k, sl_i, policy,
+            step_keys, live, self.spec.temperature)
+        # the drafted slice is dropped: verification rewrites those
+        # positions across all layers from the pre-round target cache
+        return DraftProposal(tokens=toks, logits=logits, cache=draft_cache,
+                             eff_sl=eff)
+
+    # commit: base default (identity) — nothing persists round-to-round
+
+    # ------------------------------------------------------------- utils
+    def _truncated_cfg(self):
+        return dataclasses.replace(
+            self.cfg_t, num_layers=self.spec.self_draft_layers,
+            name=self.cfg_t.name + "-selfdraft")

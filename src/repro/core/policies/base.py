@@ -131,6 +131,18 @@ class SpecPolicy:
         bound."""
         return self.spec.sl_max + 1
 
+    def max_bucket(self) -> int:
+        """Largest draft bucket any round can run under this policy —
+        ``pick_bucket``'s upper bound.  The pipelined engine dispatches
+        stochastic (temperature>0) rounds at this width so a one-round-
+        stale bucket pick can never clip a sequence's device-side SL
+        below what the synchronous schedule would run (the window match
+        that makes sampled streams schedule-invariant, DESIGN.md §7);
+        raggedness inside the bucket is masked as usual."""
+        if not self.uses_draft():
+            return 0
+        return self.max_lookahead() - 1
+
     def pick_bucket(self, sl_next: np.ndarray, active: np.ndarray) -> int:
         """Python-side draft bucket choice: K = max active SL prediction
         (the paper's SL_max^(t) = max_i SL_i^(t) verification length).

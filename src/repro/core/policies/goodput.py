@@ -40,6 +40,18 @@ from repro.core.policies.base import PolicyObservation, SpecPolicy, register
 PyTree = Any
 
 
+# historical per-draft-step cost, used only when the config leaves
+# ``goodput_draft_cost=None`` AND no drafter resolved it (direct policy
+# unit use).  The serving engine resolves None from the configured
+# drafter's ``Drafter.step_cost()`` before any policy is built.
+FALLBACK_DRAFT_COST = 0.08
+
+
+def resolved_draft_cost(spec: SpecDecodeConfig) -> float:
+    return (spec.goodput_draft_cost
+            if spec.goodput_draft_cost is not None else FALLBACK_DRAFT_COST)
+
+
 def _goodput_curve(spec: SpecDecodeConfig, acc, xp):
     """Goodput G[B, nK] over the static k-grid [sl_min .. sl_max].
 
@@ -48,7 +60,7 @@ def _goodput_curve(spec: SpecDecodeConfig, acc, xp):
     ks = xp.arange(spec.sl_min, spec.sl_max + 1)             # [nK]
     a = xp.clip(acc, 1e-3, 0.999)[:, None]                   # [B, 1]
     e_acc = a * (1.0 - a ** ks[None, :]) / (1.0 - a)         # [B, nK]
-    goodput = (1.0 + e_acc) / (1.0 + spec.goodput_draft_cost
+    goodput = (1.0 + e_acc) / (1.0 + resolved_draft_cost(spec)
                                * ks[None, :].astype(xp.float32))
     return ks, goodput
 

@@ -1,0 +1,108 @@
+"""Shared multi-row prefill programs (DESIGN.md §7).
+
+Used by BOTH sides of a speculation round: the serving engine prefills
+the target model with them, and :class:`repro.core.drafters.ModelDrafter`
+prefills its draft model through the very same jitted entry points — so
+a same-bucket admission group costs exactly one program per model, no
+matter which component issues the call.
+
+``prefill_rows`` builds fresh dense cache rows; ``prefill_paged_rows``
+writes straight into allocated pool blocks through a multi-row
+block-table view (pools donated — admission never copies the pool).
+``set_slots`` scatters a batch-R row group into the batched cache at R
+slots with one fused scatter per leaf.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import ModelConfig
+from repro.models import cache as cache_lib
+from repro.models.transformer import forward
+
+PyTree = Any
+
+# cache leaves whose leading axis is the batch axis (everything else is
+# [layers, batch, ...])
+BATCH_AXIS0 = ("length", "kv_pos", "enc_valid", "block_table")
+
+
+def set_slots(big: PyTree, rows: PyTree, idx: jax.Array) -> PyTree:
+    """Scatter a batch=R cache-row group into the batched cache at the R
+    slots ``idx`` (one fused scatter per leaf, not one per request)."""
+    out = {}
+    for k, v in big.items():
+        r = rows[k]
+        if k in BATCH_AXIS0:
+            out[k] = v.at[idx].set(r)
+        else:
+            out[k] = v.at[:, idx].set(r)
+    return out
+
+
+def prefill_forward(params: PyTree, cfg: ModelConfig, cache: PyTree,
+                    tokens: jax.Array, prompt_lens: jax.Array
+                    ) -> Tuple[PyTree, jax.Array]:
+    """Shared multi-row prefill tail: masked forward over the
+    right-padded prompts [R, bucket], commit per-row ``length``, pick
+    each row's last real token's logits."""
+    mask = (jnp.arange(tokens.shape[1])[None] < prompt_lens[:, None])
+    logits, cache, _ = forward(params, cfg, tokens, cache=cache,
+                               mode="prefill", input_mask=mask)
+    cache["length"] = prompt_lens.astype(jnp.int32)
+    rows = jnp.arange(tokens.shape[0])
+    last = logits[rows, jnp.maximum(prompt_lens - 1, 0)]
+    return cache, last
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "max_len"))
+def prefill_rows(params: PyTree, cfg: ModelConfig, tokens: jax.Array,
+                 prompt_lens: jax.Array, max_len: int
+                 ) -> Tuple[PyTree, jax.Array]:
+    """Prefill a same-bucket group of R requests into fresh cache rows in
+    one program.  ``tokens [R, bucket]`` is right-padded; the (R, bucket)
+    pair keys the compiled-program cache.  Returns (cache rows [*, R, *],
+    last_logits [R, V])."""
+    cache = cache_lib.cache_struct(cfg, tokens.shape[0], max_len,
+                                   jnp.float32)
+    return prefill_forward(params, cfg, cache, tokens, prompt_lens)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",),
+                   donate_argnames=("pool_k", "pool_v", "kv_pos"))
+def prefill_paged_rows(params: PyTree, cfg: ModelConfig, pool_k: jax.Array,
+                       pool_v: jax.Array, kv_pos: jax.Array,
+                       table_rows: jax.Array, tokens: jax.Array,
+                       prompt_lens: jax.Array
+                       ) -> Tuple[PyTree, jax.Array]:
+    """Prefill a same-bucket group of R requests *straight into their
+    allocated pool blocks* as one multi-row program: the batch-R cache
+    view aliases the shared pools and routes every row's KV writes
+    through that row of ``table_rows [R, max_blocks]`` — rows land in
+    disjoint blocks by construction.  The pools are donated — the caller
+    immediately replaces its references with the returned ones, so
+    admission never copies (or transiently doubles) the whole pool.
+    Returns (cache view with updated pools + fresh per-row state,
+    last_logits [R, V])."""
+    cache = cache_lib.paged_prefill_view(cfg, pool_k, pool_v, kv_pos,
+                                         table_rows)
+    return prefill_forward(params, cfg, cache, tokens, prompt_lens)
+
+
+def scatter_paged_rows(big: PyTree, rows: PyTree, idx: jax.Array) -> PyTree:
+    """Fold a ``prefill_paged_rows`` result back into the batched paged
+    cache: pool leaves are replaced wholesale (the donated pools came
+    back updated), per-row leaves (length, hybrid recurrent state) are
+    scattered at ``idx``."""
+    out = dict(big)
+    out["k"], out["v"] = rows["k"], rows["v"]
+    out["kv_pos"] = rows["kv_pos"]
+    out["length"] = big["length"].at[idx].set(rows["length"])
+    for key in ("lru", "conv"):        # hybrid recurrent rows stay dense
+        if key in big:
+            out[key] = big[key].at[:, idx].set(rows[key])
+    return out

@@ -17,7 +17,7 @@ from the residual ``norm(max(P[:, j] - Q[:, j], 0))``.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -37,9 +37,20 @@ class RejectionResult(NamedTuple):
 def rejection_sample(key: jax.Array, draft_tokens: jax.Array,
                      draft_logits: jax.Array, target_logits: jax.Array,
                      draft_len: jax.Array, *, temperature: float,
-                     vocab_size: int, pad_id: int) -> RejectionResult:
+                     vocab_size: int, pad_id: int,
+                     row_keys: Optional[Tuple[jax.Array, jax.Array]] = None
+                     ) -> RejectionResult:
     """draft_tokens [B,K]; draft_logits [B,K,V]; target_logits [B,K+1,V];
-    draft_len [B] (0..K, ragged)."""
+    draft_len [B] (0..K, ragged).
+
+    ``row_keys=(accept_keys [B], recover_keys [B])`` switches to
+    *identity-threaded* RNG (DESIGN.md §7): the acceptance draw at
+    position ``j`` of row ``b`` is ``uniform(fold_in(accept_keys[b], j))``
+    and the recovery/bonus draw is keyed by ``recover_keys[b]`` alone —
+    so each draw depends only on the row's own key and the position,
+    never on the batch size or the padded draft width K.  Without it the
+    historical single-``key`` path is used (one [B, K] uniform tensor;
+    draws shift with batch/bucket shape)."""
     b, k = draft_tokens.shape
     p = probs_from_logits(target_logits, temperature, vocab_size)  # [B,K+1,V]
     q = probs_from_logits(draft_logits, temperature, vocab_size)   # [B,K,V]
@@ -54,7 +65,13 @@ def rejection_sample(key: jax.Array, draft_tokens: jax.Array,
         q_tok = jnp.take_along_axis(q, draft_tokens[..., None],
                                     axis=-1)[..., 0]
         ratio = p_tok / jnp.maximum(q_tok, 1e-30)
-        u = jax.random.uniform(key_acc, (b, k))
+        if row_keys is not None:
+            u = jax.vmap(lambda kb: jax.vmap(
+                lambda j: jax.random.uniform(
+                    jax.random.fold_in(kb, j), ()))(jnp.arange(k)))(
+                        row_keys[0])
+        else:
+            u = jax.random.uniform(key_acc, (b, k))
         accept = (u < jnp.minimum(ratio, 1.0)) & valid
         # accepted prefix: leading run of True
         prefix = jnp.cumprod(accept.astype(jnp.int32), axis=1)
@@ -83,7 +100,11 @@ def rejection_sample(key: jax.Array, draft_tokens: jax.Array,
         next_dist = jnp.where(all_accepted[:, None], p_j, residual)
     else:
         next_dist = p_j
-    next_token = sample_from_probs(key_rec, next_dist).astype(jnp.int32)
+    if row_keys is not None:
+        next_token = jax.vmap(sample_from_probs)(
+            row_keys[1], next_dist).astype(jnp.int32)
+    else:
+        next_token = sample_from_probs(key_rec, next_dist).astype(jnp.int32)
 
     # emitted stream: accepted drafts then next_token, pad elsewhere
     out = jnp.full((b, k + 1), pad_id, jnp.int32)

@@ -1,0 +1,94 @@
+"""Pallas TPU kernel: prompt-lookup suffix matching for the n-gram drafter.
+
+The NGramDrafter (DESIGN.md §9) proposes draft tokens by finding the most
+recent earlier occurrence of the sequence's trailing ``n``-gram inside its
+own known text and replaying the tokens that followed it — zero draft
+parameters, zero draft KV.  The hot loop is a batched windowed
+string-match over int32 token buffers ``[B, L]``; on accelerators the
+whole row fits in VMEM, so one program per sequence streams the buffer
+once and does all ``n`` shifted comparisons on-chip instead of ``n``
+separate HBM sweeps of an XLA gather pipeline.
+
+Layout / grid
+-------------
+  tokens  [B, L] int32   known text per sequence (history + pending)
+  ctx     [B, 1] int32   how many leading entries are real
+  out     [B, K] int32   proposed continuation (zero-padded)
+  cnt     [B, 1] int32   number of real proposals (0 = no match)
+
+  grid = (B,) — one program per sequence; ``n``/``k`` are small static
+  constants, so the shifted-equality reduction unrolls fully.  All
+  indexing is mask-and-reduce (TPU-safe: no 1-D iota, no dynamic
+  gather): the suffix values, the argmax-of-last-match, and the ``k``
+  continuation picks are each a broadcast compare + reduction over the
+  [1, L] tile.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(ctx_ref, tok_ref, out_ref, cnt_ref, *, n: int, k: int, l: int):
+    row = tok_ref[0, :]                                    # [L] int32
+    c = ctx_ref[0, 0]                                      # scalar int32
+    idx = jax.lax.broadcasted_iota(jnp.int32, (1, l), 1)[0]
+
+    match = jnp.ones((l,), bool)
+    for j in range(n):
+        # suffix value s_j = row[c - n + j] via masked reduction
+        sj = jnp.sum(jnp.where(idx == c - n + j, row, 0))
+        # row[i + j] as a static shift padded with -1 (never a token id)
+        if j:
+            shifted = jnp.concatenate(
+                [row[j:], jnp.full((j,), -1, row.dtype)])
+        else:
+            shifted = row
+        match = match & (shifted == sj)
+    # >= 1 known continuation (also kills the trivial suffix occurrence)
+    match = match & (idx + n <= c - 1) & (c >= n + 1)
+
+    best = jnp.max(jnp.where(match, idx, -1))              # most recent
+    found = best >= 0
+    cnt = jnp.where(found, jnp.minimum(jnp.int32(k), c - (best + n)),
+                    0).astype(jnp.int32)
+    cnt_ref[0, 0] = cnt
+    for m in range(k):
+        tm = jnp.sum(jnp.where(idx == best + n + m, row, 0))
+        out_ref[0, m] = jnp.where(m < cnt, tm, 0).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "k", "interpret"))
+def ngram_suffix_propose(tokens: jax.Array, ctx_len: jax.Array, *, n: int,
+                         k: int, interpret: bool = False
+                         ) -> Tuple[jax.Array, jax.Array]:
+    """tokens [B, L] int32; ctx_len [B] int32.  Returns
+    ``(proposed [B, K] int32 zero-padded, count [B] int32)`` — bit-exact
+    against :func:`repro.kernels.ref.ngram_propose_ref`."""
+    assert n >= 1, "suffix length must be >= 1"
+    b, l = tokens.shape
+    if k == 0:
+        return (jnp.zeros((b, 0), jnp.int32),
+                jnp.zeros((b,), jnp.int32))
+    out, cnt = pl.pallas_call(
+        functools.partial(_kernel, n=n, k=k, l=l),
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda bi: (bi, 0)),
+            pl.BlockSpec((1, l), lambda bi: (bi, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, k), lambda bi: (bi, 0)),
+            pl.BlockSpec((1, 1), lambda bi: (bi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, k), jnp.int32),
+            jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(ctx_len.astype(jnp.int32).reshape(b, 1), tokens.astype(jnp.int32))
+    return out, cnt[:, 0]

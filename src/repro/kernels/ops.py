@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.kld_accept import fused_kld_accept
+from repro.kernels.ngram_match import ngram_suffix_propose
 from repro.kernels.ragged_attention import (paged_ragged_verify_attention,
                                             ragged_verify_attention)
 
@@ -58,6 +59,24 @@ def paged_ragged_attention(q: jax.Array, pool_k: jax.Array,
     return ref.paged_ragged_verify_attention_ref(q, pool_k, pool_v,
                                                  block_table, q_pos, kv_pos,
                                                  window=window)
+
+
+def ngram_propose(tokens: jax.Array, ctx_len: jax.Array, *, n: int, k: int,
+                  force_kernel: bool = False,
+                  interpret: Optional[bool] = None
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Prompt-lookup suffix match for the n-gram drafter: most recent
+    earlier occurrence of the trailing n-gram + its k-token continuation.
+    Returns (proposed [B, K] int32 zero-padded, count [B] int32)."""
+    if k == 0:
+        b = tokens.shape[0]
+        return jnp.zeros((b, 0), jnp.int32), jnp.zeros((b,), jnp.int32)
+    if _on_tpu() or force_kernel:
+        return ngram_suffix_propose(
+            tokens, ctx_len, n=n, k=k,
+            interpret=bool(interpret) if interpret is not None
+            else not _on_tpu())
+    return ref.ngram_propose_ref(tokens, ctx_len, n=n, k=k)
 
 
 def kld_accept_signals(target_logits: jax.Array, draft_logits: jax.Array,

@@ -56,6 +56,51 @@ def paged_ragged_verify_attention_ref(q: jax.Array, pool_k: jax.Array,
                                        window=window)
 
 
+def ngram_propose_ref(tokens: jax.Array, ctx_len: jax.Array, *, n: int,
+                      k: int) -> Tuple[jax.Array, jax.Array]:
+    """Oracle for the prompt-lookup suffix-match kernel.
+
+    ``tokens [B, L]`` is each sequence's known text (committed history
+    with the pending token appended); ``ctx_len [B]`` how many leading
+    entries are real.  Finds the MOST RECENT earlier occurrence of the
+    length-``n`` suffix ``tokens[ctx_len-n : ctx_len]`` and proposes the
+    ``k`` tokens that followed it (clipped to the known text).
+
+    Returns ``(proposed [B, K] int32 — zero-padded beyond count,
+    count [B] int32 — 0 when no match)``.  Integer-exact: the Pallas
+    kernel must match this bit for bit.
+    """
+    b, l = tokens.shape
+    idx = jnp.arange(l)
+
+    def one(row, c):
+        # suffix values via masked reductions (no dynamic gather)
+        match = jnp.ones((l,), bool)
+        for j in range(n):
+            sj = jnp.sum(jnp.where(idx == c - n + j, row, 0))
+            # row[i + j] as a static shift, padded with -1 (never a token)
+            shifted = jnp.concatenate(
+                [row[j:], jnp.full((j,), -1, row.dtype)]) if j else row
+            match = match & (shifted == sj)
+        # a usable match needs >= 1 known continuation token (i + n <= c-1)
+        # — which also excludes the trivial occurrence at i = c - n — and
+        # enough context to have a length-n suffix at all
+        match = match & (idx + n <= c - 1) & (c >= n + 1)
+        best = jnp.max(jnp.where(match, idx, -1))
+        found = best >= 0
+        count = jnp.where(found,
+                          jnp.minimum(jnp.int32(k), c - (best + n)),
+                          0).astype(jnp.int32)
+        outs = []
+        for m in range(k):
+            tm = jnp.sum(jnp.where(idx == best + n + m, row, 0))
+            outs.append(jnp.where(m < count, tm, 0))
+        prop = (jnp.stack(outs) if k else jnp.zeros((0,), row.dtype))
+        return prop.astype(jnp.int32), count
+
+    return jax.vmap(one)(tokens, ctx_len.astype(jnp.int32))
+
+
 def kld_accept_ref(target_logits: jax.Array, draft_logits: jax.Array,
                    draft_tokens: jax.Array
                    ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:

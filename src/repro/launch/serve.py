@@ -25,9 +25,15 @@ def main() -> None:
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--demo", action="store_true",
                     help="run the CPU serving demo on the reduced config")
+    from repro.core.drafters import available_drafters
     from repro.core.policies import available_policies
     ap.add_argument("--policy", default="dsde",
                     choices=list(available_policies()))
+    ap.add_argument("--drafter", default="model",
+                    choices=list(available_drafters()),
+                    help="proposer for the speculation rounds (DESIGN.md "
+                         "§9): 'model' runs a second draft model; "
+                         "'ngram'/'self' serve with zero draft params")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--paged", action="store_true",
@@ -50,12 +56,19 @@ def main() -> None:
         from repro.serving.engine import ServingEngine
         from repro.serving.request import Request
 
+        from repro.core.drafters import build_drafter
+
         cfg = get_config(args.arch).reduced()
         pt = init_params(model_specs(cfg), jax.random.PRNGKey(1),
                          jnp.float32)
-        noise = init_params(model_specs(cfg), jax.random.PRNGKey(7),
-                            jnp.float32)
-        pd = jax.tree_util.tree_map(lambda a, b: a + 0.03 * b, pt, noise)
+        spec = SpecDecodeConfig(policy=args.policy, drafter=args.drafter)
+        if build_drafter(spec, cfg, cfg).uses_draft_model():
+            noise = init_params(model_specs(cfg), jax.random.PRNGKey(7),
+                                jnp.float32)
+            pd, cfg_d = jax.tree_util.tree_map(
+                lambda a, b: a + 0.03 * b, pt, noise), cfg
+        else:                       # model-free drafter: no second model
+            pd, cfg_d = None, None
         serving = ServingConfig(max_batch_size=4, max_seq_len=256,
                                 pipelined=args.pipelined)
         if args.paged:
@@ -63,8 +76,7 @@ def main() -> None:
                 max_batch_size=4, max_seq_len=256, paged_kv=True,
                 kv_block_size=16, pipelined=args.pipelined,
                 num_kv_blocks=4 * (256 // 16) // 2)   # 50% of dense bytes
-        eng = ServingEngine(pt, cfg, pd, cfg,
-                            SpecDecodeConfig(policy=args.policy), serving)
+        eng = ServingEngine(pt, cfg, pd, cfg_d, spec, serving)
         rng = np.random.RandomState(0)
         reqs = [Request(i, prompt=rng.randint(
             0, cfg.vocab_size, size=rng.randint(6, 20)).tolist(),

@@ -33,7 +33,7 @@ TPU launch scripts drive; only meshes/shardings differ (repro/launch).
 """
 from __future__ import annotations
 
-import functools
+import dataclasses
 import math
 import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple
@@ -42,80 +42,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import prefill as prefill_lib
 from repro.core import spec_decode as sd
 from repro.core.config import (ModelConfig, ServingConfig, SpecDecodeConfig)
+from repro.core.drafters import build_drafter
 from repro.core.policies import build_policy
 from repro.core.sampling import sample_token
 from repro.models import cache as cache_lib
-from repro.models.transformer import forward
 from repro.serving.request import Request, RequestState
 from repro.serving.scheduler import LookaheadScheduler
 
 PyTree = Any
-
-_BATCH_AXIS0 = ("length", "kv_pos", "enc_valid", "block_table")
-
-
-def _set_slots(big: PyTree, rows: PyTree, idx: jax.Array) -> PyTree:
-    """Scatter a batch=R cache-row group into the batched cache at the R
-    slots ``idx`` (one fused scatter per leaf, not one per request)."""
-    out = {}
-    for k, v in big.items():
-        r = rows[k]
-        if k in _BATCH_AXIS0:
-            out[k] = v.at[idx].set(r)
-        else:
-            out[k] = v.at[:, idx].set(r)
-    return out
-
-
-def _prefill_forward(params: PyTree, cfg: ModelConfig, cache: PyTree,
-                     tokens: jax.Array, prompt_lens: jax.Array
-                     ) -> Tuple[PyTree, jax.Array]:
-    """Shared multi-row prefill tail: masked forward over the
-    right-padded prompts [R, bucket], commit per-row ``length``, pick
-    each row's last real token's logits."""
-    mask = (jnp.arange(tokens.shape[1])[None] < prompt_lens[:, None])
-    logits, cache, _ = forward(params, cfg, tokens, cache=cache,
-                               mode="prefill", input_mask=mask)
-    cache["length"] = prompt_lens.astype(jnp.int32)
-    rows = jnp.arange(tokens.shape[0])
-    last = logits[rows, jnp.maximum(prompt_lens - 1, 0)]
-    return cache, last
-
-
-@functools.partial(jax.jit, static_argnames=("cfg", "max_len"))
-def _prefill_rows(params: PyTree, cfg: ModelConfig, tokens: jax.Array,
-                  prompt_lens: jax.Array, max_len: int
-                  ) -> Tuple[PyTree, jax.Array]:
-    """Prefill a same-bucket group of R requests into fresh cache rows in
-    one program.  ``tokens [R, bucket]`` is right-padded; the (R, bucket)
-    pair keys the compiled-program cache.  Returns (cache rows [*, R, *],
-    last_logits [R, V])."""
-    cache = cache_lib.cache_struct(cfg, tokens.shape[0], max_len,
-                                   jnp.float32)
-    return _prefill_forward(params, cfg, cache, tokens, prompt_lens)
-
-
-@functools.partial(jax.jit, static_argnames=("cfg",),
-                   donate_argnames=("pool_k", "pool_v", "kv_pos"))
-def _prefill_paged_rows(params: PyTree, cfg: ModelConfig, pool_k: jax.Array,
-                        pool_v: jax.Array, kv_pos: jax.Array,
-                        table_rows: jax.Array, tokens: jax.Array,
-                        prompt_lens: jax.Array
-                        ) -> Tuple[PyTree, jax.Array]:
-    """Prefill a same-bucket group of R requests *straight into their
-    allocated pool blocks* as one multi-row program: the batch-R cache
-    view aliases the shared pools and routes every row's KV writes
-    through that row of ``table_rows [R, max_blocks]`` — rows land in
-    disjoint blocks by construction.  The pools are donated — the caller
-    immediately replaces its references with the returned ones, so
-    admission never copies (or transiently doubles) the whole pool.
-    Returns (cache view with updated pools + fresh per-row state,
-    last_logits [R, V])."""
-    cache = cache_lib.paged_prefill_view(cfg, pool_k, pool_v, kv_pos,
-                                         table_rows)
-    return _prefill_forward(params, cfg, cache, tokens, prompt_lens)
 
 
 def _bucket(n: int, minimum: int = 16, cap: Optional[int] = None) -> int:
@@ -153,30 +90,53 @@ class _DispatchRecord:
 
 class ServingEngine:
     def __init__(self, params_target: PyTree, cfg_target: ModelConfig,
-                 params_draft: PyTree, cfg_draft: ModelConfig,
+                 params_draft: Optional[PyTree],
+                 cfg_draft: Optional[ModelConfig],
                  spec: SpecDecodeConfig, serving: ServingConfig,
                  seed: int = 0):
         self.pt, self.cfg_t = params_target, cfg_target
         self.pd, self.cfg_d = params_draft, cfg_draft
+        # the drafter (DESIGN.md §9) — the proposer half of every round.
+        # A goodput cost left unresolved (None) is sourced from the
+        # drafter's own step_cost() BEFORE any policy is built, so the
+        # resolved spec is the single static key everywhere downstream.
+        drafter = build_drafter(spec, cfg_target, cfg_draft)
+        if drafter.uses_draft_model() and (params_draft is None
+                                           or cfg_draft is None):
+            raise ValueError(
+                f"drafter {spec.drafter!r} needs draft-model params/config"
+                " (params_draft / cfg_draft must not be None)")
+        if spec.goodput_draft_cost is None:
+            spec = dataclasses.replace(spec,
+                                       goodput_draft_cost=drafter.step_cost())
+            drafter = build_drafter(spec, cfg_target, cfg_draft)
+        self.drafter = drafter
         self.spec = spec
         self.policy = build_policy(spec)
         self.serving = serving
         self.paged = serving.paged_kv
         if self.paged and not (cache_lib.supports_paged(cfg_target)
-                               and cache_lib.supports_paged(cfg_draft)):
+                               and (not drafter.mirrors_kv()
+                                    or cache_lib.supports_paged(cfg_draft))):
             raise ValueError(
                 "paged_kv=True but family pair "
-                f"({cfg_target.family}, {cfg_draft.family}) has no paged "
+                f"({cfg_target.family}, "
+                f"{cfg_draft.family if cfg_draft else None}) has no paged "
                 "KV layout (supported: dense/moe/vlm/hybrid)")
+        # model-free drafters have no mirrored draft pool: the mirror's
+        # block budget returns to the target pool, so the same
+        # ServingConfig admits proportionally more in-flight sequences
+        # (the per-sequence charge halves, DESIGN.md §9)
         self.scheduler = LookaheadScheduler(serving, spec,
-                                            policy=self.policy)
+                                            policy=self.policy,
+                                            kv_mirror=drafter.mirrors_kv())
         self.key = jax.random.PRNGKey(seed)
         b = serving.max_batch_size
-        paged_arg = ((serving.pool_blocks(), serving.kv_block_size)
-                     if self.paged else None)
+        paged_arg = ((self.scheduler.kv_blocks_total(),
+                      serving.kv_block_size) if self.paged else None)
         self.state = sd.init_round_state(
             cfg_target, cfg_draft, spec, b, serving.max_seq_len,
-            self._next_key(), paged=paged_arg)
+            self.key, paged=paged_arg, drafter=drafter)
         # host-side mirror of state.sl_next, refreshed once per collect
         # while the round's other outputs are already being transferred —
         # the bucket choice never triggers its own device->host sync.
@@ -201,9 +161,14 @@ class ServingEngine:
         self.round_log: List[Dict[str, float]] = []
 
     # ------------------------------------------------------------------ rng
-    def _next_key(self) -> jax.Array:
-        self.key, k = jax.random.split(self.key)
-        return k
+    def _request_keys(self, reqs: List[Request]) -> jax.Array:
+        """[R] per-request prefill-sampling keys: bound to the request's
+        identity alone (identity-threaded RNG, DESIGN.md §7), so the
+        first token a request samples is independent of admission
+        grouping, schedule, and batch composition."""
+        ids = jnp.asarray([r.request_id for r in reqs], jnp.int32)
+        zero = jnp.zeros_like(ids)
+        return sd.row_keys(self.key, ids, zero, sd.PURPOSE_PREFILL)
 
     # ------------------------------------------------------------- lifecycle
     def submit(self, req: Request) -> None:
@@ -224,14 +189,18 @@ class ServingEngine:
         if not rows and not fresh_ids:
             return
         st = self.state
-        tc, dc = dict(st.target_cache), dict(st.draft_cache)
+        mirror = self.drafter.mirrors_kv()
+        tc = dict(st.target_cache)
+        dc = dict(st.draft_cache) if mirror else st.draft_cache
         if fresh_ids:
             tc["kv_pos"] = cache_lib.reset_blocks(tc["kv_pos"], fresh_ids)
-            dc["kv_pos"] = cache_lib.reset_blocks(dc["kv_pos"], fresh_ids)
+            if mirror:
+                dc["kv_pos"] = cache_lib.reset_blocks(dc["kv_pos"], fresh_ids)
         for slot, row in rows:
             r = jnp.asarray(row, jnp.int32)
             tc["block_table"] = tc["block_table"].at[slot].set(r)
-            dc["block_table"] = dc["block_table"].at[slot].set(r)
+            if mirror:
+                dc["block_table"] = dc["block_table"].at[slot].set(r)
         self.state = st._replace(target_cache=tc, draft_cache=dc)
 
     def _plan_blocks(self) -> None:
@@ -349,39 +318,43 @@ class ServingEngine:
             req.cache_len = len(prefix)
         toks = jnp.asarray(toks_np)
         plen_j = jnp.asarray(plens)
+        rows_j = None
         if self.paged:
             rows_np = [self._table_row(req) for req in reqs]
             alloc_ids = [b for req in reqs for b in req.block_ids]
             self._sync_block_tables(list(zip(slots, rows_np)), alloc_ids)
             st = self.state
-            tc, dc = dict(st.target_cache), dict(st.draft_cache)
+            tc = dict(st.target_cache)
             rows_j = jnp.asarray(np.stack(rows_np), jnp.int32)
-            rows_t, last_t = _prefill_paged_rows(
+            rows_t, last_t = prefill_lib.prefill_paged_rows(
                 self.pt, self.cfg_t, tc["k"], tc["v"], tc["kv_pos"],
                 rows_j, toks, plen_j)
-            rows_d, _ = _prefill_paged_rows(
-                self.pd, self.cfg_d, dc["k"], dc["v"], dc["kv_pos"],
-                rows_j, toks, plen_j)
-            for big, rr in ((tc, rows_t), (dc, rows_d)):
-                big["k"], big["v"] = rr["k"], rr["v"]
-                big["kv_pos"] = rr["kv_pos"]
-                big["length"] = big["length"].at[idx].set(rr["length"])
-                for key in ("lru", "conv"):    # hybrid recurrent rows
-                    if key in big:
-                        big[key] = big[key].at[:, idx].set(rr[key])
+            tc = prefill_lib.scatter_paged_rows(tc, rows_t, idx)
         else:
             st = self.state
-            rows_t, last_t = _prefill_rows(self.pt, self.cfg_t, toks, plen_j,
-                                           self.serving.max_seq_len)
-            rows_d, _ = _prefill_rows(self.pd, self.cfg_d, toks, plen_j,
-                                      self.serving.max_seq_len)
-            tc = _set_slots(st.target_cache, rows_t, idx)
-            dc = _set_slots(st.draft_cache, rows_d, idx)
-        # pending token per row: sampled at prefill for fresh requests,
-        # the already-emitted last token for readmits
-        sampled = sample_token(self._next_key(), last_t,
-                               self.spec.temperature,
-                               self.cfg_t.vocab_size).astype(jnp.int32)
+            rows_t, last_t = prefill_lib.prefill_rows(
+                self.pt, self.cfg_t, toks, plen_j, self.serving.max_seq_len)
+            tc = prefill_lib.set_slots(st.target_cache, rows_t, idx)
+        # drafter-side prefill: a model drafter runs its own one-program-
+        # per-bucket prefill (through the same jitted entry points, so
+        # program accounting is symmetric); a model-free drafter absorbs
+        # the tokens directly — no draft prefill program at all
+        rows_mask = jnp.zeros((self.serving.max_batch_size,),
+                              bool).at[idx].set(True)
+        dc = self.drafter.reset_rows(st.draft_cache, rows_mask)
+        dc = self.drafter.prefill(
+            self.pd, dc, idx, toks, plen_j,
+            max_len=self.serving.max_seq_len,
+            table_rows=(rows_j if (self.paged and self.drafter.mirrors_kv())
+                        else None))
+        # pending token per row: sampled at prefill for fresh requests
+        # (per-request keys — schedule/grouping invariant), the
+        # already-emitted last token for readmits
+        req_keys = self._request_keys(reqs)
+        sampled = jax.vmap(
+            lambda kk, lg: sample_token(kk, lg, self.spec.temperature,
+                                        self.cfg_t.vocab_size)
+        )(req_keys, last_t).astype(jnp.int32)
         readmit_j = jnp.asarray(readmit)
         budgets_j = jnp.asarray(budgets)
         eos_j = jnp.asarray(eos)
@@ -390,8 +363,6 @@ class ServingEngine:
         # (or a 1-token budget) marks the slot done WITHOUT a host sync,
         # so the pipelined loop can keep dispatching blind
         done0 = ((pend == eos_j) & (eos_j >= 0)) | (budgets_j <= 0)
-        rows_mask = jnp.zeros((self.serving.max_batch_size,),
-                              bool).at[idx].set(True)
         ps = self.policy.reset_rows(st.policy_state, rows_mask)
         sl0_val = self.policy.initial_sl_value()
         # refresh the scheduler's mirror too: block planning for this
@@ -400,10 +371,16 @@ class ServingEngine:
         # under-allocate blocks and silently drop accepted KV writes)
         self._sl_next_host[np.asarray(slots)] = sl0_val
         self.scheduler.update_predictions(self._sl_next_host)
+        # identity-threaded RNG rows: bind the slot to its new occupant's
+        # seed and round ordinal (a readmit resumes its own key stream)
+        seed_j = jnp.asarray([req.request_id for req in reqs], jnp.int32)
+        ridx_j = jnp.asarray([req.rounds for req in reqs], jnp.int32)
         self.state = st._replace(
             target_cache=tc, draft_cache=dc, policy_state=ps,
             pending=st.pending.at[idx].set(pend),
             sl_next=st.sl_next.at[idx].set(jnp.int32(sl0_val)),
+            seed=st.seed.at[idx].set(seed_j),
+            round_idx=st.round_idx.at[idx].set(ridx_j),
             done=st.done.at[idx].set(done0),
             tokens_budget=st.tokens_budget.at[idx].set(budgets_j),
             eos_id=st.eos_id.at[idx].set(eos_j))
@@ -439,8 +416,7 @@ class ServingEngine:
         self._planned_k = None
         if self.scheduler.running:
             if self.serving.pipelined:
-                self._planned_k = self.policy.pick_bucket(
-                    self._sl_next_host, self.scheduler.active_mask)
+                self._planned_k = self._pick_bucket_pipelined()
             if self.paged:
                 before = self.scheduler.preempted_total
                 self._plan_blocks()         # may preempt (slots go inactive)
@@ -450,8 +426,22 @@ class ServingEngine:
                     # over the survivors.  A smaller K only shrinks
                     # write extents, so the block growth just planned
                     # (with the wider K) still over-covers.
-                    self._planned_k = self.policy.pick_bucket(
-                        self._sl_next_host, self.scheduler.active_mask)
+                    self._planned_k = self._pick_bucket_pipelined()
+
+    def _pick_bucket_pipelined(self) -> int:
+        """Bucket choice for a pipelined dispatch, whose SL mirror is one
+        round stale.  Greedy rounds pick from the stale mirror (a
+        clipped window cannot change argmax streams).  Stochastic rounds
+        dispatch at the policy's max bucket instead: a stale pick could
+        clip a sequence's device-side SL below what the synchronous
+        schedule runs, and at temperature>0 the realized sample stream
+        depends on the proposal window — worst-case width keeps sampled
+        streams schedule-invariant (DESIGN.md §7) at the cost of masked
+        padding work."""
+        if self.spec.temperature > 0.0:
+            return self.policy.max_bucket()
+        return self.policy.pick_bucket(self._sl_next_host,
+                                       self.scheduler.active_mask)
 
     def dispatch(self) -> Optional[_DispatchRecord]:
         """Phase 2 — enqueue one speculative round.  Returns the dispatch
@@ -469,7 +459,7 @@ class ServingEngine:
         self._planned_k = None
         t_dispatch = time.monotonic()
         self.state, out = sd.spec_decode_round(
-            self.pt, self.pd, self.cfg_t, self.cfg_d, self.spec, k,
+            self.pt, self.pd, self.cfg_t, self.drafter, self.spec, k,
             self.state, jnp.asarray(active_mask))
         self.rounds += 1
         self.draft_steps += (k + 1) if k > 0 else 0
@@ -602,12 +592,20 @@ class ServingEngine:
         # draft_steps_effective takes its max over that set too
         round_rec = {
             "k": rec.k,
+            "drafter": self.spec.drafter,
             "emitted": float(n_emit[live].sum()),
             "accepted": float(n_acc[live].sum()),
             "proposed": float(n_prop[live].sum()),
         }
+        eff_steps = 0
         if rec.k > 0 and live.any():
-            self.draft_steps_effective += int(n_prop[live].max()) + 1
+            eff_steps = int(n_prop[live].max()) + 1
+            self.draft_steps_effective += eff_steps
+        # what this round's drafting actually cost, in target-
+        # verification units — the capacity-vs-latency number that makes
+        # model-free drafters' wins visible in benchmark rows
+        round_rec["draft_cost_effective"] = (eff_steps
+                                             * self.drafter.step_cost())
         # per-sequence KV slots the policy plans for the NEXT round — the
         # capacity-planning view of intra-batch heterogeneity.  Logged
         # after release so just-finished slots are not counted.
@@ -619,6 +617,12 @@ class ServingEngine:
         round_rec["kv_pool_utilization"] = (
             round_rec["kv_blocks_in_use"]
             / max(self.scheduler.kv_blocks_total(), 1))
+        # draft-side KV residency: the mirrored pool holds exactly the
+        # target's in-use block set; a model-free drafter holds none —
+        # the capacity win of lookup/self drafting, made visible per round
+        round_rec["draft_kv_blocks_in_use"] = (
+            round_rec["kv_blocks_in_use"] if self.drafter.mirrors_kv()
+            else 0.0)
         round_rec["host_blocked_s"] = host_blocked
         # per-round cadence: with a successor round already in flight,
         # dispatch-to-dispatch (so pipelined per-round walls sum to the
@@ -689,6 +693,13 @@ class ServingEngine:
             "preemptions": self.scheduler.preempted_total,
             "tokens_emitted": self.emitted_total,
             "rounds": self.rounds,
+            "drafter": self.spec.drafter,
+            "draft_step_cost": self.drafter.step_cost(),
+            "draft_cost_effective": float(sum(
+                r.get("draft_cost_effective", 0.0) for r in self.round_log)),
+            "draft_kv_blocks_peak": float(max(
+                (r.get("draft_kv_blocks_in_use", 0.0)
+                 for r in self.round_log), default=0.0)),
             "draft_steps": self.draft_steps,
             "draft_steps_effective": self.draft_steps_effective,
             # paper's BE: tokens per target verification, per sequence

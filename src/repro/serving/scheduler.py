@@ -103,7 +103,15 @@ class BlockAllocator:
 
 class LookaheadScheduler:
     def __init__(self, serving: ServingConfig, spec: SpecDecodeConfig,
-                 policy: Optional[SpecPolicy] = None):
+                 policy: Optional[SpecPolicy] = None,
+                 kv_mirror: bool = True):
+        """``kv_mirror``: whether the serving drafter holds a paged KV
+        pool mirroring the target's block ids (``Drafter.mirrors_kv``).
+        ``ServingConfig.num_kv_blocks`` budgets such a mirrored *pair*;
+        a drafter with no draft-side KV halves the per-sequence charge,
+        so its whole mirror budget returns to the target pool — the pool
+        doubles and admits proportionally more in-flight sequences
+        (DESIGN.md §9)."""
         self.serving = serving
         self.spec = spec
         self.policy = policy if policy is not None else build_policy(spec)
@@ -111,8 +119,8 @@ class LookaheadScheduler:
         self.slots: List[Optional[Request]] = [None] * serving.max_batch_size
         self.allocator: Optional[BlockAllocator] = None
         if serving.paged_kv:
-            self.allocator = BlockAllocator(serving.pool_blocks(),
-                                            serving.kv_block_size)
+            pool = serving.pool_blocks() * (1 if kv_mirror else 2)
+            self.allocator = BlockAllocator(pool, serving.kv_block_size)
             assert (self.allocator.num_blocks * self.allocator.block_size
                     >= serving.max_seq_len), (
                 "KV pool smaller than one max-length sequence — "

@@ -1,0 +1,401 @@
+"""Tests for the pluggable drafter API (repro/core/drafters).
+
+Covers: registry round-trips, the n-gram suffix-match oracle + Pallas
+kernel bit-exactness, greedy exactness of every drafter (speculative
+decoding's guarantee is proposer-independent), the full drafter × policy
+config matrix, model-free serving with zero draft params / zero draft KV
+blocks (and the doubled paged pool), goodput cost sourcing from
+``Drafter.step_cost()``, and the serving-level *statistical* exactness
+of the stochastic path: temperature-1.0 engine token frequencies match
+target-only autoregressive sampling, for both ``model`` and ``ngram``
+drafters.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import spec_decode as sd
+from repro.core.config import ModelConfig, ServingConfig, SpecDecodeConfig
+from repro.core.drafters import (Drafter, available_drafters, build_drafter,
+                                 model_flops_per_token, register_drafter)
+from repro.core.policies import available_policies
+from repro.kernels import ops as kernel_ops
+from repro.kernels import ref
+from repro.models.module import init_params
+from repro.models.transformer import forward, model_specs
+from repro.serving.engine import ServingEngine
+from repro.serving.request import Request
+
+jax.config.update("jax_platform_name", "cpu")
+
+KEY = jax.random.PRNGKey(0)
+ALL_DRAFTERS = ("model", "ngram", "self")
+
+
+@pytest.fixture(scope="module")
+def pair():
+    cfg = get_config("smollm-135m").reduced()
+    pt = init_params(model_specs(cfg), jax.random.PRNGKey(1), jnp.float32)
+    noise = init_params(model_specs(cfg), jax.random.PRNGKey(9), jnp.float32)
+    pd = jax.tree_util.tree_map(lambda a, b: a + 0.04 * b, pt, noise)
+    return cfg, pt, pd
+
+
+def greedy_rollout(params, cfg, prompt, n):
+    toks = list(prompt)
+    for _ in range(n):
+        logits, _, _ = forward(params, cfg,
+                               jnp.asarray([toks], jnp.int32), mode="train")
+        toks.append(int(jnp.argmax(logits[0, -1, :cfg.vocab_size])))
+    return toks[len(prompt):]
+
+
+def _engine(cfg, pt, pd, spec, **sv_kw):
+    model_free = not build_drafter(spec, cfg, cfg).uses_draft_model()
+    return ServingEngine(pt, cfg, None if model_free else pd,
+                         None if model_free else cfg, spec,
+                         ServingConfig(**sv_kw), seed=0)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+def test_registry_lists_builtin_drafters():
+    assert set(ALL_DRAFTERS) <= set(available_drafters())
+
+
+@pytest.mark.parametrize("name", ALL_DRAFTERS)
+def test_build_drafter_round_trip(name):
+    cfg = get_config("smollm-135m").reduced()
+    spec = SpecDecodeConfig(drafter=name)
+    d = build_drafter(spec, cfg, cfg)
+    assert isinstance(d, Drafter)
+    # frozen + hashable: usable inside a jit static argument
+    assert hash(d) == hash(build_drafter(spec, cfg, cfg))
+    assert d == build_drafter(spec, cfg, cfg)
+
+
+def test_build_drafter_unknown_name_raises():
+    cfg = get_config("smollm-135m").reduced()
+    with pytest.raises(KeyError, match="registered"):
+        build_drafter(SpecDecodeConfig(drafter="nope"), cfg, cfg)
+
+
+def test_register_custom_drafter():
+    @register_drafter("_test_null")
+    @dataclasses.dataclass(frozen=True)
+    class NullDrafter(Drafter):
+        pass
+
+    try:
+        d = build_drafter(SpecDecodeConfig(drafter="_test_null"),
+                          get_config("smollm-135m").reduced())
+        assert not d.uses_draft_model() and d.step_cost() == 0.0
+        assert "_test_null" in available_drafters()
+    finally:
+        from repro.core.drafters import base
+        base._REGISTRY.pop("_test_null", None)
+
+
+def test_step_cost_semantics(pair):
+    cfg, _, _ = pair
+    cfg_d = dataclasses.replace(cfg, d_model=128, num_heads=2,
+                                num_kv_heads=1, head_dim=64, d_ff=256,
+                                name="little")
+    spec = SpecDecodeConfig()
+    model = build_drafter(spec, cfg, cfg_d)
+    assert 0.0 < model.step_cost() < 1.0       # smaller draft is cheaper
+    assert build_drafter(SpecDecodeConfig(drafter="ngram"),
+                         cfg).step_cost() == 0.0
+    selfd = build_drafter(SpecDecodeConfig(drafter="self"), cfg)
+    assert 0.0 < selfd.step_cost() < 1.0       # a strict prefix of layers
+    assert model_flops_per_token(cfg_d) < model_flops_per_token(cfg)
+
+
+def test_self_drafter_rejects_bad_configs(pair):
+    cfg, _, _ = pair
+    with pytest.raises(ValueError, match="self_draft_layers"):
+        build_drafter(SpecDecodeConfig(drafter="self",
+                                       self_draft_layers=cfg.num_layers),
+                      cfg)
+    ssm = get_config("mamba2-130m").reduced()
+    with pytest.raises(ValueError, match="family"):
+        build_drafter(SpecDecodeConfig(drafter="self"), ssm)
+
+
+# ---------------------------------------------------------------------------
+# N-gram suffix match: oracle semantics + kernel bit-exactness
+# ---------------------------------------------------------------------------
+
+def test_ngram_oracle_basic_match():
+    # suffix [1,2,3] (ctx=12) occurs at 0 (cont 9,1,...) and 4 (cont 7,5,...)
+    buf = jnp.asarray([[1, 2, 3, 9, 1, 2, 3, 7, 5, 1, 2, 3, 0, 0]], jnp.int32)
+    toks, cnt = ref.ngram_propose_ref(buf, jnp.asarray([12]), n=3, k=4)
+    # most recent usable occurrence is i=4: continuation 7, 5, 1, 2
+    np.testing.assert_array_equal(np.asarray(toks)[0], [7, 5, 1, 2])
+    assert int(cnt[0]) == 4
+
+
+def test_ngram_oracle_no_match_and_short_context():
+    buf = jnp.asarray([[1, 2, 3, 4, 5, 6, 0, 0]], jnp.int32)
+    toks, cnt = ref.ngram_propose_ref(buf, jnp.asarray([6]), n=3, k=2)
+    assert int(cnt[0]) == 0                      # no repeat anywhere
+    np.testing.assert_array_equal(np.asarray(toks)[0], [0, 0])
+    # context shorter than n+1 can never match
+    toks, cnt = ref.ngram_propose_ref(buf, jnp.asarray([3]), n=3, k=2)
+    assert int(cnt[0]) == 0
+
+
+def test_ngram_oracle_continuation_clipped_at_context():
+    # suffix [1,2] (ctx=6) matches at 0; continuation has only 2 known
+    # tokens (positions 2,3) before... ctx bounds nothing here; at i=2
+    # the match [1,2] continues with 1,2 up to ctx edge
+    buf = jnp.asarray([[1, 2, 1, 2, 1, 2, 0, 0]], jnp.int32)
+    toks, cnt = ref.ngram_propose_ref(buf, jnp.asarray([6]), n=2, k=4)
+    # most recent usable i with >=1 continuation before ctx: i=2
+    # (cont positions 4,5 -> tokens 1,2); i=4 is the trivial suffix
+    assert int(cnt[0]) == 2
+    np.testing.assert_array_equal(np.asarray(toks)[0, :2], [1, 2])
+
+
+@pytest.mark.parametrize("n,k", [(1, 3), (2, 4), (3, 5), (4, 1)])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_ngram_kernel_matches_oracle_exactly(n, k, seed):
+    rng = np.random.RandomState(seed)
+    b, l = 5, 96
+    # small alphabet => plenty of accidental repeats to find
+    buf = jnp.asarray(rng.randint(0, 5, size=(b, l)), jnp.int32)
+    ctx = jnp.asarray(rng.randint(0, l + 1, size=(b,)), jnp.int32)
+    want_t, want_c = ref.ngram_propose_ref(buf, ctx, n=n, k=k)
+    got_t, got_c = kernel_ops.ngram_propose(buf, ctx, n=n, k=k,
+                                            force_kernel=True,
+                                            interpret=True)
+    np.testing.assert_array_equal(np.asarray(got_t), np.asarray(want_t))
+    np.testing.assert_array_equal(np.asarray(got_c), np.asarray(want_c))
+
+
+# ---------------------------------------------------------------------------
+# Greedy exactness per drafter + model-free serving guarantees
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ALL_DRAFTERS)
+def test_greedy_exactness_per_drafter(pair, name):
+    """Speculative decoding is exact no matter WHO proposes: greedy
+    engine output == the target's greedy rollout for every drafter."""
+    cfg, pt, pd = pair
+    # a repetitive prompt gives the lookup drafter real matches
+    prompt = [3, 7, 11, 3, 7, 11, 3, 7]
+    n_new = 16
+    want = greedy_rollout(pt, cfg, prompt, n_new)
+    spec = SpecDecodeConfig(policy="dsde", temperature=0.0, drafter=name)
+    eng = _engine(cfg, pt, pd, spec, max_batch_size=2, max_seq_len=128)
+    req = Request(0, prompt=list(prompt), max_new_tokens=n_new)
+    m = eng.run([req])
+    assert req.output == want, name
+    assert m["drafter"] == name
+
+
+def test_ngram_serves_with_zero_draft_params_and_zero_kv(pair):
+    """The headline capacity claim: a model-free drafter serves with NO
+    draft params and NO draft KV blocks, and the paged pool doubles
+    (the draft mirror's block budget returns to the target pool)."""
+    cfg, pt, _ = pair
+    rng = np.random.RandomState(3)
+    prompts = [rng.randint(0, cfg.vocab_size, size=8).tolist()
+               for _ in range(3)]
+    spec = SpecDecodeConfig(policy="dsde", temperature=0.0, drafter="ngram")
+    sv = ServingConfig(max_batch_size=2, max_seq_len=128, paged_kv=True,
+                       kv_block_size=16, num_kv_blocks=8)
+    eng = ServingEngine(pt, cfg, None, None, spec, sv, seed=0)
+    reqs = [Request(i, prompt=p, max_new_tokens=8)
+            for i, p in enumerate(prompts)]
+    m = eng.run(reqs)
+    assert m["requests_finished"] == 3
+    # drafter state is a token history, not a KV cache
+    assert set(eng.state.draft_cache) == {"tokens", "length"}
+    assert m["draft_kv_blocks_peak"] == 0.0
+    assert all(r.get("draft_kv_blocks_in_use") == 0.0
+               for r in eng.round_log)
+    # mirror budget returned: pool is 2x the configured num_kv_blocks
+    assert m["kv_pool_blocks"] == 16.0
+    assert eng.scheduler.kv_blocks_total() == 16
+
+
+def test_model_drafter_requires_params(pair):
+    cfg, pt, _ = pair
+    with pytest.raises(ValueError, match="draft-model params"):
+        ServingEngine(pt, cfg, None, None, SpecDecodeConfig(),
+                      ServingConfig(max_batch_size=2, max_seq_len=64))
+
+
+def test_ngram_lookup_actually_accelerates():
+    """On self-repeating text the lookup drafter must land accepted
+    proposals (BE > 1), i.e. it is a real drafter, not a no-op.  The
+    tiny model's greedy dynamics enter a cycle (verified against the
+    reference rollout), which is exactly the regime prompt lookup
+    exploits."""
+    cfg = _tiny_cfg(vocab=8)
+    pt = _sharpened_params(cfg)
+    prompt = [1, 2, 3, 1, 2, 3, 1, 2]
+    want = greedy_rollout(pt, cfg, prompt, 24)
+    # the stream must contain a repeated trigram (a cycle) for the
+    # lookup to have anything to find — guards the fixture, not the code
+    assert any(want[i:i + 3] == want[j:j + 3]
+               for i in range(len(want) - 3)
+               for j in range(i + 1, len(want) - 3))
+    spec = SpecDecodeConfig(policy="static", static_sl=4, temperature=0.0,
+                            drafter="ngram")
+    eng = _engine(cfg, pt, None, spec, max_batch_size=1, max_seq_len=128)
+    req = Request(0, prompt=list(prompt), max_new_tokens=24)
+    m = eng.run([req])
+    assert req.output == want
+    assert req.accepted_tokens > 0
+    assert m["block_efficiency"] > 1.0
+    assert m["rounds"] < 23          # strictly fewer than autoregressive
+
+
+# ---------------------------------------------------------------------------
+# The full drafter x policy grid, by config string alone
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("drafter", ALL_DRAFTERS)
+@pytest.mark.parametrize("policy", available_policies())
+def test_drafter_policy_matrix(pair, drafter, policy):
+    """Every registered drafter works with every registered policy via
+    ``SpecDecodeConfig`` alone — no special wiring per cell."""
+    cfg, pt, pd = pair
+    rng = np.random.RandomState(7)
+    spec = SpecDecodeConfig(policy=policy, drafter=drafter,
+                            temperature=0.0)
+    eng = _engine(cfg, pt, pd, spec, max_batch_size=2, max_seq_len=128)
+    reqs = [Request(i, prompt=rng.randint(0, cfg.vocab_size, size=6).tolist(),
+                    max_new_tokens=5) for i in range(2)]
+    m = eng.run(reqs)
+    assert m["requests_finished"] == 2
+    assert all(len(r.output) == 5 for r in reqs)
+    assert all(0 <= t < cfg.vocab_size for r in reqs for t in r.output)
+
+
+# ---------------------------------------------------------------------------
+# Goodput cost sourcing (satellite): Drafter.step_cost vs explicit override
+# ---------------------------------------------------------------------------
+
+def test_goodput_cost_sourced_from_drafter(pair):
+    cfg, pt, pd = pair
+    spec = SpecDecodeConfig(policy="goodput", drafter="model")
+    assert spec.goodput_draft_cost is None
+    eng = ServingEngine(pt, cfg, pd, cfg, spec,
+                        ServingConfig(max_batch_size=1, max_seq_len=64))
+    want = build_drafter(spec, cfg, cfg).step_cost()
+    assert eng.spec.goodput_draft_cost == pytest.approx(want)
+    # explicit override survives resolution untouched
+    spec2 = SpecDecodeConfig(policy="goodput", goodput_draft_cost=0.42)
+    eng2 = ServingEngine(pt, cfg, pd, cfg, spec2,
+                         ServingConfig(max_batch_size=1, max_seq_len=64))
+    assert eng2.spec.goodput_draft_cost == 0.42
+
+
+def test_goodput_policy_without_engine_uses_fallback():
+    from repro.core.policies.goodput import (FALLBACK_DRAFT_COST,
+                                             resolved_draft_cost)
+    assert resolved_draft_cost(SpecDecodeConfig()) == FALLBACK_DRAFT_COST
+    assert resolved_draft_cost(
+        SpecDecodeConfig(goodput_draft_cost=0.3)) == 0.3
+
+
+# ---------------------------------------------------------------------------
+# Serving-level statistical exactness of the stochastic path (satellite)
+# ---------------------------------------------------------------------------
+
+def _tiny_cfg(vocab: int = 8) -> ModelConfig:
+    return ModelConfig(name="stat-tiny", family="dense", num_layers=2,
+                       d_model=32, num_heads=2, num_kv_heads=2, d_ff=64,
+                       vocab_size=vocab, head_dim=16)
+
+
+def _sharpened_params(cfg):
+    """Random init with the (tied) embedding scaled up: random-init tiny
+    models are near-uniform over an 8-token vocab, which would leave the
+    statistical test without teeth — the scaled LM head sharpens the
+    next-token distribution visibly away from uniform."""
+    pt = dict(init_params(model_specs(cfg), jax.random.PRNGKey(5),
+                          jnp.float32))
+    pt["embed"] = pt["embed"] * 5.0
+    return pt
+
+
+def _exact_two_token_dist(pt, cfg, prompt):
+    """Ground-truth joint P(t1, t2 | prompt) under pure target-only
+    temperature-1.0 autoregressive sampling."""
+    v = cfg.vocab_size
+    lg, _, _ = forward(pt, cfg, jnp.asarray([prompt], jnp.int32),
+                       mode="train")
+    p1 = np.asarray(jax.nn.softmax(lg[0, -1, :v]))
+    joint = np.zeros((v, v))
+    for t1 in range(v):
+        lg2, _, _ = forward(pt, cfg, jnp.asarray([prompt + [t1]], jnp.int32),
+                            mode="train")
+        p2 = np.asarray(jax.nn.softmax(lg2[0, -1, :v]))
+        joint[t1] = p1[t1] * p2
+    return joint
+
+
+def _chi2(counts: np.ndarray, probs: np.ndarray, n: int) -> float:
+    """Pearson chi-square with small expected cells pooled (Cochran)."""
+    exp = probs.reshape(-1) * n
+    obs = counts.reshape(-1)
+    big = exp >= 5.0
+    chi = float((((obs[big] - exp[big]) ** 2) / exp[big]).sum())
+    if (~big).any():
+        eo, ee = obs[~big].sum(), exp[~big].sum()
+        if ee > 0:
+            chi += float((eo - ee) ** 2 / ee)
+    df = int(big.sum()) + (1 if (~big).any() else 0) - 1
+    return chi, df
+
+
+@pytest.mark.parametrize("drafter", ["model", "ngram"])
+def test_serving_stochastic_path_statistically_exact(drafter):
+    """Temperature-1.0 ENGINE output (prefill sampling + the full
+    propose/verify/reject round) is distributed exactly like sampling
+    the target autoregressively: chi-square of the two-token joint over
+    a tiny vocab, many identical requests with distinct seeds, against
+    the analytically computed target distribution."""
+    cfg = _tiny_cfg(vocab=8)
+    pt = _sharpened_params(cfg)
+    noise = init_params(model_specs(cfg), jax.random.PRNGKey(6), jnp.float32)
+    pd = jax.tree_util.tree_map(lambda a, b: a + 0.1 * b, pt, noise)
+    # repetitive prompt: the ngram drafter proposes on most rounds
+    prompt = [1, 2, 3, 1, 2, 3, 1, 2]
+    joint = _exact_two_token_dist(pt, cfg, prompt)
+
+    n = 2400
+    spec = SpecDecodeConfig(policy="static", static_sl=3, temperature=1.0,
+                            drafter=drafter)
+    model_free = drafter != "model"
+    eng = ServingEngine(pt, cfg, None if model_free else pd,
+                        None if model_free else cfg, spec,
+                        ServingConfig(max_batch_size=32, max_seq_len=64),
+                        seed=0)
+    reqs = [Request(i, prompt=list(prompt), max_new_tokens=2)
+            for i in range(n)]
+    m = eng.run(reqs)
+    assert m["requests_finished"] == n
+    counts = np.zeros((8, 8))
+    for r in reqs:
+        assert len(r.output) == 2
+        counts[r.output[0], r.output[1]] += 1
+    chi, df = _chi2(counts, joint, n)
+    # ~5 sigma above the null mean: fails loudly for a biased sampler
+    # (any real bias scales chi linearly in n), essentially never for an
+    # exact one at this fixed seed
+    crit = df + 5.0 * np.sqrt(2.0 * df)
+    assert chi < crit, (drafter, chi, df, crit)
+    # the same counts must NOT fit a visibly wrong reference: uniform
+    chi_u, df_u = _chi2(counts, np.full((8, 8), 1.0 / 64.0), n)
+    assert chi_u > df_u + 5.0 * np.sqrt(2.0 * df_u), "test has no teeth"

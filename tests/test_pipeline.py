@@ -78,6 +78,41 @@ def test_pipelined_matches_sync_every_policy(small_pair, policy, paged):
     assert ms["tokens_emitted"] == mp["tokens_emitted"]
 
 
+@pytest.mark.parametrize("drafter", ["model", "ngram", "self"])
+@pytest.mark.parametrize("paged", [False, True], ids=["dense", "paged"])
+@pytest.mark.parametrize("policy", ["static", "dsde"])
+def test_pipelined_matches_sync_at_temperature(small_pair, policy, paged,
+                                               drafter):
+    """Identity-threaded RNG (DESIGN.md §7): at temperature 1.0 the
+    sampled token streams are ALSO byte-identical between the sync and
+    pipelined schedules — every draw is keyed by (request seed, the
+    request's own round ordinal, purpose, position), never by host
+    dispatch order, batch composition, or bucket width; stochastic
+    pipelined rounds dispatch at the policy's max bucket so a stale
+    bucket pick can never clip a proposal window.  Covers slot reuse
+    (3 requests, 2 slots) for both KV layouts and a model-free
+    drafter."""
+    cfg, pt, pd = small_pair
+    rng = np.random.RandomState(23)
+    prompts = [rng.randint(0, cfg.vocab_size, size=n).tolist()
+               for n in (7, 12, 5)]
+    model_free = drafter != "model"
+    spec = SpecDecodeConfig(policy=policy, temperature=1.0, drafter=drafter)
+    outs = {}
+    for pipelined in (False, True):
+        sv = ServingConfig(max_batch_size=2, max_seq_len=128,
+                           paged_kv=paged, kv_block_size=16,
+                           pipelined=pipelined)
+        eng = ServingEngine(pt, cfg, None if model_free else pd,
+                            None if model_free else cfg, spec, sv, seed=3)
+        reqs = [Request(i, prompt=p, max_new_tokens=10)
+                for i, p in enumerate(prompts)]
+        m = eng.run(reqs)
+        assert m["requests_finished"] == len(prompts)
+        outs[pipelined] = [r.output for r in reqs]
+    assert outs[False] == outs[True], (policy, paged, drafter)
+
+
 def test_pipelined_exact_under_forced_preemption(small_pair):
     """Pool pressure during the pipelined window: growth planned from
     stale mirrors must evict-and-requeue (never under-allocate), and
@@ -278,33 +313,40 @@ def test_serving_metrics_ttft_and_queue_wait(small_pair, pipelined):
         assert r.ttft() >= r.queue_wait()
 
 
+@pytest.mark.parametrize("drafter,programs", [("model", 4), ("ngram", 2)],
+                         ids=["model", "ngram"])
 @pytest.mark.parametrize("paged", [False, True], ids=["dense", "paged"])
 def test_batched_prefill_one_program_per_bucket(small_pair, monkeypatch,
-                                                paged):
+                                                paged, drafter, programs):
     """Requests admitted together that share a prompt bucket prefill in
-    ONE multi-row program (2 jit calls per group — target + draft), not
-    2 calls per request; distinct buckets form distinct groups."""
-    import repro.serving.engine as eng_mod
+    ONE multi-row program per model (2 jit calls per group with a model
+    drafter — target + draft — not 2 per request; distinct buckets form
+    distinct groups).  Model-free drafters skip the draft prefill
+    program entirely: 1 call per group."""
+    import repro.core.prefill as prefill_mod
     cfg, pt, pd = small_pair
     calls = []
-    name = "_prefill_paged_rows" if paged else "_prefill_rows"
-    orig = getattr(eng_mod, name)
+    name = "prefill_paged_rows" if paged else "prefill_rows"
+    orig = getattr(prefill_mod, name)
 
     def spy(*args, **kw):
         calls.append(1)
         return orig(*args, **kw)
 
-    monkeypatch.setattr(eng_mod, name, spy)
-    spec = SpecDecodeConfig(policy="static", temperature=0.0)
+    monkeypatch.setattr(prefill_mod, name, spy)
+    spec = SpecDecodeConfig(policy="static", temperature=0.0,
+                            drafter=drafter)
     sv = ServingConfig(max_batch_size=4, max_seq_len=128, paged_kv=paged,
                        kv_block_size=16)
-    eng = ServingEngine(pt, cfg, pd, cfg, spec, sv, seed=0)
+    model_free = drafter != "model"
+    eng = ServingEngine(pt, cfg, None if model_free else pd,
+                        None if model_free else cfg, spec, sv, seed=0)
     # three same-bucket prompts (<=16 tokens) + one bucket-64 prompt
     for i, n in enumerate((5, 9, 12, 40)):
         eng.submit(Request(i, prompt=list(range(1, n + 1)),
                            max_new_tokens=4))
     eng.step()
-    assert sum(calls) == 4          # 2 buckets x (target + draft)
+    assert sum(calls) == programs   # 2 buckets x models prefilled
     while eng.scheduler.has_work():
         eng.step()
 

@@ -15,6 +15,7 @@ import pytest
 from repro.configs import get_config
 from repro.core import spec_decode as sd
 from repro.core.config import ServingConfig, SpecDecodeConfig
+from repro.core.drafters import build_drafter
 from repro.core.policies import (GoodputPolicy, PolicyObservation, SpecPolicy,
                                  available_policies, build_policy, register)
 from repro.models.module import init_params
@@ -264,10 +265,11 @@ def test_round_no_recompile_at_fixed_bucket(pair, name):
     k = max(4, sd.pick_bucket(st.sl_next, spec, active))
     if not build_policy(spec).uses_draft():
         k = 0
-    st, _ = sd.spec_decode_round(pt, pd, cfg, cfg, spec, k, st, active)
+    drafter = build_drafter(spec, cfg, cfg)
+    st, _ = sd.spec_decode_round(pt, pd, cfg, drafter, spec, k, st, active)
     before = sd.spec_decode_round._cache_size()
     for _ in range(3):
-        st, _ = sd.spec_decode_round(pt, pd, cfg, cfg, spec, k, st, active)
+        st, _ = sd.spec_decode_round(pt, pd, cfg, drafter, spec, k, st, active)
     assert sd.spec_decode_round._cache_size() == before
 
 

@@ -10,12 +10,20 @@ import pytest
 from repro.configs import get_config
 from repro.core import spec_decode as sd
 from repro.core.config import SpecDecodeConfig
+from repro.core.drafters import build_drafter
 from repro.models import cache as cache_lib
 from repro.models.module import init_params
 from repro.models.transformer import forward, model_specs
 
 jax.config.update("jax_platform_name", "cpu")
 KEY = jax.random.PRNGKey(0)
+
+
+def _round(pt, pd, cfg, spec, k, st, active):
+    """Round call with the drafter resolved from the config (the
+    historical (pt, pd, cfg_t, cfg_d, ...) shape of these tests)."""
+    return sd.spec_decode_round(pt, pd, cfg, build_drafter(spec, cfg, cfg),
+                                spec, k, st, active)
 
 
 def _ready_state(cfg, pt, pd, batch, prompt_len, spec):
@@ -43,7 +51,7 @@ def test_round_respects_inactive_slots(pair):
     spec = SpecDecodeConfig(policy="static", static_sl=3, temperature=0.0)
     st = _ready_state(cfg, pt, pd, 3, 8, spec)
     active = jnp.array([True, False, True])
-    st2, out = sd.spec_decode_round(pt, pd, cfg, cfg, spec, 3, st, active)
+    st2, out = _round(pt, pd, cfg, spec, 3, st, active)
     assert int(out.num_emitted[1]) == 0
     assert int(out.num_proposed[1]) == 0
     # inactive slot's caches/pending untouched
@@ -60,7 +68,7 @@ def test_identical_draft_full_acceptance(pair):
     active = jnp.ones((2,), bool)
     for _ in range(3):
         k = sd.pick_bucket(st.sl_next, spec, active)
-        st, out = sd.spec_decode_round(pt, pt, cfg, cfg, spec, k, st, active)
+        st, out = _round(pt, pt, cfg, spec, k, st, active)
         np.testing.assert_array_equal(np.asarray(out.num_accepted),
                                       np.asarray(out.num_proposed))
 
@@ -71,7 +79,7 @@ def test_emitted_tokens_in_vocab_or_pad(pair):
     st = _ready_state(cfg, pt, pd, 2, 8, spec)
     active = jnp.ones((2,), bool)
     k = sd.pick_bucket(st.sl_next, spec, active)
-    st, out = sd.spec_decode_round(pt, pd, cfg, cfg, spec, k, st, active)
+    st, out = _round(pt, pd, cfg, spec, k, st, active)
     em = np.asarray(out.emitted)
     ne = np.asarray(out.num_emitted)
     for b in range(2):
