@@ -151,8 +151,11 @@ def serve(cfg_t, cfg_d, pt, pd, prompts: List[List[int]], *,
           max_new_per_req: Optional[List[int]] = None,
           paged: bool = False, kv_block_size: int = 16,
           num_kv_blocks: Optional[int] = None,
-          pipelined: bool = False, drafter: str = "model"
+          pipelined: bool = False, drafter: str = "model",
+          mesh: Optional[str] = None
           ) -> Tuple[Dict, List[Request], ServingEngine]:
+    """``mesh``: optional ``DxM`` string ("1x4") — serve under a
+    (data, model) mesh (DESIGN.md §5; needs forced host devices)."""
     extra = {}
     if goodput_draft_cost is not None:
         # the goodput controller's cost model should use the same pair
@@ -169,6 +172,10 @@ def serve(cfg_t, cfg_d, pt, pd, prompts: List[List[int]], *,
                             sf_normalize=True, **extra)
     if not build_drafter(spec, cfg_t, cfg_d).uses_draft_model():
         pd, cfg_d = None, None   # model-free proposer: no draft params
+    mesh_obj = None
+    if mesh is not None:
+        from repro.launch.mesh import serving_mesh
+        mesh_obj = serving_mesh(mesh)
     eng = ServingEngine(pt, cfg_t, pd, cfg_d, spec,
                         ServingConfig(max_batch_size=batch,
                                       max_seq_len=max_seq_len,
@@ -176,7 +183,7 @@ def serve(cfg_t, cfg_d, pt, pd, prompts: List[List[int]], *,
                                       kv_block_size=kv_block_size,
                                       num_kv_blocks=num_kv_blocks,
                                       pipelined=pipelined),
-                        seed=seed)
+                        seed=seed, mesh=mesh_obj)
     reqs = [Request(i, prompt=p,
                     max_new_tokens=(max_new_per_req[i]
                                     if max_new_per_req is not None

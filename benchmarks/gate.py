@@ -1,0 +1,210 @@
+"""Perf-trajectory gate: consolidate the CI smoke-benchmark JSONs into one
+``BENCH_pr.json`` and fail the fast job when a metric regresses past its
+tolerance against the committed ``benchmarks/baseline.json``.
+
+Why a gate and not just artifacts: the fast job has uploaded the table6 /
+table7 smoke JSONs since PR 3, but nothing ever *read* them — a PR could
+halve block efficiency or double round counts and CI would stay green.
+The gate turns the trajectory into a contract:
+
+* ``collect`` flattens the smoke JSONs into a list of entries
+  ``{bench, metric, value, tolerance, better, mode}`` —
+
+  - ``better``: ``lower`` | ``higher`` | ``exact`` (regression direction);
+  - ``tolerance``: allowed relative drift in the bad direction;
+  - ``mode``: ``fail`` (deterministic metrics: round counts, block
+    efficiency, acceptance, emitted tokens — the greedy smoke lane is
+    seeded, so these are bit-stable across hosts) or ``warn`` — the
+    documented 2-core escape hatch for wall-clock-derived numbers
+    (``table6/WARN`` in benchmarks/table6_pipeline_overlap.py: host
+    python and XLA share saturated cores on CI runners, so overlap wins
+    are noise there; the gate reports but never fails on them).
+
+* ``compare`` diffs a PR's ``BENCH_pr.json`` against the committed
+  baseline, prints a before/after markdown table (appended to
+  ``$GITHUB_STEP_SUMMARY`` when ``--summary`` is given), and exits
+  non-zero on any hard regression.  A metric present in the baseline
+  but missing from the PR run is a hard failure (a silently dropped
+  benchmark is a regression); metrics new in the PR are listed so the
+  author remembers to re-seed the baseline.
+
+Re-seeding after an intentional change::
+
+    PYTHONPATH=src python -m benchmarks.table6_pipeline_overlap --smoke \
+        --json table6.json
+    PYTHONPATH=src python -m benchmarks.table7_drafter_matrix --smoke \
+        --json table7.json
+    PYTHONPATH=src python -m benchmarks.gate collect --table6 table6.json \
+        --table7 table7.json --out benchmarks/baseline.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List, Optional
+
+EPS = 1e-12
+
+
+def _entry(bench: str, metric: str, value, tolerance: float, better: str,
+           mode: str = "fail") -> Dict:
+    return {"bench": bench, "metric": metric, "value": float(value),
+            "tolerance": float(tolerance), "better": better, "mode": mode}
+
+
+def collect_table6(t6: Dict) -> List[Dict]:
+    out = []
+    for label in ("sync", "pipelined"):
+        m = t6[label]
+        # deterministic under the seeded greedy smoke lane
+        out.append(_entry("table6", f"{label}.rounds", m["rounds"],
+                          0.10, "lower"))
+        out.append(_entry("table6", f"{label}.tokens", m["tokens"],
+                          0.0, "exact"))
+        # wall-derived: the 2-core WARN escape hatch — report, never fail
+        out.append(_entry("table6", f"{label}.host_blocked_mean_s",
+                          m["host_blocked_mean_s"], 0.50, "lower",
+                          mode="warn"))
+    out.append(_entry("table6", "streams_identical",
+                      1.0 if t6.get("streams_identical") else 0.0,
+                      0.0, "exact"))
+    out.append(_entry("table6", "speedup", t6["speedup"], 0.25, "higher",
+                      mode="warn"))
+    return out
+
+
+def collect_table7(t7: Dict) -> List[Dict]:
+    out = []
+    for cell, m in sorted(t7.items()):
+        out.append(_entry("table7", f"{cell}.rounds", m["rounds"],
+                          0.10, "lower"))
+        out.append(_entry("table7", f"{cell}.latency_units",
+                          m["latency_units"], 0.10, "lower"))
+        out.append(_entry("table7", f"{cell}.block_efficiency",
+                          m["block_efficiency"], 0.10, "higher"))
+        # a zero baseline can never fail a higher-is-better check (the
+        # relative delta is >= 0 for any PR value), so emit acceptance
+        # only when nonzero — then a PR whose acceptance COLLAPSES to 0
+        # omits the entry and trips the hard missing-metric failure,
+        # instead of sailing past an unfailable 0-vs-0 comparison
+        if m["mean_acceptance"] > 0:
+            out.append(_entry("table7", f"{cell}.mean_acceptance",
+                              m["mean_acceptance"], 0.15, "higher"))
+        out.append(_entry("table7", f"{cell}.requests_finished",
+                          m["requests_finished"], 0.0, "exact"))
+        # capacity invariant: model-free drafters double the paged pool
+        out.append(_entry("table7", f"{cell}.kv_pool_blocks",
+                          m["kv_pool_blocks"], 0.0, "exact"))
+    return out
+
+
+def cmd_collect(args) -> int:
+    entries: List[Dict] = []
+    if args.table6:
+        with open(args.table6) as f:
+            entries += collect_table6(json.load(f))
+    if args.table7:
+        with open(args.table7) as f:
+            entries += collect_table7(json.load(f))
+    with open(args.out, "w") as f:
+        json.dump(entries, f, indent=2, sort_keys=True)
+    print(f"[gate] wrote {len(entries)} metrics -> {args.out}")
+    return 0
+
+
+def _verdict(base: Dict, pr_value: float) -> str:
+    """'ok' | 'warn' | 'fail' for one metric against its baseline entry."""
+    delta = (pr_value - base["value"]) / max(abs(base["value"]), EPS)
+    better, tol = base["better"], base["tolerance"]
+    bad = ((better == "lower" and delta > tol)
+           or (better == "higher" and delta < -tol)
+           or (better == "exact" and abs(delta) > tol + EPS))
+    if not bad:
+        return "ok"
+    return "warn" if base.get("mode") == "warn" else "fail"
+
+
+def cmd_compare(args) -> int:
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.pr) as f:
+        pr = json.load(f)
+    pr_by_key = {(e["bench"], e["metric"]): e for e in pr}
+    rows: List[str] = ["| bench | metric | baseline | PR | Δ | verdict |",
+                       "|---|---|---:|---:|---:|---|"]
+    failures: List[str] = []
+    warns: List[str] = []
+    seen = set()
+    for base in baseline:
+        key = (base["bench"], base["metric"])
+        seen.add(key)
+        e = pr_by_key.get(key)
+        if e is None:
+            failures.append(f"{key[0]}/{key[1]}: missing from PR run")
+            rows.append(f"| {key[0]} | {key[1]} | {base['value']:.4g} | "
+                        f"— | — | MISSING |")
+            continue
+        delta = ((e["value"] - base["value"])
+                 / max(abs(base["value"]), EPS))
+        v = _verdict(base, e["value"])
+        if v == "fail":
+            failures.append(
+                f"{key[0]}/{key[1]}: {base['value']:.4g} -> "
+                f"{e['value']:.4g} ({delta:+.1%}, tol "
+                f"{base['tolerance']:.0%}, better={base['better']})")
+        elif v == "warn":
+            warns.append(f"{key[0]}/{key[1]}: {delta:+.1%} "
+                         "(warn-only: wall-clock noise escape hatch)")
+        mark = {"ok": "✓", "warn": "WARN", "fail": "**FAIL**"}[v]
+        rows.append(f"| {key[0]} | {key[1]} | {base['value']:.4g} | "
+                    f"{e['value']:.4g} | {delta:+.1%} | {mark} |")
+    new = [k for k in pr_by_key if k not in seen]
+    table = "\n".join(rows)
+    report = ["## Bench gate: PR vs committed baseline", "", table, ""]
+    if new:
+        report.append(f"**{len(new)} new metric(s)** without a baseline "
+                      "(re-seed benchmarks/baseline.json): "
+                      + ", ".join(f"{b}/{m}" for b, m in sorted(new)))
+    if warns:
+        report.append("### Warnings (non-fatal)")
+        report += [f"- {w}" for w in warns]
+    if failures:
+        report.append("### Regressions past tolerance")
+        report += [f"- {f}" for f in failures]
+    text = "\n".join(report)
+    print(text)
+    if args.summary:
+        with open(args.summary, "a") as f:
+            f.write(text + "\n")
+    if failures:
+        print(f"\n[gate] FAIL: {len(failures)} metric(s) regressed past "
+              "tolerance", file=sys.stderr)
+        return 1
+    print(f"\n[gate] OK: {len(baseline)} metrics within tolerance "
+          f"({len(warns)} warn-only)")
+    return 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    c = sub.add_parser("collect",
+                       help="flatten smoke JSONs into BENCH_pr.json")
+    c.add_argument("--table6", default=None)
+    c.add_argument("--table7", default=None)
+    c.add_argument("--out", required=True)
+    c.set_defaults(fn=cmd_collect)
+    d = sub.add_parser("compare", help="diff PR metrics vs the baseline")
+    d.add_argument("--baseline", required=True)
+    d.add_argument("--pr", required=True)
+    d.add_argument("--summary", default=None,
+                   help="markdown file to append the table to "
+                        "(e.g. $GITHUB_STEP_SUMMARY)")
+    d.set_defaults(fn=cmd_compare)
+    args = ap.parse_args()
+    sys.exit(args.fn(args))
+
+
+if __name__ == "__main__":
+    main()

@@ -41,6 +41,13 @@ def main():
                     help="proposer for every policy row (DESIGN.md §9); "
                          "model-free drafters serve with ZERO draft "
                          "params and zero draft KV blocks")
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="serve under a (data, model) mesh, e.g. 1x4 or "
+                         "2x2 (DESIGN.md §5).  Needs DxM visible devices "
+                         "— on CPU export XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N first "
+                         "(the CI multidevice lane does).  Greedy streams "
+                         "are byte-identical to the single-device engine.")
     args = ap.parse_args()
 
     label = "untrained (smoke)" if args.smoke else "trained (cached)"
@@ -48,6 +55,8 @@ def main():
     cfg_t, cfg_d, pt, pd, ratio = build_pair(args.smoke)
     print(f"   draft/target FLOP ratio: {ratio:.3f}")
     print(f"   drafter: {args.drafter}")
+    if args.mesh:
+        print(f"   mesh: {args.mesh} (data x model)")
 
     # heterogeneous workload: code-like + dialogue-like requests interleaved
     per = 2 if args.smoke else 4
@@ -71,7 +80,8 @@ def main():
     for policy in ("autoregressive", "static", "adaedl", "dsde", "goodput"):
         m, reqs, eng = common.serve(cfg_t, cfg_d, pt, pd, prompts,
                                     policy=policy, max_new=max_new, batch=8,
-                                    drafter=args.drafter, **cost_kw)
+                                    drafter=args.drafter, mesh=args.mesh,
+                                    **cost_kw)
         lu = common.latency_units(
             m, ratio if args.drafter == "model" else m["draft_step_cost"])
         if policy == "autoregressive":   # the speedup baseline row
@@ -85,7 +95,7 @@ def main():
     for pipelined in (False, True):
         m, reqs, eng = common.serve(cfg_t, cfg_d, pt, pd, prompts,
                                     policy="dsde", max_new=max_new, batch=8,
-                                    drafter=args.drafter,
+                                    drafter=args.drafter, mesh=args.mesh,
                                     pipelined=pipelined)
         streams[pipelined] = [r.output for r in reqs]
         mode = "pipelined" if pipelined else "sync"
@@ -99,7 +109,8 @@ def main():
 
     print("\n== DSDE per-round dynamics (first 12 rounds) ==")
     _, _, eng = common.serve(cfg_t, cfg_d, pt, pd, prompts, policy="dsde",
-                             drafter=args.drafter, max_new=max_new, batch=8)
+                             drafter=args.drafter, mesh=args.mesh,
+                             max_new=max_new, batch=8)
     for i, r in enumerate(eng.round_log[:12]):
         print(f"  round {i:2d}: K={r['k']} emitted={r['emitted']:.0f} "
               f"accepted={r['accepted']:.0f}/{r['proposed']:.0f}")

@@ -122,13 +122,17 @@ class Drafter:
 
     def prefill(self, params_d: PyTree, cache: PyTree, idx: jax.Array,
                 tokens: jax.Array, prompt_lens: jax.Array, *,
-                max_len: int, table_rows: Optional[jax.Array] = None
-                ) -> PyTree:
+                max_len: int, table_rows: Optional[jax.Array] = None,
+                plan=None) -> PyTree:
         """Absorb a same-bucket admission group: ``tokens [R, bucket]``
         right-padded prompts landing in batch slots ``idx [R]``.  Must
         fully re-initialize those rows (they may hold a previous
         occupant's state).  ``table_rows [R, max_blocks]`` is set iff
-        the serving cache is paged AND the drafter mirrors it."""
+        the serving cache is paged AND the drafter mirrors it.
+        ``plan`` is the engine's static serving-mesh plan
+        (:class:`repro.launch.sharding.ServeMeshPlan`, or None off-mesh);
+        drafters that run jitted prefill programs forward it so their
+        mirror rows inherit the target's KV layouts (DESIGN.md §5)."""
         return cache
 
     def propose(self, params_t: PyTree, params_d: PyTree,

@@ -118,17 +118,20 @@ class ModelDrafter(Drafter):
 
     def prefill(self, params_d: PyTree, cache: PyTree, idx: jax.Array,
                 tokens: jax.Array, prompt_lens: jax.Array, *,
-                max_len: int, table_rows: Optional[jax.Array] = None
-                ) -> PyTree:
+                max_len: int, table_rows: Optional[jax.Array] = None,
+                plan=None) -> PyTree:
         # module-attribute calls so the engine's batched-prefill program
-        # accounting (and its tests) see one program per model per bucket
+        # accounting (and its tests) see one program per model per bucket;
+        # the mesh plan rides through so mirror rows inherit the target's
+        # KV layouts (DESIGN.md §5)
         if table_rows is not None:
             rows, _ = prefill_lib.prefill_paged_rows(
                 params_d, self.cfg_d, cache["k"], cache["v"],
-                cache["kv_pos"], table_rows, tokens, prompt_lens)
+                cache["kv_pos"], table_rows, tokens, prompt_lens,
+                plan=plan)
             return prefill_lib.scatter_paged_rows(cache, rows, idx)
         rows, _ = prefill_lib.prefill_rows(params_d, self.cfg_d, tokens,
-                                           prompt_lens, max_len)
+                                           prompt_lens, max_len, plan=plan)
         return prefill_lib.set_slots(cache, rows, idx)
 
     def propose(self, params_t: PyTree, params_d: PyTree,

@@ -55,8 +55,11 @@ class NGramDrafter(Drafter):
 
     def prefill(self, params_d: PyTree, cache: PyTree, idx: jax.Array,
                 tokens: jax.Array, prompt_lens: jax.Array, *,
-                max_len: int, table_rows: Optional[jax.Array] = None
-                ) -> PyTree:
+                max_len: int, table_rows: Optional[jax.Array] = None,
+                plan=None) -> PyTree:
+        # plan unused: the history buffer's rows are rewritten with eager
+        # scatters, and the round jit's in_shardings keep the buffer
+        # data-sharded (DESIGN.md §5)
         r = tokens.shape[0]
         rows = jnp.zeros((r, max_len), jnp.int32)
         rows = rows.at[:, :tokens.shape[1]].set(tokens.astype(jnp.int32))

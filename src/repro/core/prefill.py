@@ -59,25 +59,33 @@ def prefill_forward(params: PyTree, cfg: ModelConfig, cache: PyTree,
     return cache, last
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "max_len"))
+@functools.partial(jax.jit, static_argnames=("cfg", "max_len", "plan"))
 def prefill_rows(params: PyTree, cfg: ModelConfig, tokens: jax.Array,
-                 prompt_lens: jax.Array, max_len: int
-                 ) -> Tuple[PyTree, jax.Array]:
+                 prompt_lens: jax.Array, max_len: int,
+                 plan=None) -> Tuple[PyTree, jax.Array]:
     """Prefill a same-bucket group of R requests into fresh cache rows in
     one program.  ``tokens [R, bucket]`` is right-padded; the (R, bucket)
-    pair keys the compiled-program cache.  Returns (cache rows [*, R, *],
-    last_logits [R, V])."""
+    pair keys the compiled-program cache.  ``plan`` is an optional
+    static :class:`repro.launch.sharding.ServeMeshPlan`: under a serving
+    mesh the fresh rows are sharding-constrained to the §5 layouts at
+    the program boundary (KV heads over *model*, rows over *data*), so
+    the engine's scatter never round-trips them through replicated
+    layouts.  Returns (cache rows [*, R, *], last_logits [R, V])."""
     cache = cache_lib.cache_struct(cfg, tokens.shape[0], max_len,
                                    jnp.float32)
-    return prefill_forward(params, cfg, cache, tokens, prompt_lens)
+    cache, last = prefill_forward(params, cfg, cache, tokens, prompt_lens)
+    if plan is not None:
+        cache = plan.cache_constraints(cache)
+        last = jax.lax.with_sharding_constraint(last, plan.replicated())
+    return cache, last
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",),
+@functools.partial(jax.jit, static_argnames=("cfg", "plan"),
                    donate_argnames=("pool_k", "pool_v", "kv_pos"))
 def prefill_paged_rows(params: PyTree, cfg: ModelConfig, pool_k: jax.Array,
                        pool_v: jax.Array, kv_pos: jax.Array,
                        table_rows: jax.Array, tokens: jax.Array,
-                       prompt_lens: jax.Array
+                       prompt_lens: jax.Array, plan=None
                        ) -> Tuple[PyTree, jax.Array]:
     """Prefill a same-bucket group of R requests *straight into their
     allocated pool blocks* as one multi-row program: the batch-R cache
@@ -87,10 +95,16 @@ def prefill_paged_rows(params: PyTree, cfg: ModelConfig, pool_k: jax.Array,
     immediately replaces its references with the returned ones, so
     admission never copies (or transiently doubles) the whole pool.
     Returns (cache view with updated pools + fresh per-row state,
-    last_logits [R, V])."""
+    last_logits [R, V]).  ``plan`` (static) pins the returned pools /
+    rows to the serving mesh's §5 layouts, exactly as in
+    :func:`prefill_rows`."""
     cache = cache_lib.paged_prefill_view(cfg, pool_k, pool_v, kv_pos,
                                          table_rows)
-    return prefill_forward(params, cfg, cache, tokens, prompt_lens)
+    cache, last = prefill_forward(params, cfg, cache, tokens, prompt_lens)
+    if plan is not None:
+        cache = plan.cache_constraints(cache)
+        last = jax.lax.with_sharding_constraint(last, plan.replicated())
+    return cache, last
 
 
 def scatter_paged_rows(big: PyTree, rows: PyTree, idx: jax.Array) -> PyTree:

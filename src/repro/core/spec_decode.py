@@ -145,13 +145,11 @@ def _match_vocab(dl: jax.Array, v: int) -> jax.Array:
     return dl[..., :v]
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("cfg_t", "drafter", "spec", "k"))
-def spec_decode_round(params_t: PyTree, params_d: PyTree,
-                      cfg_t: ModelConfig, drafter: Drafter,
-                      spec: SpecDecodeConfig, k: int,
-                      state: RoundState, active: jax.Array
-                      ) -> Tuple[RoundState, RoundOutput]:
+def spec_decode_round_impl(params_t: PyTree, params_d: PyTree,
+                           cfg_t: ModelConfig, drafter: Drafter,
+                           spec: SpecDecodeConfig, k: int,
+                           state: RoundState, active: jax.Array
+                           ) -> Tuple[RoundState, RoundOutput]:
     """One full speculative round with draft bucket size ``k``.
 
     ``drafter`` is the frozen proposer (static — dispatch traces away);
@@ -278,6 +276,16 @@ def spec_decode_round(params_t: PyTree, params_d: PyTree,
         live=live,
         telemetry=telemetry)
     return new_state, out
+
+
+# The default single-device entry point.  The un-jitted body stays
+# importable (``spec_decode_round_impl``) so the serving engine's mesh
+# path can wrap it in its OWN jit with explicit ``in_shardings`` /
+# ``out_shardings`` per draft bucket (DESIGN.md §5) — same trace, pinned
+# layouts, no double-jit.
+spec_decode_round = jax.jit(
+    spec_decode_round_impl,
+    static_argnames=("cfg_t", "drafter", "spec", "k"))
 
 
 def init_round_state(cfg_t: ModelConfig, cfg_d: Optional[ModelConfig],

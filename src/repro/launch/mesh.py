@@ -43,3 +43,25 @@ def make_mesh_from_shape(shape: Tuple[int, ...],
 
 def single_device_mesh(axes: Tuple[str, ...] = ("data", "model")) -> Mesh:
     return make_mesh_from_shape((1,) * len(axes), axes)
+
+
+def serving_mesh(spec: str) -> Mesh:
+    """Parse a ``DxM`` serving-mesh flag ("1x4", "2x2") into a
+    (data, model) mesh for :class:`repro.serving.engine.ServingEngine`.
+    Needs D*M visible devices — on CPU hosts that means
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` exported
+    BEFORE the first jax import (the CI multidevice lane does this)."""
+    try:
+        d, m = (int(x) for x in spec.lower().split("x"))
+    except ValueError:
+        raise ValueError(
+            f"mesh spec must be DxM (e.g. 1x4, 2x2), got {spec!r}"
+        ) from None
+    n = d * m
+    if len(jax.devices()) < n:
+        raise RuntimeError(
+            f"mesh {spec} needs {n} devices but jax sees "
+            f"{len(jax.devices())}; export XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={n} before any jax "
+            "import")
+    return make_mesh_from_shape((d, m), ("data", "model"))

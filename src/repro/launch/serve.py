@@ -43,6 +43,13 @@ def main() -> None:
                     help="plan/dispatch/collect pipelined schedule: "
                          "reconcile the host one round behind the device "
                          "(DESIGN.md §7); byte-identical greedy streams")
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="demo only: serve under a (data, model) mesh, "
+                         "e.g. 1x4 or 2x2 (DESIGN.md §5).  Needs DxM "
+                         "visible devices; on CPU export XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N before "
+                         "running.  Greedy streams stay byte-identical to "
+                         "the single-device engine.")
     args = ap.parse_args()
 
     if args.demo:
@@ -76,7 +83,11 @@ def main() -> None:
                 max_batch_size=4, max_seq_len=256, paged_kv=True,
                 kv_block_size=16, pipelined=args.pipelined,
                 num_kv_blocks=4 * (256 // 16) // 2)   # 50% of dense bytes
-        eng = ServingEngine(pt, cfg, pd, cfg_d, spec, serving)
+        mesh = None
+        if args.mesh:
+            from repro.launch.mesh import serving_mesh
+            mesh = serving_mesh(args.mesh)
+        eng = ServingEngine(pt, cfg, pd, cfg_d, spec, serving, mesh=mesh)
         rng = np.random.RandomState(0)
         reqs = [Request(i, prompt=rng.randint(
             0, cfg.vocab_size, size=rng.randint(6, 20)).tolist(),

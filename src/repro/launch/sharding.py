@@ -13,11 +13,18 @@ The baseline layouts (DESIGN.md §5):
 * long decode (batch=1) — batch unshardable; state/ring caches replicated
   over data; heads over model.  (Sequence-parallel cache is a hillclimb
   variant, see EXPERIMENTS.md §Perf.)
+* serve    — the ServingEngine's live data plane (:func:`serve_rules`):
+  params TP over *model*, batch slots over *data*, KV heads over *model*
+  under the uneven-head guard, block tables / control vectors
+  replicated.  Consumed by the engine's mesh path (DESIGN.md §5), not
+  just the dry-run.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Any, Optional, Tuple
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
@@ -142,6 +149,138 @@ def attn_head_sharding(mesh: Mesh, rules: ShardingConfig):
     return (NamedSharding(
         mesh, P(tuple(rules.batch) if rules.batch else None, None,
                 rules.heads, None)), sizes[rules.heads])
+
+
+# ---------------------------------------------------------------------------
+# Serving mesh (DESIGN.md §5): the ServingEngine's live data plane
+# ---------------------------------------------------------------------------
+
+def serve_rules(mesh: Mesh, global_batch: int) -> ShardingConfig:
+    """The ``serve`` rule set: tensor-parallel params over *model*
+    (replicated over data), batch slots over *data* (when the batch
+    divides), KV heads over *model* under :func:`kv_head_axis`'s uneven
+    guard, and ``cache_seq`` unsharded — the paged pool's block axis
+    must stay whole because block tables address ANY pool block."""
+    return ShardingConfig(
+        batch=_batch_axes(mesh, global_batch),
+        heads="model", mlp="model", vocab="model",
+        embed=None, cache_seq=None, experts=None, seq=None)
+
+
+def _axes_size(mesh: Mesh, names) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    names = names if isinstance(names, tuple) else (names,)
+    return int(np.prod([sizes[n] for n in names]))
+
+
+def kv_head_axis(n_kv_heads: int, mesh: Mesh,
+                 rules: ShardingConfig) -> Optional[str]:
+    """Uneven-KV-head guard: GQA miniatures carry 1–2 (padded) KV heads,
+    which rarely divide the model axis, and jit ``in_shardings`` demand
+    even tiling — so such caches REPLICATE their head dim (vLLM's
+    KV-head replication) instead of sharding it."""
+    if rules.heads is None or rules.heads not in mesh.axis_names:
+        return None
+    return rules.heads if n_kv_heads % _axes_size(mesh, rules.heads) == 0 \
+        else None
+
+
+def serve_cache_shardings(cache: PyTree, mesh: Mesh,
+                          rules: ShardingConfig) -> PyTree:
+    """NamedSharding per leaf of a *serving* cache pytree — dense rows,
+    paged pools, per-row prefill groups, or a drafter's token buffer,
+    keyed by leaf name + shape.  Layout contract (DESIGN.md §5):
+
+    * KV buffers: head dim over *model* (uneven counts replicate);
+      dense rows additionally shard batch over *data*; paged POOLS keep
+      the block axis whole — any sequence's table may address any
+      block, so sharding blocks over data would turn every gather into
+      cross-device traffic.
+    * recurrent rows (ssd/lru/conv) and the ngram token history: batch
+      over *data*.
+    * every int32 control leaf (length, kv_pos maps, block tables,
+      enc_valid): replicated — the host rewrites those rows piecemeal
+      each round and every shard needs the full table to address the
+      shared pool.
+    """
+    paged = isinstance(cache, dict) and "block_table" in cache
+    data = tuple(rules.batch) if rules.batch else None
+
+    def bp(dim: int):
+        if data is None or dim % _axes_size(mesh, data) != 0:
+            return None
+        return data
+
+    def canon(*parts) -> P:
+        # canonical form (trailing Nones trimmed): jit signatures compare
+        # PartitionSpecs structurally, so P() and P(None, ...) must never
+        # alternate for the same leaf across rounds
+        parts = list(parts)
+        while parts and parts[-1] is None:
+            parts.pop()
+        return P(*parts)
+
+    def one(name: str, leaf) -> NamedSharding:
+        s = leaf.shape
+        if name in ("k", "v", "cross_k", "cross_v"):
+            kvp = kv_head_axis(s[3], mesh, rules)
+            if paged:            # pool [L, n_blocks, bs, KV, D]
+                return NamedSharding(mesh, canon(None, None, None, kvp))
+            return NamedSharding(mesh, canon(None, bp(s[1]), None, kvp))
+        if name in ("ssd", "lru", "conv"):       # [L, B, ...] per-slot rows
+            return NamedSharding(mesh, canon(None, bp(s[1])))
+        if name == "tokens":                     # ngram history [B, H]
+            return NamedSharding(mesh, canon(bp(s[0])))
+        return NamedSharding(mesh, P())
+    return {k: one(k, v) for k, v in cache.items()}
+
+
+def round_state_shardings(state: PyTree, mesh: Mesh,
+                          rules: ShardingConfig) -> PyTree:
+    """RoundState-shaped pytree of NamedShardings — the serving round's
+    jit ``in_shardings``/``out_shardings``.  Caches go through
+    :func:`serve_cache_shardings`; every [B] control leaf (pending /
+    sl_next / seed / round_idx / done / tokens_budget / eos_id), the
+    base key, and the policy state replicate: they are tiny, the host
+    rewrites them per admission, and replication keeps the bucket pick
+    and the engine's eager per-slot updates free of cross-device
+    layout churn."""
+    rep = NamedSharding(mesh, P())
+
+    def cache_sh(tree):
+        if isinstance(tree, dict):
+            return serve_cache_shardings(tree, mesh, rules)
+        return jax.tree_util.tree_map(lambda _: rep, tree)
+
+    return state._replace(
+        target_cache=cache_sh(state.target_cache),
+        draft_cache=cache_sh(state.draft_cache),
+        policy_state=jax.tree_util.tree_map(lambda _: rep,
+                                            state.policy_state),
+        pending=rep, sl_next=rep, key=rep, seed=rep, round_idx=rep,
+        done=rep, tokens_budget=rep, eos_id=rep)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeMeshPlan:
+    """Hashable (mesh, rules) bundle the engine threads through the
+    jitted serving entry points as a STATIC argument.  Prefill programs
+    call :meth:`cache_constraints` on their fresh cache rows / pools so
+    GSPMD pins the §5 layouts at the program boundary instead of
+    round-tripping freshly written KV through replicated layouts.
+
+    (Both fields are hashable — ``Mesh`` implements ``__hash__``,
+    ``ShardingConfig`` is a frozen dataclass — so equal plans hit the
+    same compiled program.)"""
+    mesh: Mesh
+    rules: ShardingConfig
+
+    def replicated(self) -> NamedSharding:
+        return NamedSharding(self.mesh, P())
+
+    def cache_constraints(self, cache: PyTree) -> PyTree:
+        return jax.lax.with_sharding_constraint(
+            cache, serve_cache_shardings(cache, self.mesh, self.rules))
 
 
 def moe_shardings(mesh: Mesh, rules: ShardingConfig):

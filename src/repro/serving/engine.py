@@ -49,10 +49,18 @@ from repro.core.drafters import build_drafter
 from repro.core.policies import build_policy
 from repro.core.sampling import sample_token
 from repro.models import cache as cache_lib
+from repro.models.transformer import model_specs
 from repro.serving.request import Request, RequestState
 from repro.serving.scheduler import LookaheadScheduler
 
 PyTree = Any
+
+# Mesh-path round programs, shared ACROSS engine instances: keyed by the
+# exact trace identity (model/drafter/spec/bucket) plus the serving-mesh
+# plan and the declared state sharding tree (NamedShardings are hashable),
+# so e.g. the sync and pipelined engines of one benchmark reuse the same
+# compiled rounds instead of re-tracing per engine.
+_MESH_ROUND_JITS: Dict[Any, Any] = {}
 
 
 def _bucket(n: int, minimum: int = 16, cap: Optional[int] = None) -> int:
@@ -93,7 +101,14 @@ class ServingEngine:
                  params_draft: Optional[PyTree],
                  cfg_draft: Optional[ModelConfig],
                  spec: SpecDecodeConfig, serving: ServingConfig,
-                 seed: int = 0):
+                 seed: int = 0, mesh: Optional[Any] = None):
+        """``mesh``: an optional ``jax.sharding.Mesh`` with ``data`` /
+        ``model`` axes.  None (the default) is the single-device engine,
+        bit-for-bit unchanged.  With a mesh, params and round state are
+        placed under the §5 ``serve`` rule set and every round runs
+        through a jit with explicit in/out shardings — greedy token
+        streams stay byte-identical to the single-device engine
+        (tests/test_serving_mesh.py)."""
         self.pt, self.cfg_t = params_target, cfg_target
         self.pd, self.cfg_d = params_draft, cfg_draft
         # the drafter (DESIGN.md §9) — the proposer half of every round.
@@ -137,6 +152,27 @@ class ServingEngine:
         self.state = sd.init_round_state(
             cfg_target, cfg_draft, spec, b, serving.max_seq_len,
             self.key, paged=paged_arg, drafter=drafter)
+        # --- serving mesh (DESIGN.md §5): place params + state, build the
+        # per-bucket round jits with explicit in/out shardings ------------
+        self.mesh = mesh
+        self._plan = None
+        self._mesh_round_fns: Dict[int, Any] = {}
+        if mesh is not None:
+            from repro.launch import sharding as shd
+            rules = shd.serve_rules(mesh, b)
+            self._plan = shd.ServeMeshPlan(mesh=mesh, rules=rules)
+            self._pt_sh = shd.param_shardings(model_specs(cfg_target),
+                                              mesh, rules)
+            self.pt = jax.device_put(self.pt, self._pt_sh)
+            if self.pd is not None:
+                self._pd_sh = shd.param_shardings(model_specs(cfg_draft),
+                                                  mesh, rules)
+                self.pd = jax.device_put(self.pd, self._pd_sh)
+            else:       # model-free drafter: no draft params to place
+                self._pd_sh = shd.replicated(mesh)
+            self._state_sh = shd.round_state_shardings(self.state, mesh,
+                                                       rules)
+            self.state = jax.device_put(self.state, self._state_sh)
         # host-side mirror of state.sl_next, refreshed once per collect
         # while the round's other outputs are already being transferred —
         # the bucket choice never triggers its own device->host sync.
@@ -173,6 +209,43 @@ class ServingEngine:
     # ------------------------------------------------------------- lifecycle
     def submit(self, req: Request) -> None:
         self.scheduler.submit(req)
+
+    # ------------------------------------------------------------ the round
+    def _round_fn(self, k: int):
+        """The jitted round for draft bucket ``k`` as a ``(state, active)
+        -> (state, out)`` callable.  Off-mesh: the module-level
+        ``sd.spec_decode_round``, unchanged.  On a mesh: a per-bucket jit
+        over the same traced body with explicit ``in_shardings`` /
+        ``out_shardings`` — inputs are resharded back to the §5 layouts
+        if the host's eager per-slot updates drifted them, outputs are
+        pinned to those layouts, so consecutive rounds at a fixed bucket
+        reuse ONE program whatever the host did in between (the
+        no-recompile guard in tests/test_serving_mesh.py) and GSPMD
+        never round-trips the caches through replicated layouts."""
+        if self.mesh is None:
+            return lambda state, active: sd.spec_decode_round(
+                self.pt, self.pd, self.cfg_t, self.drafter, self.spec, k,
+                state, active)
+        fn = self._mesh_round_fns.get(k)
+        if fn is None:
+            key = (self.cfg_t, self.drafter, self.spec, k, self._plan,
+                   jax.tree_util.tree_structure(self._state_sh),
+                   tuple(jax.tree_util.tree_leaves(self._state_sh)))
+            fn = _MESH_ROUND_JITS.get(key)
+            if fn is None:
+                cfg_t, drafter, spec = self.cfg_t, self.drafter, self.spec
+
+                def body(pt, pd, state, active):
+                    return sd.spec_decode_round_impl(
+                        pt, pd, cfg_t, drafter, spec, k, state, active)
+                rep = self._plan.replicated()
+                fn = jax.jit(body,
+                             in_shardings=(self._pt_sh, self._pd_sh,
+                                           self._state_sh, rep),
+                             out_shardings=(self._state_sh, rep))
+                _MESH_ROUND_JITS[key] = fn
+            self._mesh_round_fns[k] = fn
+        return lambda state, active: fn(self.pt, self.pd, state, active)
 
     # ----------------------------------------------------------- block plane
     def _table_row(self, req: Request) -> np.ndarray:
@@ -328,12 +401,13 @@ class ServingEngine:
             rows_j = jnp.asarray(np.stack(rows_np), jnp.int32)
             rows_t, last_t = prefill_lib.prefill_paged_rows(
                 self.pt, self.cfg_t, tc["k"], tc["v"], tc["kv_pos"],
-                rows_j, toks, plen_j)
+                rows_j, toks, plen_j, plan=self._plan)
             tc = prefill_lib.scatter_paged_rows(tc, rows_t, idx)
         else:
             st = self.state
             rows_t, last_t = prefill_lib.prefill_rows(
-                self.pt, self.cfg_t, toks, plen_j, self.serving.max_seq_len)
+                self.pt, self.cfg_t, toks, plen_j, self.serving.max_seq_len,
+                plan=self._plan)
             tc = prefill_lib.set_slots(st.target_cache, rows_t, idx)
         # drafter-side prefill: a model drafter runs its own one-program-
         # per-bucket prefill (through the same jitted entry points, so
@@ -346,7 +420,8 @@ class ServingEngine:
             self.pd, dc, idx, toks, plen_j,
             max_len=self.serving.max_seq_len,
             table_rows=(rows_j if (self.paged and self.drafter.mirrors_kv())
-                        else None))
+                        else None),
+            plan=self._plan)
         # pending token per row: sampled at prefill for fresh requests
         # (per-request keys — schedule/grouping invariant), the
         # already-emitted last token for readmits
@@ -458,9 +533,8 @@ class ServingEngine:
              else self.policy.pick_bucket(self._sl_next_host, active_mask))
         self._planned_k = None
         t_dispatch = time.monotonic()
-        self.state, out = sd.spec_decode_round(
-            self.pt, self.pd, self.cfg_t, self.drafter, self.spec, k,
-            self.state, jnp.asarray(active_mask))
+        self.state, out = self._round_fn(k)(self.state,
+                                            jnp.asarray(active_mask))
         self.rounds += 1
         self.draft_steps += (k + 1) if k > 0 else 0
         sl_next = self.state.sl_next

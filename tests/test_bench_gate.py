@@ -1,0 +1,152 @@
+"""The perf-trajectory gate's verdict math and collect/compare contract
+(benchmarks/gate.py, DESIGN.md §10).
+
+The gate is CI-failing logic with no other coverage — a broken gate that
+never fails looks identical to a healthy green one in a live run — so
+the contract is locked here: regression directions, relative tolerances,
+the exact mode, the warn-only (2-core noise) escape hatch, the
+missing-metric hard failure, and a collect -> compare round-trip over
+the real table6/table7 JSON shapes.
+"""
+import json
+import os
+import sys
+import types
+
+import pytest
+
+# repo root (the `benchmarks` namespace package lives there, not on
+# PYTHONPATH=src) — same pattern as examples/serve_dynamic_sl.py
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+from benchmarks.gate import (_entry, _verdict, cmd_collect, cmd_compare,
+                             collect_table6, collect_table7)
+
+
+# ---------------------------------------------------------------------------
+# _verdict: direction x tolerance table
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("better,base,pr,tol,want", [
+    ("lower", 10.0, 10.0, 0.10, "ok"),        # unchanged
+    ("lower", 10.0, 10.9, 0.10, "ok"),        # within tolerance
+    ("lower", 10.0, 11.2, 0.10, "fail"),      # regressed past tolerance
+    ("lower", 10.0, 5.0, 0.10, "ok"),         # improvement never fails
+    ("higher", 2.0, 1.9, 0.10, "ok"),
+    ("higher", 2.0, 1.7, 0.10, "fail"),
+    ("higher", 2.0, 3.0, 0.10, "ok"),
+    ("exact", 92.0, 92.0, 0.0, "ok"),
+    ("exact", 92.0, 93.0, 0.0, "fail"),       # both directions fail
+    ("exact", 92.0, 91.0, 0.0, "fail"),
+])
+def test_verdict_directions(better, base, pr, tol, want):
+    e = _entry("b", "m", base, tol, better)
+    assert _verdict(e, pr) == want
+
+
+def test_verdict_warn_mode_never_fails():
+    e = _entry("b", "m", 10.0, 0.10, "lower", mode="warn")
+    assert _verdict(e, 1000.0) == "warn"
+    assert _verdict(e, 10.0) == "ok"
+
+
+# ---------------------------------------------------------------------------
+# collect: real smoke-JSON shapes
+# ---------------------------------------------------------------------------
+
+T6 = {"sync": {"rounds": 14, "tokens": 92, "host_blocked_mean_s": 0.07},
+      "pipelined": {"rounds": 15, "tokens": 92,
+                    "host_blocked_mean_s": 0.004},
+      "speedup": 1.1, "streams_identical": True}
+
+CELL = {"rounds": 20, "latency_units": 21.0, "block_efficiency": 1.4,
+        "mean_acceptance": 0.3, "requests_finished": 8,
+        "kv_pool_blocks": 256.0}
+
+
+def test_collect_table6_metrics_and_modes():
+    entries = collect_table6(T6)
+    by = {e["metric"]: e for e in entries}
+    assert by["sync.rounds"]["mode"] == "fail"
+    assert by["sync.host_blocked_mean_s"]["mode"] == "warn"   # 2-core hatch
+    assert by["speedup"]["mode"] == "warn"
+    assert by["streams_identical"]["value"] == 1.0
+    assert by["streams_identical"]["better"] == "exact"
+
+
+def test_collect_table7_zero_acceptance_omitted():
+    """A 0.0 baseline can never fail a higher-is-better check, so the
+    entry must be OMITTED — a later collapse-to-zero then trips the
+    missing-metric hard failure instead of an unfailable 0-vs-0."""
+    t7 = {"model/dsde": dict(CELL),
+          "ngram/static": dict(CELL, mean_acceptance=0.0)}
+    metrics = {e["metric"] for e in collect_table7(t7)}
+    assert "model/dsde.mean_acceptance" in metrics
+    assert "ngram/static.mean_acceptance" not in metrics
+    assert "ngram/static.rounds" in metrics        # the rest still gated
+
+
+# ---------------------------------------------------------------------------
+# compare: round-trip + failure paths through the CLI entry points
+# ---------------------------------------------------------------------------
+
+def _compare(tmp_path, baseline, pr, summary=None):
+    b, p = tmp_path / "base.json", tmp_path / "pr.json"
+    b.write_text(json.dumps(baseline))
+    p.write_text(json.dumps(pr))
+    args = types.SimpleNamespace(baseline=str(b), pr=str(p),
+                                 summary=summary)
+    return cmd_compare(args)
+
+
+def test_round_trip_identical_passes(tmp_path, capsys):
+    t7 = {"model/dsde": dict(CELL)}
+    entries = collect_table6(T6) + collect_table7(t7)
+    assert _compare(tmp_path, entries, entries) == 0
+    assert "within tolerance" in capsys.readouterr().out
+
+
+def test_regression_fails_and_warn_does_not(tmp_path, capsys):
+    baseline = collect_table6(T6)
+    pr = json.loads(json.dumps(baseline))
+    for e in pr:
+        if e["metric"] == "sync.rounds":
+            e["value"] = 20.0                  # hard metric: +43%
+        if e["metric"] == "pipelined.host_blocked_mean_s":
+            e["value"] = 99.0                  # warn-only metric blown up
+    assert _compare(tmp_path, baseline, pr) == 1
+    out = capsys.readouterr().out
+    assert "sync.rounds" in out and "Regressions" in out
+    assert "warn-only" in out
+    # the warn alone must NOT fail
+    for e in pr:
+        if e["metric"] == "sync.rounds":
+            e["value"] = 14.0
+    assert _compare(tmp_path, baseline, pr) == 0
+
+
+def test_missing_metric_is_hard_failure(tmp_path, capsys):
+    baseline = collect_table6(T6)
+    pr = [e for e in baseline if e["metric"] != "sync.tokens"]
+    assert _compare(tmp_path, baseline, pr) == 1
+    assert "missing from PR run" in capsys.readouterr().out
+
+
+def test_summary_file_written(tmp_path):
+    baseline = collect_table6(T6)
+    summary = tmp_path / "summary.md"
+    assert _compare(tmp_path, baseline, baseline,
+                    summary=str(summary)) == 0
+    assert "| bench | metric |" in summary.read_text()
+
+
+def test_collect_cli_round_trips_files(tmp_path):
+    t6, t7 = tmp_path / "t6.json", tmp_path / "t7.json"
+    t6.write_text(json.dumps(T6))
+    t7.write_text(json.dumps({"model/dsde": dict(CELL)}))
+    out = tmp_path / "BENCH_pr.json"
+    args = types.SimpleNamespace(table6=str(t6), table7=str(t7),
+                                 out=str(out))
+    assert cmd_collect(args) == 0
+    entries = json.loads(out.read_text())
+    assert {tuple(sorted(e)) for e in entries} == {
+        ("bench", "better", "metric", "mode", "tolerance", "value")}
