@@ -38,7 +38,7 @@ def collect_signals(cfg_t, cfg_d, pt, pd, prompts, temperature, sl=4,
     b = len(prompts)
     spec = SpecDecodeConfig(policy="static", static_sl=sl,
                             temperature=temperature)
-    key = jax.random.PRNGKey(seed)
+    key, k_first = jax.random.split(jax.random.PRNGKey(seed))
     state = sd.init_round_state(cfg_t, cfg_d, spec, b, 512, key)
     # prefill
     pl = max(len(p) for p in prompts)
@@ -57,7 +57,7 @@ def collect_signals(cfg_t, cfg_d, pt, pd, prompts, temperature, sl=4,
     tc = dict(tc); tc["length"] = lens
     dc = dict(dc); dc["length"] = lens
     last = lt[jnp.arange(b), lens - 1]
-    pend = sample_token(key, last, temperature, cfg_t.vocab_size)
+    pend = sample_token(k_first, last, temperature, cfg_t.vocab_size)
     state = state._replace(target_cache=tc, draft_cache=dc,
                            pending=pend.astype(jnp.int32),
                            sl_next=jnp.full((b,), sl, jnp.int32))

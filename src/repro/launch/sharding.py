@@ -38,6 +38,24 @@ from repro.models.transformer import model_specs
 PyTree = Any
 
 
+def canonical_spec(*parts) -> P:
+    """THE PartitionSpec constructor (speclint JX003): trims trailing
+    ``None`` dims so equal layouts are structurally equal.
+
+    Jit signatures compare PartitionSpecs *structurally* —
+    ``P('data', None)`` and ``P('data')`` describe the same sharding but
+    hash and compare differently, so a program keyed on one and re-fed
+    the other silently forks the compiled-program cache (PR 5's serving
+    round recompiled every round until its no-recompile guard tripped).
+    Canonical form makes that hazard unrepresentable; every spec literal
+    in the tree must be built here (trailing-``None`` literals anywhere
+    else are JX003 findings)."""
+    out = list(parts)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
 def _batch_axes(mesh: Mesh, global_batch: int) -> Tuple[str, ...]:
     """Largest prefix of (pod, data) whose product divides the batch."""
     axes = [a for a in ("pod", "data") if a in mesh.axis_names]
@@ -115,9 +133,7 @@ def cache_shardings(cache_tree: PyTree, mesh: Mesh,
                 continue
             used.update(names)
             fixed.append(part)
-        while fixed and fixed[-1] is None:
-            fixed.pop()
-        return NamedSharding(mesh, P(*fixed))
+        return NamedSharding(mesh, canonical_spec(*fixed))
 
     return {k: one(k, v) for k, v in cache_tree.items()}
 
@@ -129,7 +145,7 @@ def replicated(mesh: Mesh) -> NamedSharding:
 def batch_sharding(mesh: Mesh, rules: ShardingConfig,
                    ndim: int) -> NamedSharding:
     spec = [tuple(rules.batch) if rules.batch else None] + [None] * (ndim - 1)
-    return NamedSharding(mesh, P(*spec))
+    return NamedSharding(mesh, canonical_spec(*spec))
 
 
 def activation_sharding(mesh: Mesh, rules: ShardingConfig) -> Optional[NamedSharding]:
@@ -137,7 +153,8 @@ def activation_sharding(mesh: Mesh, rules: ShardingConfig) -> Optional[NamedShar
     if rules.seq is None:
         return None
     return NamedSharding(
-        mesh, P(tuple(rules.batch) if rules.batch else None, rules.seq, None))
+        mesh, canonical_spec(tuple(rules.batch) if rules.batch else None,
+                             rules.seq, None))
 
 
 def attn_head_sharding(mesh: Mesh, rules: ShardingConfig):
@@ -147,8 +164,9 @@ def attn_head_sharding(mesh: Mesh, rules: ShardingConfig):
         return None
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     return (NamedSharding(
-        mesh, P(tuple(rules.batch) if rules.batch else None, None,
-                rules.heads, None)), sizes[rules.heads])
+        mesh, canonical_spec(tuple(rules.batch) if rules.batch else None,
+                             None, rules.heads, None)),
+        sizes[rules.heads])
 
 
 # ---------------------------------------------------------------------------
@@ -211,26 +229,19 @@ def serve_cache_shardings(cache: PyTree, mesh: Mesh,
             return None
         return data
 
-    def canon(*parts) -> P:
-        # canonical form (trailing Nones trimmed): jit signatures compare
-        # PartitionSpecs structurally, so P() and P(None, ...) must never
-        # alternate for the same leaf across rounds
-        parts = list(parts)
-        while parts and parts[-1] is None:
-            parts.pop()
-        return P(*parts)
-
     def one(name: str, leaf) -> NamedSharding:
         s = leaf.shape
         if name in ("k", "v", "cross_k", "cross_v"):
             kvp = kv_head_axis(s[3], mesh, rules)
             if paged:            # pool [L, n_blocks, bs, KV, D]
-                return NamedSharding(mesh, canon(None, None, None, kvp))
-            return NamedSharding(mesh, canon(None, bp(s[1]), None, kvp))
+                return NamedSharding(
+                    mesh, canonical_spec(None, None, None, kvp))
+            return NamedSharding(
+                mesh, canonical_spec(None, bp(s[1]), None, kvp))
         if name in ("ssd", "lru", "conv"):       # [L, B, ...] per-slot rows
-            return NamedSharding(mesh, canon(None, bp(s[1])))
+            return NamedSharding(mesh, canonical_spec(None, bp(s[1])))
         if name == "tokens":                     # ngram history [B, H]
-            return NamedSharding(mesh, canon(bp(s[0])))
+            return NamedSharding(mesh, canonical_spec(bp(s[0])))
         return NamedSharding(mesh, P())
     return {k: one(k, v) for k, v in cache.items()}
 
@@ -289,5 +300,5 @@ def moe_shardings(mesh: Mesh, rules: ShardingConfig):
     b = tuple(rules.batch) if rules.batch else None
     if b is None:
         return None
-    return {"cap": NamedSharding(mesh, P(None, b, None)),
-            "tok": NamedSharding(mesh, P(b, None))}
+    return {"cap": NamedSharding(mesh, canonical_spec(None, b, None)),
+            "tok": NamedSharding(mesh, canonical_spec(b, None))}

@@ -19,7 +19,7 @@ from typing import Any, Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding
 
 from repro.core.config import (InputShape, ModelConfig, OptimizerConfig,
                                ShardingConfig)
@@ -28,7 +28,7 @@ from repro.models.module import abstract_params, param_shardings
 from repro.models.transformer import forward, model_specs
 from repro.launch.sharding import (activation_sharding, attn_head_sharding,
                                    batch_sharding, cache_shardings,
-                                   moe_shardings, replicated)
+                                   canonical_spec, moe_shardings, replicated)
 from repro.training.optimizer import AdamWState
 from repro.training.train import train_step
 
@@ -116,7 +116,7 @@ def make_step_and_specs(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
         def mb_sharding(ndim):
             spec = [None, tuple(rules.batch) if rules.batch else None]
             spec += [None] * (ndim - 2)
-            return NamedSharding(mesh, P(*spec))
+            return NamedSharding(mesh, canonical_spec(*spec))
 
         if cfg.family == "audio":
             el = _enc_len(shape)

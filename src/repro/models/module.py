@@ -21,7 +21,7 @@ from typing import Any, Dict, NamedTuple, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding
 
 from repro.core.config import ShardingConfig
 
@@ -98,13 +98,13 @@ def logical_to_pspec(axes: Sequence[Optional[str]],
         "head_dim": None, "layers": None, "conv": None,
         "state": None, "lru": rules.mlp, None: None,
     }
+    # deferred: launch.sharding imports this module at load time
+    from repro.launch.sharding import canonical_spec
+
     parts = []
     for name in axes:
         parts.append(mapping.get(name, None))
-    # trim trailing Nones (canonical form)
-    while parts and parts[-1] is None:
-        parts.pop()
-    return P(*parts)
+    return canonical_spec(*parts)
 
 
 def param_shardings(specs: PyTree, mesh: Mesh,
@@ -116,6 +116,9 @@ def param_shardings(specs: PyTree, mesh: Mesh,
     otherwise the dim is replicated (e.g. 9 heads over 16 model shards).
     The replication cost shows up in the §Roofline memory column and the
     fused-head layout that removes it is a §Perf hillclimb variant."""
+    # deferred: launch.sharding imports this module at load time
+    from repro.launch.sharding import canonical_spec
+
     axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
 
     def _one(spec: Spec) -> NamedSharding:
@@ -134,9 +137,7 @@ def param_shardings(specs: PyTree, mesh: Mesh,
                 continue
             used.update(names)
             fixed.append(part)
-        while fixed and fixed[-1] is None:
-            fixed.pop()
-        return NamedSharding(mesh, P(*fixed))
+        return NamedSharding(mesh, canonical_spec(*fixed))
 
     return _tree_map_specs(_one, specs)
 

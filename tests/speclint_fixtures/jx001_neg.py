@@ -1,0 +1,24 @@
+"""JX001 true negatives: structure probes and functional control flow."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def identity_probe(x, mask=None):
+    # `is None` inspects trace-time structure, never a traced value
+    if mask is None:
+        mask = jnp.ones_like(x)
+    return x * mask
+
+
+@jax.jit
+def shape_probe(x):
+    # .shape / ndim are Python values under trace
+    if x.ndim == 2 and jnp.result_type(x) == jnp.float32:
+        return x.sum(axis=-1)
+    return x
+
+
+@jax.jit
+def functional_branch(x):
+    return jnp.where(jnp.any(x > 0), x + 1, x - 1)

@@ -1,0 +1,19 @@
+"""JX001 true positives: Python control flow on traced values."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def branch_on_traced_call(x):
+    if jnp.any(x > 0):                       # JX001: concretizes a tracer
+        return x + 1
+    return x - 1
+
+
+@jax.jit
+def while_on_traced_name(x):
+    m = jnp.max(x)
+    while m > 0:                             # JX001: `m` is traced
+        x = x - 1
+        m = jnp.max(x)
+    return x

@@ -1,0 +1,29 @@
+"""JX002 true negatives: rebinding the donated name kills the taint."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, donate_argnames=("pool",))
+def scatter_rows(pool, rows):
+    return pool.at[: rows.shape[0]].set(rows)
+
+
+def update_and_rebind(pool, rows):
+    pool = scatter_rows(pool, rows)          # donated, then rebound
+    return pool[0]                           # reads the NEW buffer
+
+
+def update_twice(pool, rows):
+    pool = scatter_rows(pool, rows)
+    pool = scatter_rows(pool, rows * 2)      # rebound each round
+    return pool
+
+
+def donate_in_both_arms(pool, rows, flag):
+    if flag:
+        pool = scatter_rows(pool, rows)
+    else:
+        pool = scatter_rows(pool, -rows)
+    return pool.sum()                        # both arms rebound it

@@ -1,0 +1,26 @@
+"""JX002 true positive: reading a buffer after donating it."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, donate_argnames=("pool",))
+def scatter_rows(pool, rows):
+    return pool.at[: rows.shape[0]].set(rows)
+
+
+def update_then_peek(pool, rows):
+    new_pool = scatter_rows(pool, rows)
+    stale = pool[0]                          # JX002: pool was donated
+    return new_pool, stale
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def consume_state(state, grads):
+    return jax.tree_util.tree_map(lambda a, b: a - b, state, grads)
+
+
+def train_step(state, grads):
+    out = consume_state(state, grads)
+    return out, state["w"]                   # JX002: state was donated

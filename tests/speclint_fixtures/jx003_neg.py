@@ -1,0 +1,17 @@
+"""JX003 true negatives: canonical literals and the one sanctioned
+constructor."""
+from jax.sharding import PartitionSpec as P
+
+
+def canonical_spec(*parts):
+    # the sanctioned constructor may see (and trim) trailing Nones
+    out = list(parts)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+TRIMMED = P("data")                          # canonical: no trailing None
+INTERIOR = P(None, "model")                  # interior None is meaningful
+REPLICATED = P()                             # empty spec is canonical
+VIA_HELPER = canonical_spec("data", None)    # routed through the helper

@@ -1,0 +1,10 @@
+"""JX003 true positives: trailing-None PartitionSpec literals."""
+from jax.sharding import PartitionSpec as P
+import jax.sharding
+
+
+def batch_spec():
+    return P("data", None)                   # JX003: trailing None
+
+
+FULL = jax.sharding.PartitionSpec("data", "model", None)   # JX003

@@ -1,0 +1,33 @@
+"""JX004 true negatives: every sanctioned jit-construction discipline."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+_PROGRAMS = {}
+
+step = jax.jit(jnp.dot)                      # module level: the default
+
+
+def make_step(static_k):
+    # make_*/build_* factory: built once by the caller, by convention
+    return jax.jit(functools.partial(jnp.tensordot, axes=static_k))
+
+
+@functools.lru_cache(maxsize=None)
+def _cached_program(k):
+    # memoized builder: at most one construction per key
+    return jax.jit(lambda x: x * k)
+
+
+class Engine:
+    def _round_fn(self, key):
+        # the _MESH_ROUND_JITS discipline: store into a module-level table
+        if key not in _PROGRAMS:
+            fn = jax.jit(jnp.add)
+            _PROGRAMS[key] = fn
+        return _PROGRAMS[key]
+
+    def lowered_text(self, x):
+        # AOT probe, not a per-call program
+        return jax.jit(jnp.sin).lower(x).as_text()

@@ -1,0 +1,15 @@
+"""JX004 true positives: jax.jit constructed per call."""
+import jax
+import jax.numpy as jnp
+
+
+def decode_round(params, toks):
+    body = lambda p, t: jnp.dot(p, t)
+    fn = jax.jit(body)                       # JX004: fresh wrapper per call
+    return fn(params, toks)
+
+
+class Engine:
+    def step(self, params, toks):
+        # JX004: recompiles every step (closure differs per call)
+        return jax.jit(lambda t: jnp.dot(params, t))(toks)

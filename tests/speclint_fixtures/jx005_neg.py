@@ -1,0 +1,32 @@
+"""JX005 true negatives: the split/fold_in discipline."""
+import jax
+import jax.numpy as jnp
+
+
+def split_per_use(key):
+    k1, k2 = jax.random.split(key)
+    return jax.random.normal(k1, (4,)) + jax.random.uniform(k2, (4,))
+
+
+def fold_in_loop(key, n):
+    out = []
+    for i in range(n):
+        ki = jax.random.fold_in(key, i)      # fresh key per iteration
+        out.append(jax.random.normal(ki, (2,)))
+    return out
+
+
+def rebind_between_draws(key):
+    a = jax.random.normal(key, (4,))
+    key = jax.random.PRNGKey(1)              # fresh key: reuse is fine
+    b = jax.random.normal(key, (4,))
+    return a + b
+
+
+def one_draw_per_arm(key, flag):
+    # each arm consumes once; arms never both execute
+    if flag:
+        out = jax.random.normal(key, (4,))
+    else:
+        out = jax.random.uniform(key, (4,))
+    return out

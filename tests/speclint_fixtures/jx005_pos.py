@@ -1,0 +1,23 @@
+"""JX005 true positives: PRNG key reuse."""
+import jax
+import jax.numpy as jnp
+
+
+def double_draw(key):
+    a = jax.random.normal(key, (4,))
+    b = jax.random.uniform(key, (4,))        # JX005: key already consumed
+    return a + b
+
+
+def use_after_split(key):
+    k1, k2 = jax.random.split(key)
+    a = jax.random.normal(k1, (4,))
+    b = jax.random.normal(key, (4,))         # JX005: split key is dead
+    return a + b + jax.random.normal(k2, (4,))
+
+
+def loop_invariant_key(key, n):
+    out = []
+    for _ in range(n):
+        out.append(jax.random.normal(key, (2,)))   # JX005: same draw n times
+    return out

@@ -1,0 +1,16 @@
+"""JX006 true positive: a Pallas kernel with no ops.py dispatch (and so
+no oracle fallback and no parity test)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2
+
+
+def orphan_kernel(x):
+    return pl.pallas_call(
+        _kernel, out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype))(x)

@@ -1,0 +1,13 @@
+"""JX006 true negative: kernel with full parity contract."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2
+
+
+def fused_toy_update(x):
+    return pl.pallas_call(
+        _kernel, out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype))(x)

@@ -1,0 +1,11 @@
+"""Backend dispatch for the toy kernel: kernel on TPU, oracle elsewhere."""
+import jax
+
+from tests.speclint_fixtures.jx006_good.kernels import ref
+from tests.speclint_fixtures.jx006_good.kernels.goodk import fused_toy_update
+
+
+def toy_update(x, force_kernel=False):
+    if force_kernel or jax.default_backend() == "tpu":
+        return fused_toy_update(x)
+    return ref.fused_toy_update_ref(x)

@@ -1,0 +1,11 @@
+import jax
+
+from tests.speclint_fixtures.jx006_untested.kernels import ref
+from tests.speclint_fixtures.jx006_untested.kernels.untested import (
+    untested_kernel)
+
+
+def plus_one(x, force_kernel=False):
+    if force_kernel or jax.default_backend() == "tpu":
+        return untested_kernel(x)
+    return ref.untested_kernel_ref(x)

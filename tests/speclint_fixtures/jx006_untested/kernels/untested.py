@@ -1,0 +1,14 @@
+"""JX006 true positive (missing-test arm): ops + oracle exist, but no
+scanned test names the entry."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] + 1
+
+
+def untested_kernel(x):
+    return pl.pallas_call(
+        _kernel, out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype))(x)

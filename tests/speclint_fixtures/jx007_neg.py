@@ -1,0 +1,25 @@
+"""JX007 true negatives: pinned dtypes and structural ints."""
+import jax
+import jax.numpy as jnp
+
+
+def make_normalizer():
+    eps = jnp.asarray(1e-6, jnp.float32)     # dtype pinned at binding site
+    axis = 1                                 # structural int (axis), not math
+
+    def norm(x):
+        m = jnp.mean(x, axis=axis, keepdims=True)
+        v = jnp.var(x, axis=axis, keepdims=True)
+        return (x - m) / jnp.sqrt(v + eps)
+
+    return jax.jit(norm)
+
+
+def plain_python_closure():
+    rate = 0.5
+
+    def describe():
+        # not traced, not jit-reachable: plain Python may close over floats
+        return "rate=%s" % rate
+
+    return describe

@@ -1,0 +1,15 @@
+"""JX007 true positive: bare scalar closed over into a traced function."""
+import jax
+import jax.numpy as jnp
+
+
+def make_normalizer():
+    eps = 1e-6                               # bare weak-typed float
+    scale = 4                                # bare int, used arithmetically
+
+    def norm(x):
+        m = jnp.mean(x * scale, axis=-1, keepdims=True)   # JX007 (scale)
+        v = jnp.var(x, axis=-1, keepdims=True)
+        return (x - m) / jnp.sqrt(v + eps)   # JX007 (eps)
+
+    return jax.jit(norm)

@@ -1,0 +1,7 @@
+"""Malformed suppressions: missing justification (SP000) and unknown
+rule id (SP001)."""
+from jax.sharding import PartitionSpec as P
+
+BARE = P("data", None)  # speclint: disable=JX003
+
+OK = P("model")  # speclint: disable=ZZ999 (justified, but no such rule)

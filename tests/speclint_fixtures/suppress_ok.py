@@ -1,0 +1,7 @@
+"""Justified suppressions: both placement forms."""
+from jax.sharding import PartitionSpec as P
+
+TRAILING = P("data", None)  # speclint: disable=JX003 (fixture: exercising the trailing-comment form)
+
+# speclint: disable=JX003 (fixture: exercising the directive-above form)
+ALSO_TRAILING = P("model", None)

@@ -25,6 +25,7 @@ from repro.core.drafters import (Drafter, available_drafters, build_drafter,
 from repro.core.policies import available_policies
 from repro.kernels import ops as kernel_ops
 from repro.kernels import ref
+from repro.kernels.ngram_match import ngram_suffix_propose
 from repro.models.module import init_params
 from repro.models.transformer import forward, model_specs
 from repro.serving.engine import ServingEngine
@@ -177,6 +178,10 @@ def test_ngram_kernel_matches_oracle_exactly(n, k, seed):
                                             interpret=True)
     np.testing.assert_array_equal(np.asarray(got_t), np.asarray(want_t))
     np.testing.assert_array_equal(np.asarray(got_c), np.asarray(want_c))
+    # the pallas entry itself (not just the ops dispatcher) is bit-exact
+    pk_t, pk_c = ngram_suffix_propose(buf, ctx, n=n, k=k, interpret=True)
+    np.testing.assert_array_equal(np.asarray(pk_t), np.asarray(want_t))
+    np.testing.assert_array_equal(np.asarray(pk_c), np.asarray(want_c))
 
 
 # ---------------------------------------------------------------------------

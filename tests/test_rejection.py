@@ -118,13 +118,13 @@ def test_accepted_prefix_property(seed):
     """accept_mask is always a prefix (no holes) and consistent with
     num_accepted."""
     key = jax.random.PRNGKey(seed)
-    k1, k2, k3 = jax.random.split(key, 3)
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
     b, k = 3, 5
     tl = jax.random.normal(k1, (b, k + 1, V))
     dl = jax.random.normal(k2, (b, k, V))
     draft = jax.random.randint(k3, (b, k), 0, V)
-    lens = jax.random.randint(key, (b,), 0, k + 1)
-    r = rejection_sample(key, draft, dl, tl, lens, temperature=1.0,
+    lens = jax.random.randint(k4, (b,), 0, k + 1)
+    r = rejection_sample(k5, draft, dl, tl, lens, temperature=1.0,
                          vocab_size=V, pad_id=PAD)
     m = np.asarray(r.accept_mask)
     na = np.asarray(r.num_accepted)

@@ -1,0 +1,159 @@
+"""speclint: fixture corpus drive + self-scan + CLI contract.
+
+Every rule is exercised against at least one true-positive and one
+true-negative fixture under ``tests/speclint_fixtures/`` (the corpus is
+excluded from directory expansion, so repo-wide scans never trip over
+the bait).  The self-scan test is the real gate: the merged tree must
+lint clean with every suppression justified — the same invocation CI's
+``lint`` lane runs.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if REPO not in sys.path:                     # direct `pytest tests/...` runs
+    sys.path.insert(0, REPO)
+
+from tools.speclint import all_rule_ids, lint_paths, rules_table  # noqa: E402
+
+FIX = os.path.join(REPO, "tests", "speclint_fixtures")
+
+
+def _lint(*names, rules=None):
+    return lint_paths([os.path.join(FIX, n) for n in names], rules=rules)
+
+
+def _ids(res):
+    return [f.rule_id for f in res.findings]
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_all_seven_rules_registered():
+    ids = set(all_rule_ids())
+    assert {f"JX00{i}" for i in range(1, 8)} <= ids
+    table = {r.rule_id: r for r in rules_table()}
+    assert table["JX006"].scope == "project"
+    assert table["JX001"].scope == "file"
+
+
+# ---------------------------------------------------------------------------
+# per-rule fixtures: >=1 true positive, >=1 true negative
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rule,pos,neg,n_pos", [
+    ("JX001", "jx001_pos.py", "jx001_neg.py", 2),
+    ("JX002", "jx002_pos.py", "jx002_neg.py", 2),
+    ("JX003", "jx003_pos.py", "jx003_neg.py", 2),
+    ("JX004", "jx004_pos.py", "jx004_neg.py", 2),
+    ("JX005", "jx005_pos.py", "jx005_neg.py", 3),
+    ("JX007", "jx007_pos.py", "jx007_neg.py", 2),
+])
+def test_file_rule_fixture_pair(rule, pos, neg, n_pos):
+    got = _lint(pos)
+    assert _ids(got) == [rule] * n_pos, got.findings
+    clean = _lint(neg)
+    assert clean.findings == [], clean.findings
+
+
+def test_jx006_missing_ops_dispatch():
+    got = _lint("jx006_bad")
+    assert _ids(got) == ["JX006"], got.findings
+    assert "no ops.py" in got.findings[0].message
+    assert "orphan_kernel" in got.findings[0].message
+
+
+def test_jx006_missing_naming_test():
+    got = _lint("jx006_untested")
+    assert _ids(got) == ["JX006"], got.findings
+    assert "bit-exactness test" in got.findings[0].message
+    assert "untested_kernel" in got.findings[0].message
+
+
+def test_jx006_full_parity_is_clean():
+    got = _lint("jx006_good")
+    assert got.findings == [], got.findings
+
+
+def test_jx006_test_check_skipped_when_no_tests_scanned():
+    # linting only the kernels dir (no test files in scope) must not
+    # demand a test — `src`-only scans stay usable
+    got = _lint(os.path.join("jx006_untested", "kernels"))
+    assert got.findings == [], got.findings
+
+
+# ---------------------------------------------------------------------------
+# suppressions
+# ---------------------------------------------------------------------------
+
+def test_justified_suppressions_drop_findings():
+    got = _lint("suppress_ok.py")
+    assert got.findings == [], got.findings
+    assert got.n_suppressed == 2
+
+
+def test_unjustified_suppression_is_itself_a_finding():
+    got = _lint("suppress_bad.py")
+    ids = _ids(got)
+    assert "SP000" in ids            # bare disable: no justification
+    assert "SP001" in ids            # unknown rule id
+    assert "JX003" in ids            # the bare disable did NOT suppress
+
+
+def test_rule_selection_filters():
+    got = _lint("jx001_pos.py", "jx003_pos.py", rules=["JX003"])
+    assert set(_ids(got)) == {"JX003"}
+
+
+# ---------------------------------------------------------------------------
+# self-scan: the merged tree is the ultimate true-negative corpus
+# ---------------------------------------------------------------------------
+
+def test_repo_lints_clean():
+    paths = [os.path.join(REPO, d)
+             for d in ("src", "tests", "benchmarks", "examples")]
+    res = lint_paths([p for p in paths if os.path.isdir(p)])
+    assert res.findings == [], "\n".join(
+        f.format_text() for f in res.findings)
+
+
+def test_fixture_corpus_excluded_from_expansion():
+    res = lint_paths([os.path.join(REPO, "tests")])
+    bait = [f for f in res.findings if "speclint_fixtures" in f.file]
+    assert bait == []
+
+
+# ---------------------------------------------------------------------------
+# CLI contract (what the CI lint lane relies on)
+# ---------------------------------------------------------------------------
+
+def _cli(*args):
+    return subprocess.run(
+        [sys.executable, "-m", "tools.speclint", *args],
+        cwd=REPO, capture_output=True, text=True)
+
+
+def test_cli_exit_codes_and_github_format():
+    dirty = _cli(os.path.join(FIX, "jx003_pos.py"), "--format", "github")
+    assert dirty.returncode == 1
+    assert "::error file=" in dirty.stdout
+    assert "JX003" in dirty.stdout
+    clean = _cli(os.path.join(FIX, "jx003_neg.py"), "--format", "github")
+    assert clean.returncode == 0
+    assert "::error" not in clean.stdout
+
+
+def test_cli_json_format():
+    out = _cli(os.path.join(FIX, "jx005_pos.py"), "--format", "json")
+    assert out.returncode == 1
+    payload = json.loads(out.stdout)
+    assert payload["files"] == 1
+    assert {f["rule_id"] for f in payload["findings"]} == {"JX005"}
+    assert all({"file", "line", "rule_id", "message"} <= set(f)
+               for f in payload["findings"])

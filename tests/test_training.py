@@ -56,9 +56,9 @@ def test_adamw_first_step_is_lr_sized():
 
 
 def test_cross_entropy_matches_naive():
-    key = jax.random.PRNGKey(3)
-    logits = jax.random.normal(key, (2, 5, 37))
-    labels = jax.random.randint(key, (2, 5), 0, 30)
+    k_logits, k_labels = jax.random.split(jax.random.PRNGKey(3))
+    logits = jax.random.normal(k_logits, (2, 5, 37))
+    labels = jax.random.randint(k_labels, (2, 5), 0, 30)
     got = float(cross_entropy(logits, labels, 30))
     lp = jax.nn.log_softmax(jnp.where(jnp.arange(37) < 30, logits, -1e30), -1)
     want = float(-jnp.take_along_axis(lp, labels[..., None], -1).mean())

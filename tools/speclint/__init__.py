@@ -1,0 +1,26 @@
+"""speclint — static enforcement of the repo's JAX/Pallas invariants.
+
+Rules (DESIGN.md §11 has the incident history behind each):
+
+* **JX001** Python ``if``/``while`` on traced values in jit-reachable
+  functions.
+* **JX002** use-after-donation: reading a buffer after it was passed to
+  a ``donate_argnums``/``donate_argnames`` call site.
+* **JX003** non-canonical ``PartitionSpec`` literals (trailing ``None``)
+  outside :func:`repro.launch.sharding.canonical_spec`.
+* **JX004** ``jax.jit`` constructed per call instead of a module-level
+  program table.
+* **JX005** PRNG key reuse without an interleaving ``split``/``fold_in``.
+* **JX006** Pallas kernel parity: ``ref.py`` oracle + ``ops.py``
+  dispatch + a bit-exactness test naming the kernel.
+* **JX007** bare Python scalar constants closed over into traced
+  functions (weak-type discipline).
+
+Suppress inline with ``# speclint: disable=JX00N (justification)`` —
+the justification is mandatory.
+"""
+from tools.speclint.registry import Finding, all_rule_ids, rules_table
+from tools.speclint.runner import LintResult, lint_paths, lint_sources
+
+__all__ = ["Finding", "LintResult", "lint_paths", "lint_sources",
+           "all_rule_ids", "rules_table"]

@@ -1,0 +1,5 @@
+import sys
+
+from tools.speclint.cli import main
+
+sys.exit(main())

@@ -1,0 +1,302 @@
+"""Shared AST analysis: per-file parse context, import-alias resolution,
+jit-entry discovery (decorators, ``functools.partial`` decorators, and
+``name = jax.jit(fn, ...)`` bindings) and jit-reachability.
+
+Reachability is a deliberate over-approximation with a documented floor
+(DESIGN.md §11): a function is *jit-reachable* when it
+
+* is passed to / decorated with ``jax.jit`` (statics recorded), or
+* is lexically nested inside a reachable function, or
+* is a same-file top-level function called by name from a reachable
+  body, or
+* is a top-level function whose name is called (as a bare name or
+  attribute terminal) from any jit-reachable body anywhere in the
+  scanned tree (the cross-module hop — name-based, so a hot name in one
+  module marks same-named functions elsewhere; rules that consume this
+  set only fire on patterns that are hazards under tracing *and*
+  near-certainly bugs outside it).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+
+# --------------------------------------------------------------------------
+# name resolution
+# --------------------------------------------------------------------------
+
+def build_alias_map(tree: ast.Module) -> Dict[str, str]:
+    """Local name -> fully dotted path, from import statements."""
+    aliases: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                aliases[a.asname or a.name.split(".")[0]] = (
+                    a.name if a.asname else a.name.split(".")[0])
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            for a in node.names:
+                aliases[a.asname or a.name] = f"{node.module}.{a.name}"
+    return aliases
+
+
+def dotted(node: ast.AST, aliases: Dict[str, str]) -> Optional[str]:
+    """Resolve ``jnp.sum`` -> ``jax.numpy.sum`` etc.; None if not a
+    plain Name/Attribute chain."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if not isinstance(node, ast.Name):
+        return None
+    root = aliases.get(node.id, node.id)
+    parts.append(root)
+    return ".".join(reversed(parts))
+
+
+def terminal_name(node: ast.AST) -> Optional[str]:
+    """Last path component of a call target (``prefill_lib.prefill_rows``
+    -> ``prefill_rows``)."""
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return None
+
+
+def const_str_tuple(node: ast.AST) -> Tuple[str, ...]:
+    """('a', 'b') / ['a'] / 'a' literals -> tuple of strings."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return (node.value,)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for el in node.elts:
+            if isinstance(el, ast.Constant) and isinstance(el.value, str):
+                out.append(el.value)
+        return tuple(out)
+    return ()
+
+
+def const_int_tuple(node: ast.AST) -> Tuple[int, ...]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return (node.value,)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for el in node.elts:
+            if isinstance(el, ast.Constant) and isinstance(el.value, int):
+                out.append(el.value)
+        return tuple(out)
+    return ()
+
+
+def param_names(fn: ast.FunctionDef) -> List[str]:
+    a = fn.args
+    return ([p.arg for p in a.posonlyargs] + [p.arg for p in a.args]
+            + [p.arg for p in a.kwonlyargs])
+
+
+# --------------------------------------------------------------------------
+# jit entries
+# --------------------------------------------------------------------------
+
+JIT_NAMES = {"jax.jit", "jax.pjit", "jax.experimental.pjit.pjit"}
+
+
+@dataclasses.dataclass
+class JitInfo:
+    """Statics/donation recorded at the jit construction site."""
+    static_names: Set[str]
+    donated_names: Set[str]
+
+
+def _jit_kwargs(call: ast.Call, fn: Optional[ast.FunctionDef]) -> JitInfo:
+    static: Set[str] = set()
+    donated: Set[str] = set()
+    pos = param_names(fn) if fn is not None else []
+    for kw in call.keywords:
+        if kw.arg in ("static_argnames",):
+            static.update(const_str_tuple(kw.value))
+        elif kw.arg in ("donate_argnames",):
+            donated.update(const_str_tuple(kw.value))
+        elif kw.arg in ("static_argnums",):
+            static.update(pos[i] for i in const_int_tuple(kw.value)
+                          if i < len(pos))
+        elif kw.arg in ("donate_argnums",):
+            donated.update(pos[i] for i in const_int_tuple(kw.value)
+                           if i < len(pos))
+    return JitInfo(static, donated)
+
+
+class FileCtx:
+    """One parsed module plus everything the rules need from it."""
+
+    def __init__(self, path: str, source: str):
+        self.path = path
+        self.source = source
+        self.tree = ast.parse(source, filename=path)
+        self.aliases = build_alias_map(self.tree)
+        self.parents: Dict[ast.AST, ast.AST] = {}
+        for node in ast.walk(self.tree):
+            for child in ast.iter_child_nodes(node):
+                self.parents[child] = node
+        self.functions: List[ast.FunctionDef] = [
+            n for n in ast.walk(self.tree)
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]
+        self.top_level_fns: Dict[str, ast.FunctionDef] = {
+            n.name: n for n in self.tree.body
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+        self.module_names: Set[str] = {
+            t.id for n in self.tree.body if isinstance(n, ast.Assign)
+            for t in n.targets if isinstance(t, ast.Name)}
+        self.module_names |= {
+            n.target.id for n in self.tree.body
+            if isinstance(n, ast.AnnAssign)
+            and isinstance(n.target, ast.Name)}
+        # jit entries: FunctionDef -> JitInfo
+        self.jit_entries: Dict[ast.FunctionDef, JitInfo] = {}
+        # donors visible at THIS file's construction sites:
+        #   callable name -> donated param names (+ positional signature
+        #   when the donor def is in this file, for arg mapping)
+        self.local_donors: Dict[str, Set[str]] = {}
+        self.donor_sigs: Dict[str, List[str]] = {}
+        self._find_jit_entries()
+        # reachable set, locally closed (project pass may extend it)
+        self.reachable: Set[ast.FunctionDef] = set(self.jit_entries)
+        self._close_reachability()
+
+    # -------------------------------------------------- jit entry discovery
+    def _is_jit(self, node: ast.AST) -> bool:
+        d = dotted(node, self.aliases)
+        return d in JIT_NAMES or (d is not None and d.endswith(".jit")
+                                  and d.startswith("jax"))
+
+    def _find_jit_entries(self) -> None:
+        # decorators
+        for fn in self.functions:
+            for dec in fn.decorator_list:
+                if self._is_jit(dec):
+                    self._add_entry(fn, JitInfo(set(), set()))
+                elif isinstance(dec, ast.Call):
+                    if self._is_jit(dec.func):
+                        self._add_entry(fn, _jit_kwargs(dec, fn))
+                    elif (dotted(dec.func, self.aliases)
+                          in ("functools.partial", "partial")
+                          and dec.args and self._is_jit(dec.args[0])):
+                        self._add_entry(fn, _jit_kwargs(dec, fn))
+        # name = jax.jit(fn, ...) bindings (module or function level)
+        for node in ast.walk(self.tree):
+            if not (isinstance(node, ast.Call) and self._is_jit(node.func)
+                    and node.args):
+                continue
+            target = node.args[0]
+            inner = None
+            if isinstance(target, ast.Name):
+                inner = target.id
+            elif (isinstance(target, ast.Call)
+                  and dotted(target.func, self.aliases)
+                  in ("functools.partial", "partial")
+                  and target.args and isinstance(target.args[0], ast.Name)):
+                inner = target.args[0].id
+            fn = self._resolve_local_fn(inner, node)
+            info = _jit_kwargs(node, fn)
+            if fn is not None:
+                self._add_entry(fn, info)
+            # donor table entry under the bound name, for call sites
+            if info.donated_names:
+                sig = param_names(fn) if fn is not None else None
+                parent = self.parents.get(node)
+                names = []
+                if isinstance(parent, ast.Assign):
+                    names += [t.id for t in parent.targets
+                              if isinstance(t, ast.Name)]
+                if inner is not None:
+                    names.append(inner)
+                for nm in names:
+                    self.local_donors[nm] = set(info.donated_names)
+                    if sig is not None:
+                        self.donor_sigs[nm] = sig
+
+    def _resolve_local_fn(self, name: Optional[str],
+                          at: ast.AST) -> Optional[ast.FunctionDef]:
+        if name is None:
+            return None
+        if name in self.top_level_fns:
+            return self.top_level_fns[name]
+        # nearest enclosing scope's nested def with that name
+        scope = self.enclosing_function(at)
+        while scope is not None:
+            for st in ast.walk(scope):
+                if (isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef))
+                        and st.name == name):
+                    return st
+            scope = self.enclosing_function(scope)
+        return None
+
+    def _add_entry(self, fn: ast.FunctionDef, info: JitInfo) -> None:
+        old = self.jit_entries.get(fn)
+        if old is not None:
+            old.static_names |= info.static_names
+            old.donated_names |= info.donated_names
+        else:
+            self.jit_entries[fn] = info
+        if info.donated_names:
+            self.local_donors[fn.name] = set(
+                self.jit_entries[fn].donated_names)
+            self.donor_sigs[fn.name] = param_names(fn)
+
+    # ------------------------------------------------------- reachability
+    def enclosing_function(self, node: ast.AST
+                           ) -> Optional[ast.FunctionDef]:
+        cur = self.parents.get(node)
+        while cur is not None:
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                return cur
+            cur = self.parents.get(cur)
+        return None
+
+    def called_names(self, fn: ast.FunctionDef) -> Set[str]:
+        out: Set[str] = set()
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call):
+                t = terminal_name(node.func)
+                if t is not None:
+                    out.add(t)
+        return out
+
+    def _close_reachability(self) -> None:
+        changed = True
+        while changed:
+            changed = False
+            for fn in list(self.reachable):
+                # lexically nested defs trace with their parent
+                for node in ast.walk(fn):
+                    if (isinstance(node,
+                                   (ast.FunctionDef, ast.AsyncFunctionDef))
+                            and node is not fn
+                            and node not in self.reachable):
+                        self.reachable.add(node)
+                        changed = True
+                # same-file top-level callees
+                for name in self.called_names(fn):
+                    cal = self.top_level_fns.get(name)
+                    if cal is not None and cal not in self.reachable:
+                        self.reachable.add(cal)
+                        changed = True
+
+    def extend_reachable(self, global_called: Set[str]) -> None:
+        """Cross-module hop: mark top-level defs named in any jit body."""
+        for name, fn in self.top_level_fns.items():
+            if name in global_called and fn not in self.reachable:
+                self.reachable.add(fn)
+        self._close_reachability()
+
+    def statics_for(self, fn: ast.FunctionDef) -> Set[str]:
+        info = self.jit_entries.get(fn)
+        return info.static_names if info else set()
+
+    # ---------------------------------------------------------- iteration
+    def walk_calls(self) -> Iterator[ast.Call]:
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Call):
+                yield node

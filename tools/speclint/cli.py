@@ -1,0 +1,59 @@
+"""``python -m tools.speclint src tests benchmarks examples`` — exit 0
+iff the tree is clean (suppressed findings don't count; malformed
+suppressions do)."""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import List, Optional
+
+from tools.speclint.registry import rules_table
+from tools.speclint.runner import lint_paths
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="speclint",
+        description="Static enforcement of this repo's JAX/Pallas "
+                    "invariants (jit hygiene, donation, RNG identity, "
+                    "PartitionSpec canonical form, kernel parity).")
+    ap.add_argument("paths", nargs="+",
+                    help="files or directories to lint")
+    ap.add_argument("--format", choices=("text", "json", "github"),
+                    default="text")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated rule ids (default: all)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule table and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for r in rules_table():
+            print(f"{r.rule_id}  [{r.scope:7s}]  {r.summary}")
+        return 0
+
+    rules = ([r.strip() for r in args.rules.split(",")]
+             if args.rules else None)
+    res = lint_paths(args.paths, rules=rules)
+
+    if args.format == "json":
+        print(json.dumps({
+            "files": res.n_files,
+            "suppressed": res.n_suppressed,
+            "findings": [
+                {"file": f.file, "line": f.line, "rule_id": f.rule_id,
+                 "message": f.message} for f in res.findings],
+        }, indent=2))
+    else:
+        for f in res.findings:
+            print(f.format_github() if args.format == "github"
+                  else f.format_text())
+        tail = (f"speclint: {len(res.findings)} finding(s) across "
+                f"{res.n_files} file(s), {res.n_suppressed} suppressed")
+        print(tail, file=sys.stderr)
+    return 1 if res.findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,101 @@
+"""Project-wide pre-pass: parse every scanned file once, aggregate the
+cross-module facts the rules need.
+
+* **donor table** — callable name -> donated parameter names, harvested
+  from every ``jax.jit(..., donate_arg*)`` construction site in the
+  tree.  JX002 resolves call sites against it by terminal name (a
+  ``prefill_lib.prefill_paged_rows(...)`` call matches the
+  ``prefill_paged_rows`` donor wherever it was defined).
+* **global jit-called names** — the cross-module reachability hop
+  (see :mod:`tools.speclint.astutil`).
+* **kernel inventory** — every directory literally named ``kernels``
+  found among the scanned files, with its Pallas entry functions,
+  ``ref.py`` oracle defs and ``ops.py`` dispatch module, for JX006.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+from typing import Dict, List, Optional, Set
+
+from tools.speclint.astutil import FileCtx, terminal_name
+
+
+@dataclasses.dataclass
+class KernelDir:
+    root: str                              # the .../kernels directory
+    entries: Dict[str, "KernelEntry"] = dataclasses.field(
+        default_factory=dict)
+    ref_ctx: Optional[FileCtx] = None
+    ops_ctx: Optional[FileCtx] = None
+
+
+@dataclasses.dataclass
+class KernelEntry:
+    name: str                              # public pallas entry function
+    ctx: FileCtx
+    def_line: int
+    pallas_line: int
+
+
+class Project:
+    def __init__(self, files: Dict[str, str]):
+        """``files``: path -> source for every scanned file."""
+        self.ctxs: Dict[str, FileCtx] = {}
+        self.parse_errors: List[tuple] = []
+        for path, src in sorted(files.items()):
+            try:
+                self.ctxs[path] = FileCtx(path, src)
+            except SyntaxError as e:
+                self.parse_errors.append((path, e.lineno or 1, str(e)))
+        self.donors: Dict[str, Set[str]] = {}
+        self.donor_sigs: Dict[str, List[str]] = {}
+        for ctx in self.ctxs.values():
+            for name, donated in ctx.local_donors.items():
+                self.donors.setdefault(name, set()).update(donated)
+            self.donor_sigs.update(ctx.donor_sigs)
+        # cross-module reachability hop
+        global_called: Set[str] = set()
+        for ctx in self.ctxs.values():
+            for fn in ctx.reachable:
+                global_called |= ctx.called_names(fn)
+        for ctx in self.ctxs.values():
+            ctx.extend_reachable(global_called)
+        self.kernel_dirs: List[KernelDir] = self._kernel_inventory()
+        self.test_sources: Dict[str, str] = {
+            p: s for p, s in files.items()
+            if "tests" in p.split(os.sep)
+            and os.path.basename(p).startswith("test_")}
+
+    # ------------------------------------------------------------- kernels
+    def _kernel_inventory(self) -> List[KernelDir]:
+        dirs: Dict[str, KernelDir] = {}
+        for path, ctx in self.ctxs.items():
+            d = os.path.dirname(path)
+            if os.path.basename(d) != "kernels":
+                continue
+            kd = dirs.setdefault(d, KernelDir(root=d))
+            base = os.path.basename(path)
+            if base == "ref.py":
+                kd.ref_ctx = ctx
+            elif base == "ops.py":
+                kd.ops_ctx = ctx
+            elif base != "__init__.py":
+                for name, fn in ctx.top_level_fns.items():
+                    line = _pallas_line(ctx, fn)
+                    if line is not None and not name.startswith("_"):
+                        kd.entries[name] = KernelEntry(
+                            name=name, ctx=ctx, def_line=fn.lineno,
+                            pallas_line=line)
+        return [dirs[k] for k in sorted(dirs)]
+
+
+def _pallas_line(ctx: FileCtx, fn: ast.FunctionDef) -> Optional[int]:
+    """Line of the first ``pallas_call`` inside ``fn`` (nested kernels
+    included), or None if the function never issues one."""
+    for node in ast.walk(fn):
+        if (isinstance(node, ast.Call)
+                and terminal_name(node.func) == "pallas_call"):
+            return node.lineno
+    return None

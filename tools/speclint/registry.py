@@ -1,0 +1,73 @@
+"""Rule registry and the ``Finding`` record.
+
+Two rule kinds (DESIGN.md §11):
+
+* **file rules** see one parsed module at a time (plus the shared
+  :class:`~tools.speclint.project.Project` for cross-module facts like
+  the donor table) — JX001–JX005, JX007.
+* **project rules** see the whole scanned tree at once — JX006 kernel
+  parity, which has to line up ``kernels/*.py`` against ``ref.py``,
+  ``ops.py`` and the test corpus.
+
+Rules are plain generator functions registered by decorator; the CLI
+runs every registered rule unless ``--rules`` narrows the set.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Iterable, List
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Finding:
+    """One diagnostic: anchored to a physical line so suppressions,
+    ``--format github`` annotations, and editors all agree on where."""
+    file: str
+    line: int
+    rule_id: str
+    message: str
+
+    def format_text(self) -> str:
+        return f"{self.file}:{self.line}: {self.rule_id} {self.message}"
+
+    def format_github(self) -> str:
+        # workflow-command annotation; the message must stay one line
+        msg = self.message.replace("%", "%25").replace("\n", " ")
+        return (f"::error file={self.file},line={self.line},"
+                f"title={self.rule_id}::{msg}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    rule_id: str
+    summary: str
+    check: Callable    # FileCtx -> Iterable[Finding]  (file rules)
+                       # Project -> Iterable[Finding]  (project rules)
+    scope: str         # "file" | "project"
+
+
+FILE_RULES: Dict[str, Rule] = {}
+PROJECT_RULES: Dict[str, Rule] = {}
+
+
+def file_rule(rule_id: str, summary: str):
+    def deco(fn):
+        FILE_RULES[rule_id] = Rule(rule_id, summary, fn, "file")
+        return fn
+    return deco
+
+
+def project_rule(rule_id: str, summary: str):
+    def deco(fn):
+        PROJECT_RULES[rule_id] = Rule(rule_id, summary, fn, "project")
+        return fn
+    return deco
+
+
+def all_rule_ids() -> List[str]:
+    return sorted(set(FILE_RULES) | set(PROJECT_RULES))
+
+
+def rules_table() -> Iterable[Rule]:
+    for rid in all_rule_ids():
+        yield FILE_RULES.get(rid) or PROJECT_RULES[rid]

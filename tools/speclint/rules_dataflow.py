@@ -1,0 +1,339 @@
+"""Dataflow rules: JX002 (use-after-donation) and JX005 (PRNG key
+reuse).  Both walk function bodies statement-by-statement with a small
+branch-aware abstract state: ``if``/``else`` bodies are simulated from a
+copy of the pre-state and merged (so a consume in one arm never
+double-counts against its sibling), loop bodies are visited once with
+the loop recorded (so consuming a key *bound outside the loop* is
+caught as per-iteration reuse).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Tuple
+
+from tools.speclint.astutil import FileCtx, dotted, terminal_name
+from tools.speclint.registry import Finding, file_rule
+
+# ---------------------------------------------------------------------------
+# shared walker scaffolding
+# ---------------------------------------------------------------------------
+
+
+_OPAQUE = (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)
+
+
+def _body_blocks(stmt: ast.stmt) -> List[List[ast.stmt]]:
+    blocks = []
+    for attr in ("body", "orelse", "finalbody"):
+        b = getattr(stmt, attr, None)
+        if b:
+            blocks.append(b)
+    for h in getattr(stmt, "handlers", []) or []:
+        blocks.append(h.body)
+    return blocks
+
+
+def _assigned_names(stmt: ast.stmt) -> List[str]:
+    out: List[str] = []
+    targets: List[ast.expr] = []
+    if isinstance(stmt, ast.Assign):
+        targets = list(stmt.targets)
+    elif isinstance(stmt, (ast.AnnAssign, ast.AugAssign)):
+        targets = [stmt.target]
+    elif isinstance(stmt, (ast.For, ast.AsyncFor)):
+        targets = [stmt.target]
+    for t in targets:
+        for node in ast.walk(t):
+            if isinstance(node, ast.Name):
+                out.append(node.id)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# JX002 — use after donation
+# ---------------------------------------------------------------------------
+
+ExprKey = Tuple  # ("n", name) | ("s", name, const) | ("a", name, attr)
+
+
+def _expr_key(node: ast.expr) -> Optional[ExprKey]:
+    if isinstance(node, ast.Name):
+        return ("n", node.id)
+    if (isinstance(node, ast.Subscript) and isinstance(node.value, ast.Name)
+            and isinstance(node.slice, ast.Constant)):
+        return ("s", node.value.id, node.slice.value)
+    if isinstance(node, ast.Attribute) and isinstance(node.value, ast.Name):
+        return ("a", node.value.id, node.attr)
+    return None
+
+
+def _fmt_key(k: ExprKey) -> str:
+    if k[0] == "n":
+        return k[1]
+    if k[0] == "s":
+        return f"{k[1]}[{k[2]!r}]"
+    return f"{k[1]}.{k[2]}"
+
+
+def _donated_args(call: ast.Call, donors: Dict, sigs: Dict
+                  ) -> List[Tuple[ExprKey, str]]:
+    name = terminal_name(call.func)
+    donated = donors.get(name)
+    if not donated:
+        return []
+    sig = sigs.get(name)
+    out: List[Tuple[ExprKey, str]] = []
+    for i, a in enumerate(call.args):
+        if sig is not None and i < len(sig) and sig[i] in donated:
+            k = _expr_key(a)
+            if k is not None:
+                out.append((k, sig[i]))
+    for kw in call.keywords:
+        if kw.arg in donated:
+            k = _expr_key(kw.value)
+            if k is not None:
+                out.append((k, kw.arg))
+    return out
+
+
+@file_rule("JX002", "read of a buffer after it was donated to a jitted "
+                    "call")
+def check_jx002(ctx: FileCtx) -> Iterator[Finding]:
+    """After ``f(..., buf, ...)`` where ``f`` was built with
+    ``donate_argnums``/``donate_argnames`` covering that parameter,
+    ``buf``'s storage may already be aliased to the output — reading it
+    raises a deleted-buffer error at runtime (or silently reads garbage
+    under some backends).  The check is *exact-expression* scoped: it
+    flags later loads of the very expression that was donated
+    (``tc["k"]``, ``pool``), cleared by rebinding it (or its base
+    name).  Live donors today: ``core/prefill.py`` pools,
+    ``launch/steps.py`` train state."""
+    donors = ctx.project_donors
+    sigs = ctx.project_donor_sigs
+
+    def walk(block: List[ast.stmt], state: Dict[ExprKey, Tuple[str, int]],
+             findings: List[Finding]) -> None:
+        for stmt in block:
+            if isinstance(stmt, _OPAQUE):
+                continue            # nested defs get their own walk
+            blocks = _body_blocks(stmt)
+            header = stmt
+            if blocks:
+                # header expression only (test/iter); then simulate arms
+                header = ast.Expr(value=getattr(
+                    stmt, "test", getattr(stmt, "iter", ast.Constant(0))))
+                header.lineno = stmt.lineno
+            # 1. flag reads of donated exprs in this statement
+            donated_here: List[Tuple[ExprKey, str, int]] = []
+            calls = [n for n in ast.walk(header)
+                     if isinstance(n, ast.Call)]
+            donated_in_stmt = set()
+            for c in calls:
+                for key, pname in _donated_args(c, donors, sigs):
+                    donated_here.append((key, pname, c.lineno))
+                    donated_in_stmt.add(key)
+            for node in ast.walk(header):
+                if not isinstance(node, (ast.Name, ast.Subscript,
+                                         ast.Attribute)):
+                    continue
+                if not isinstance(getattr(node, "ctx", None), ast.Load):
+                    continue
+                key = _expr_key(node)
+                if key is None or key not in state:
+                    continue
+                if key in donated_in_stmt:
+                    continue            # the donating statement itself
+                donor, dline = state[key]
+                findings.append(Finding(
+                    ctx.path, node.lineno, "JX002",
+                    f"`{_fmt_key(key)}` is read after being donated "
+                    f"(param `{donor}`) at line {dline} — its buffer may "
+                    f"already be aliased to the callee's output; rebind "
+                    f"it from the call's result first"))
+            # 2. kills: rebinding the expression or its base name
+            for name in _assigned_names(stmt):
+                for key in [k for k in state if k[1] == name]:
+                    del state[key]
+            if isinstance(stmt, ast.Assign):
+                for t in stmt.targets:
+                    k = _expr_key(t)
+                    if k is not None and k in state:
+                        del state[k]
+            # 3. record fresh donations
+            for key, pname, line in donated_here:
+                if key not in state:        # unless rebound by this stmt
+                    rebound = key[1] in _assigned_names(stmt)
+                    if not rebound:
+                        state[key] = (pname, line)
+            # 4. recurse into compound bodies, merging arm states
+            if blocks:
+                arms = []
+                for b in blocks:
+                    sub = dict(state)
+                    walk(b, sub, findings)
+                    arms.append(sub)
+                merged: Dict[ExprKey, Tuple[str, int]] = {}
+                for a in arms:
+                    merged.update(a)
+                state.clear()
+                state.update(merged)
+
+    out: List[Finding] = []
+    for fn in ctx.top_level_fns.values():
+        walk(fn.body, {}, out)
+    for fn in ctx.functions:
+        if ctx.enclosing_function(fn) is not None \
+                or fn.name in ctx.top_level_fns:
+            continue
+        walk(fn.body, {}, out)      # methods (class-nested defs)
+    yield from out
+
+
+# ---------------------------------------------------------------------------
+# JX005 — PRNG key reuse
+# ---------------------------------------------------------------------------
+
+_DERIVERS = {"split", "fold_in", "PRNGKey", "key", "wrap_key_data",
+             "key_data", "clone"}
+_KEY_MAKERS = {"PRNGKey", "split", "fold_in", "key", "wrap_key_data",
+               "row_keys"}
+_KNOWN_CONSUMERS = {"sample_token", "sample_from_probs", "rejection_sample",
+                    "init_round_state", "init_params"}
+_FRESH, _CONSUMED, _RETIRED = 0, 1, 2
+
+
+def _key_param(name: str) -> bool:
+    return (name in ("key", "rng", "prng_key")
+            or name.endswith(("_key", "_keys")))
+
+
+def _is_key_maker(call: ast.Call, ctx: FileCtx) -> bool:
+    d = dotted(call.func, ctx.aliases) or ""
+    t = terminal_name(call.func)
+    if d.startswith("jax.random.") and t in _KEY_MAKERS:
+        return True
+    return t in ("row_keys", "_request_keys")
+
+
+def _consumer_call(call: ast.Call, ctx: FileCtx) -> Optional[str]:
+    """Name of the consuming fn if this call consumes a key arg."""
+    d = dotted(call.func, ctx.aliases) or ""
+    t = terminal_name(call.func)
+    if d.startswith("jax.random.") and t not in _DERIVERS:
+        return t
+    if t in _KNOWN_CONSUMERS:
+        return t
+    return None
+
+
+@file_rule("JX005", "PRNG key consumed twice without an interleaving "
+                    "split/fold_in")
+def check_jx005(ctx: FileCtx) -> Iterator[Finding]:
+    """Two sampling consumers fed the same key draw *correlated* (often
+    identical) randomness — the bug class PR 4's identity-threaded RNG
+    exists to prevent.  Also caught: consuming a key that was already
+    ``split`` (JAX's own discipline: a split key is dead), and consuming
+    a loop-invariant key inside a loop (every iteration redraws the same
+    numbers).  Derive per-use keys with ``jax.random.split`` /
+    ``fold_in`` (or ``repro.core.spec_decode.row_keys``)."""
+    # state: name -> (status, binding loop stack, detail line)
+    State = Dict[str, Tuple[int, Tuple[int, ...], int]]
+
+    def walk(block: List[ast.stmt], state: State,
+             loops: Tuple[int, ...], findings: List[Finding]) -> None:
+        for stmt in block:
+            if isinstance(stmt, _OPAQUE):
+                continue            # nested defs get their own walk
+            blocks = _body_blocks(stmt)
+            is_loop = isinstance(stmt, (ast.For, ast.While, ast.AsyncFor))
+            header: ast.AST = stmt
+            if blocks:
+                header = ast.Expr(value=getattr(
+                    stmt, "test", getattr(stmt, "iter", ast.Constant(0))))
+                header.lineno = stmt.lineno
+            assigned = set(_assigned_names(stmt))
+            # consumption / retirement events, in source order
+            for call in sorted(
+                    (n for n in ast.walk(header) if isinstance(n, ast.Call)),
+                    key=lambda c: (c.lineno, c.col_offset)):
+                consumer = _consumer_call(call, ctx)
+                t = terminal_name(call.func)
+                d = dotted(call.func, ctx.aliases) or ""
+                argnames = [a.id for a in call.args
+                            if isinstance(a, ast.Name)]
+                argnames += [kw.value.id for kw in call.keywords
+                             if isinstance(kw.value, ast.Name)]
+                if consumer is not None:
+                    for name in argnames:
+                        if name not in state:
+                            continue
+                        status, bloops, line = state[name]
+                        if status == _CONSUMED:
+                            findings.append(Finding(
+                                ctx.path, call.lineno, "JX005",
+                                f"key `{name}` already consumed at line "
+                                f"{line} is consumed again by "
+                                f"`{consumer}` — interleave "
+                                f"jax.random.split/fold_in (or derive "
+                                f"per-use keys via row_keys)"))
+                        elif status == _RETIRED:
+                            findings.append(Finding(
+                                ctx.path, call.lineno, "JX005",
+                                f"key `{name}` was split at line {line} "
+                                f"and is dead, but `{consumer}` consumes "
+                                f"it — use one of the split results"))
+                        elif loops and loops[:len(bloops)] == bloops \
+                                and len(loops) > len(bloops) \
+                                and name not in assigned:
+                            findings.append(Finding(
+                                ctx.path, call.lineno, "JX005",
+                                f"key `{name}` (bound outside this loop "
+                                f"at line {line}) is consumed by "
+                                f"`{consumer}` inside it — every "
+                                f"iteration reuses the same key; fold_in "
+                                f"the loop index"))
+                            state[name] = (_CONSUMED, bloops, call.lineno)
+                        else:
+                            state[name] = (_CONSUMED, bloops, call.lineno)
+                elif t == "split" and d.startswith("jax.random."):
+                    for name in argnames:
+                        if name in state and name not in assigned:
+                            state[name] = (_RETIRED, state[name][1],
+                                           call.lineno)
+            # rebinding from a key maker -> fresh
+            if isinstance(stmt, ast.Assign) \
+                    and isinstance(stmt.value, ast.Call) \
+                    and _is_key_maker(stmt.value, ctx):
+                for t_ in stmt.targets:
+                    nodes = t_.elts if isinstance(t_, ast.Tuple) else [t_]
+                    for n in nodes:
+                        if isinstance(n, ast.Name):
+                            state[n.id] = (_FRESH, loops, stmt.lineno)
+            else:
+                for name in assigned:
+                    state.pop(name, None)
+            # compound bodies
+            if blocks:
+                sub_loops = loops + (id(stmt),) if is_loop else loops
+                arms = []
+                for b in blocks:
+                    sub = dict(state)
+                    walk(b, sub, sub_loops, findings)
+                    arms.append(sub)
+                merged: State = {}
+                for a in arms:
+                    for name, v in a.items():
+                        cur = merged.get(name)
+                        if cur is None or v[0] > cur[0]:
+                            merged[name] = v
+                state.clear()
+                state.update(merged)
+
+    out: List[Finding] = []
+    for fn in ctx.functions:
+        init: Dict[str, Tuple[int, Tuple[int, ...], int]] = {}
+        for a in (fn.args.posonlyargs + fn.args.args + fn.args.kwonlyargs):
+            if _key_param(a.arg):
+                init[a.arg] = (_FRESH, (), fn.lineno)
+        walk(fn.body, init, (), out)
+    yield from out

@@ -1,0 +1,258 @@
+"""Jit-hygiene rules: JX001 (Python control flow on traced values),
+JX004 (``jax.jit`` constructed per call instead of a module-level
+program table), JX007 (bare Python scalar constants closed over into
+traced functions).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, Optional, Set
+
+from tools.speclint.astutil import FileCtx, dotted, terminal_name
+from tools.speclint.registry import Finding, file_rule
+
+# call roots whose results are traced arrays inside jit
+_TRACED_ROOTS = ("jax.numpy.", "jax.lax.", "jax.nn.", "jax.scipy.")
+# array-method calls that concretize a traced value in a bool context
+_ARRAY_BOOL_METHODS = {"any", "all", "item"}
+
+
+def _is_traced_call(node: ast.Call, ctx: FileCtx) -> bool:
+    d = dotted(node.func, ctx.aliases)
+    if d is not None and d.startswith(_TRACED_ROOTS):
+        # shape/dtype probes are trace-time Python values, not tracers
+        t = terminal_name(node.func)
+        if t in ("shape", "ndim", "result_type", "dtype", "iinfo", "finfo"):
+            return False
+        return True
+    t = terminal_name(node.func)
+    return (t in _ARRAY_BOOL_METHODS
+            and isinstance(node.func, ast.Attribute))
+
+
+def _traced_names_in(fn: ast.FunctionDef, ctx: FileCtx) -> Set[str]:
+    """Names assigned from a jnp/lax call anywhere in ``fn`` — one level
+    of value tracking so ``m = jnp.any(x); if m:`` still fires."""
+    out: Set[str] = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            if _is_traced_call(node.value, ctx):
+                for t in node.targets:
+                    if isinstance(t, ast.Name):
+                        out.add(t.id)
+    return out
+
+
+@file_rule("JX001", "Python if/while on a traced value in a "
+                    "jit-reachable function")
+def check_jx001(ctx: FileCtx) -> Iterator[Finding]:
+    """Inside a jit-reachable function, an ``if``/``while`` whose test
+    builds (or names a value built by) a ``jnp``/``lax``/``jax.nn`` call
+    concretizes a tracer — a ``TracerBoolConversionError`` at best, a
+    silent host-side branch baked into one trace at worst.  Use
+    ``jnp.where`` / ``lax.cond`` / ``lax.while_loop``, or hoist the
+    decision to a static argument."""
+    for fn in ctx.reachable:
+        traced = _traced_names_in(fn, ctx)
+        own = {n for n in ast.walk(fn)
+               if isinstance(n, (ast.If, ast.While))
+               and ctx.enclosing_function(n) is fn}
+        for stmt in own:
+            # `x is None` / `x is not None` probe structure, not value —
+            # they are legitimate trace-time Python on any operand
+            identity_operands = set()
+            for node in ast.walk(stmt.test):
+                if isinstance(node, ast.Compare) and all(
+                        isinstance(op, (ast.Is, ast.IsNot))
+                        for op in node.ops):
+                    identity_operands.add(id(node.left))
+                    identity_operands.update(id(c) for c in node.comparators)
+            hit = None
+            for node in ast.walk(stmt.test):
+                if id(node) in identity_operands:
+                    continue
+                if isinstance(node, ast.Call) and _is_traced_call(node, ctx):
+                    hit = ("a traced %s(...) call"
+                           % (dotted(node.func, ctx.aliases)
+                              or terminal_name(node.func)))
+                    break
+                if isinstance(node, ast.Name) and node.id in traced:
+                    hit = f"`{node.id}`, assigned from a traced call"
+                    break
+            if hit is not None:
+                kind = "if" if isinstance(stmt, ast.If) else "while"
+                yield Finding(
+                    ctx.path, stmt.lineno, "JX001",
+                    f"Python `{kind}` on {hit} inside jit-reachable "
+                    f"`{fn.name}` — use jnp.where/lax.cond/lax.while_loop "
+                    f"or make the branch input a static argument")
+
+
+# --------------------------------------------------------------------------
+# JX004
+# --------------------------------------------------------------------------
+
+_FACTORY_PREFIXES = ("make_", "build_", "_make_", "_build_")
+
+
+def _stores_into_module_cache(enclosing: ast.FunctionDef, call: ast.Call,
+                              ctx: FileCtx) -> bool:
+    """The ``_MESH_ROUND_JITS`` discipline: the constructed jit lands in
+    a subscript of a module-level name (directly, or via the local name
+    it was first bound to)."""
+    bound: Set[str] = set()
+    parent = ctx.parents.get(call)
+    if isinstance(parent, ast.Assign):
+        for t in parent.targets:
+            if isinstance(t, ast.Name):
+                bound.add(t.id)
+            if (isinstance(t, ast.Subscript)
+                    and isinstance(t.value, ast.Name)
+                    and t.value.id in ctx.module_names):
+                return True
+    if not bound:
+        return False
+    for node in ast.walk(enclosing):
+        if not isinstance(node, ast.Assign):
+            continue
+        for t in node.targets:
+            if (isinstance(t, ast.Subscript)
+                    and isinstance(t.value, ast.Name)
+                    and t.value.id in ctx.module_names
+                    and isinstance(node.value, ast.Name)
+                    and node.value.id in bound):
+                return True
+    return False
+
+
+def _only_lowered(call: ast.Call, ctx: FileCtx) -> bool:
+    """``jax.jit(f).lower(...)`` — an AOT lowering probe, not a program
+    constructed per call."""
+    parent = ctx.parents.get(call)
+    return isinstance(parent, ast.Attribute) and parent.attr in (
+        "lower", "trace", "eval_shape")
+
+
+def _memoized(fn: ast.FunctionDef, ctx: FileCtx) -> bool:
+    for dec in fn.decorator_list:
+        d = dotted(dec.func if isinstance(dec, ast.Call) else dec,
+                   ctx.aliases)
+        if d in ("functools.lru_cache", "functools.cache", "lru_cache",
+                 "cache"):
+            return True
+    return False
+
+
+@file_rule("JX004", "jax.jit constructed inside a per-call function "
+                    "instead of a module-level program table")
+def check_jx004(ctx: FileCtx) -> Iterator[Finding]:
+    """A ``jax.jit`` built inside a method re-creates the compiled-
+    function wrapper every call: at best it thrashes jit's internal
+    cache, at worst (closures differing per round) it recompiles every
+    round.  Allowed escapes: module level; a ``make_*``/``build_*``
+    factory; an ``lru_cache``-memoized builder; storing the program into
+    a module-level table (the ``_MESH_ROUND_JITS`` discipline); or an
+    immediate ``.lower()`` AOT probe."""
+    for call in ctx.walk_calls():
+        if not ctx._is_jit(call.func):
+            continue
+        fn = ctx.enclosing_function(call)
+        if fn is None:
+            continue                       # module level: the discipline
+        stack_ok = False
+        cur: Optional[ast.FunctionDef] = fn
+        while cur is not None:
+            if (cur.name.startswith(_FACTORY_PREFIXES)
+                    or _memoized(cur, ctx)):
+                stack_ok = True
+                break
+            cur = ctx.enclosing_function(cur)
+        if stack_ok:
+            continue
+        if _only_lowered(call, ctx):
+            continue
+        if _stores_into_module_cache(fn, call, ctx):
+            continue
+        yield Finding(
+            ctx.path, call.lineno, "JX004",
+            f"jax.jit constructed inside `{fn.name}` — hoist to module "
+            f"level, store it in a module-level program table, or make "
+            f"this an explicit make_*/build_* factory (recompile hazard: "
+            f"every call builds a fresh compiled-function wrapper)")
+
+
+# --------------------------------------------------------------------------
+# JX007
+# --------------------------------------------------------------------------
+
+def _local_bindings(fn: ast.FunctionDef, ctx: FileCtx
+                    ) -> Dict[str, ast.Constant]:
+    """name -> bare numeric literal bound at THIS function's level
+    (not inside nested defs)."""
+    out: Dict[str, ast.Constant] = {}
+    for node in ast.walk(fn):
+        if ctx.enclosing_function(node) is not fn:
+            continue
+        if isinstance(node, ast.Assign) \
+                and isinstance(node.value, ast.Constant) \
+                and isinstance(node.value.value, (int, float)) \
+                and not isinstance(node.value.value, bool):
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    out[t.id] = node.value
+    return out
+
+
+def _uses_arrays(fn: ast.FunctionDef, ctx: FileCtx) -> bool:
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call) and _is_traced_call(node, ctx):
+            return True
+    return False
+
+
+@file_rule("JX007", "bare Python numeric constant closed over into a "
+                    "traced function")
+def check_jx007(ctx: FileCtx) -> Iterator[Finding]:
+    """A bare Python scalar captured by a nested traced function bakes a
+    *weakly typed* constant into the jaxpr: its promotion then depends
+    on the surrounding dtypes, and two call paths that bind different
+    values re-trace.  The ``launch/steps.py`` convention: wrap the
+    constant at the binding site — ``jnp.float32(x)`` /
+    ``jnp.asarray(x, dtype)`` — so the dtype is pinned and visible.
+    Ints are only flagged when used arithmetically (shape/axis ints are
+    legitimately Python)."""
+    for fn in ctx.functions:
+        outer = ctx.enclosing_function(fn)
+        if outer is None:
+            continue
+        if fn not in ctx.reachable and not _uses_arrays(fn, ctx):
+            continue
+        consts = _local_bindings(outer, ctx)
+        if not consts:
+            continue
+        params = {a.arg for a in ast.walk(fn)
+                  if isinstance(a, ast.arg)}
+        rebound = {t.id for n in ast.walk(fn) if isinstance(n, ast.Assign)
+                   for t in n.targets if isinstance(t, ast.Name)}
+        flagged: Set[str] = set()
+        for node in ast.walk(fn):
+            if not (isinstance(node, ast.Name)
+                    and isinstance(node.ctx, ast.Load)):
+                continue
+            name = node.id
+            if (name not in consts or name in params or name in rebound
+                    or name in flagged):
+                continue
+            lit = consts[name]
+            if isinstance(lit.value, int):
+                parent = ctx.parents.get(node)
+                if not isinstance(parent, (ast.BinOp, ast.UnaryOp)):
+                    continue               # axis/shape/index int: fine
+            flagged.add(name)
+            yield Finding(
+                ctx.path, node.lineno, "JX007",
+                f"`{name}` (= {lit.value!r}, a bare Python "
+                f"{type(lit.value).__name__}) is closed over into traced "
+                f"`{fn.name}` — bind it as jnp.asarray({lit.value!r}, "
+                f"dtype=...) (launch/steps.py weak-type discipline) so "
+                f"the baked constant has a pinned dtype")

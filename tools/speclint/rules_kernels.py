@@ -1,0 +1,94 @@
+"""JX006 — kernel parity: every Pallas kernel must ship with its oracle
+and be named by a test.
+
+For each public entry function containing a ``pallas_call`` under a
+``kernels/`` directory, require the full contract the repo's kernels
+already follow (DESIGN.md §8):
+
+* an ``ops.py`` dispatch function that calls the entry *and* falls back
+  to a ``ref.py`` oracle (the CPU/test path — model code never calls
+  kernels directly);
+* the oracle(s) that dispatch names actually defined in ``ref.py``;
+* at least one scanned test file that names the entry (the
+  bit-exactness test: kernel output == oracle output).
+
+The test check only runs when test files were scanned at all, so
+linting ``src`` alone never fails for out-of-scope reasons.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Iterator, List, Set
+
+from tools.speclint.astutil import dotted, terminal_name
+from tools.speclint.registry import Finding, project_rule
+
+
+def _oracle_calls(fn: ast.FunctionDef, ctx) -> Set[str]:
+    """Terminal names of ref-module calls inside ``fn``."""
+    out: Set[str] = set()
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Call):
+            continue
+        d = dotted(node.func, ctx.aliases) or ""
+        t = terminal_name(node.func)
+        if t is None:
+            continue
+        root = d.split(".")[0] if d else ""
+        if ".ref." in f".{d}" or root == "ref" or t.endswith("_ref"):
+            out.add(t)
+    return out
+
+
+@project_rule("JX006", "Pallas kernel missing its ref.py oracle, ops.py "
+                       "dispatch, or naming bit-exactness test")
+def check_jx006(project) -> Iterator[Finding]:
+    tests_scanned = bool(project.test_sources)
+    for kd in project.kernel_dirs:
+        ref_defs = (set(kd.ref_ctx.top_level_fns) if kd.ref_ctx else set())
+        for entry in kd.entries.values():
+            where = entry.ctx.path
+            if kd.ops_ctx is None:
+                yield Finding(
+                    where, entry.pallas_line, "JX006",
+                    f"pallas kernel `{entry.name}` has no ops.py in "
+                    f"{kd.root} — model code must go through a "
+                    f"backend-dispatching wrapper, never the kernel")
+                continue
+            dispatchers: List[ast.FunctionDef] = [
+                fn for fn in kd.ops_ctx.top_level_fns.values()
+                if entry.name in kd.ops_ctx.called_names(fn)]
+            if not dispatchers:
+                yield Finding(
+                    where, entry.pallas_line, "JX006",
+                    f"pallas kernel `{entry.name}` is never called from "
+                    f"{kd.ops_ctx.path} — add a dispatch wrapper (kernel "
+                    f"on TPU / interpret, ref oracle elsewhere)")
+            else:
+                oracles: Set[str] = set()
+                for fn in dispatchers:
+                    oracles |= _oracle_calls(fn, kd.ops_ctx)
+                if not oracles:
+                    yield Finding(
+                        kd.ops_ctx.path, dispatchers[0].lineno, "JX006",
+                        f"dispatch `{dispatchers[0].name}` for pallas "
+                        f"kernel `{entry.name}` never falls back to a "
+                        f"ref.py oracle — the jnp reference path is the "
+                        f"contract that makes the kernel testable")
+                missing = sorted(o for o in oracles if o not in ref_defs)
+                for o in missing:
+                    yield Finding(
+                        kd.ops_ctx.path, dispatchers[0].lineno, "JX006",
+                        f"oracle `{o}` named by the dispatch for "
+                        f"`{entry.name}` is not defined in "
+                        f"{kd.ref_ctx.path if kd.ref_ctx else 'ref.py (missing)'}")
+            if tests_scanned:
+                pat = re.compile(rf"\b{re.escape(entry.name)}\b")
+                if not any(pat.search(src)
+                           for src in project.test_sources.values()):
+                    yield Finding(
+                        where, entry.def_line, "JX006",
+                        f"no scanned test names pallas kernel "
+                        f"`{entry.name}` — add a bit-exactness test "
+                        f"(kernel vs ref oracle) that calls it by name")

@@ -1,0 +1,52 @@
+"""JX003 — non-canonical ``PartitionSpec`` literals.
+
+The PR 5 incident class: ``P('data', None)`` and ``P('data')`` describe
+the SAME layout but compare unequal, so a jit signature built from one
+and re-fed the other silently forks the compiled-program cache — the
+serving round recompiled every round until the no-recompile guard
+tripped.  Canonical form (trailing ``None`` dims trimmed) makes the
+hazard unrepresentable; :func:`repro.launch.sharding.canonical_spec` is
+the one constructor allowed to see trailing ``None``s.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from tools.speclint.astutil import FileCtx, dotted, terminal_name
+from tools.speclint.registry import Finding, file_rule
+
+_SPEC_NAMES = {"jax.sharding.PartitionSpec",
+               "jax.experimental.PartitionSpec",
+               "jax.interpreters.pxla.PartitionSpec"}
+
+
+def _is_pspec(call: ast.Call, ctx: FileCtx) -> bool:
+    d = dotted(call.func, ctx.aliases)
+    if d in _SPEC_NAMES:
+        return True
+    return terminal_name(call.func) == "PartitionSpec"
+
+
+@file_rule("JX003", "PartitionSpec literal with trailing None outside "
+                    "canonical_spec")
+def check_jx003(ctx: FileCtx) -> Iterator[Finding]:
+    for call in ctx.walk_calls():
+        if not _is_pspec(call, ctx):
+            continue
+        if not call.args or any(isinstance(a, ast.Starred)
+                                for a in call.args):
+            continue
+        last = call.args[-1]
+        if not (isinstance(last, ast.Constant) and last.value is None):
+            continue
+        fn = ctx.enclosing_function(call)
+        if fn is not None and fn.name == "canonical_spec":
+            continue                 # the one sanctioned constructor
+        yield Finding(
+            ctx.path, call.lineno, "JX003",
+            "PartitionSpec literal ends in None — equal-but-non-"
+            "canonical specs fork jit program caches (the PR 5 silent-"
+            "recompile bug); build it via "
+            "repro.launch.sharding.canonical_spec(...) which trims "
+            "trailing Nones")

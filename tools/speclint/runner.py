@@ -1,0 +1,79 @@
+"""Drive a lint run: discover files, build the :class:`Project`, run
+every registered rule, apply suppressions."""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+# importing the rule modules populates the registry
+from tools.speclint import (rules_dataflow, rules_jit, rules_kernels,  # noqa: F401
+                            rules_spec)
+from tools.speclint.project import Project
+from tools.speclint.registry import (FILE_RULES, PROJECT_RULES, Finding,
+                                     all_rule_ids)
+from tools.speclint.suppress import Suppressions
+from tools.speclint.suppress import apply as apply_suppressions
+
+# lint-bait corpora are excluded from directory EXPANSION only — a path
+# that names a fixture file/dir explicitly is always linted (that is how
+# the linter's own tests drive them)
+_SKIP_DIR_NAMES = {"__pycache__", ".git", "speclint_fixtures"}
+
+
+def discover(paths: Sequence[str]) -> List[str]:
+    out: List[str] = []
+    for p in paths:
+        if os.path.isfile(p):
+            out.append(p)
+            continue
+        for root, dirs, files in os.walk(p):
+            dirs[:] = sorted(d for d in dirs if d not in _SKIP_DIR_NAMES)
+            for f in sorted(files):
+                if f.endswith(".py"):
+                    out.append(os.path.join(root, f))
+    return sorted(set(out))
+
+
+@dataclasses.dataclass
+class LintResult:
+    findings: List[Finding]
+    n_files: int
+    n_suppressed: int
+
+
+def lint_paths(paths: Sequence[str],
+               rules: Optional[Iterable[str]] = None) -> LintResult:
+    files = discover(paths)
+    sources: Dict[str, str] = {}
+    for f in files:
+        with open(f, "r", encoding="utf-8") as fh:
+            sources[f] = fh.read()
+    return lint_sources(sources, rules=rules)
+
+
+def lint_sources(sources: Dict[str, str],
+                 rules: Optional[Iterable[str]] = None) -> LintResult:
+    selected = set(rules) if rules is not None else set(all_rule_ids())
+    project = Project(sources)
+    findings: List[Finding] = [
+        Finding(p, line, "SP002", f"syntax error: {msg}")
+        for p, line, msg in project.parse_errors]
+    for ctx in project.ctxs.values():
+        # rules resolve cross-module donors through the project table
+        ctx.project_donors = project.donors
+        ctx.project_donor_sigs = project.donor_sigs
+        for rule in FILE_RULES.values():
+            if rule.rule_id in selected:
+                findings.extend(rule.check(ctx))
+    for rule in PROJECT_RULES.values():
+        if rule.rule_id in selected:
+            findings.extend(rule.check(project))
+    supp = {p: Suppressions(p, s, set(all_rule_ids()))
+            for p, s in sources.items()}
+    kept, dropped = apply_suppressions(findings, supp)
+    for s in supp.values():
+        kept.extend(s.errors)          # malformed suppressions always fail
+    kept.sort()
+    return LintResult(findings=kept, n_files=len(sources),
+                      n_suppressed=dropped)

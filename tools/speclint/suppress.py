@@ -1,0 +1,72 @@
+"""Inline suppressions: ``# speclint: disable=JX003 (why it is safe)``.
+
+Policy (DESIGN.md §11): a suppression is a *documented exception*, so the
+justification string in parentheses is mandatory — a bare
+``disable=JX00N`` is itself a finding (``SP000``), as is disabling a
+rule id that does not exist (``SP001``).  A suppression applies to the
+physical line it sits on (trailing comment) or, when it is the only
+thing on its line, to the line directly below — the two places a
+reviewer will look for it.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Iterable, List, Set, Tuple
+
+from tools.speclint.registry import Finding
+
+_DIRECTIVE = re.compile(
+    r"#\s*speclint:\s*disable=(?P<ids>[A-Z]{2}\d{3}(?:\s*,\s*[A-Z]{2}\d{3})*)"
+    r"(?P<just>\s*\(.*\))?")
+
+
+class Suppressions:
+    """Per-file map of line -> set of suppressed rule ids."""
+
+    def __init__(self, path: str, source: str, known_ids: Set[str]):
+        self.path = path
+        self.by_line: Dict[int, Set[str]] = {}
+        self.errors: List[Finding] = []
+        lines = source.splitlines()
+        for lineno, text in enumerate(lines, start=1):
+            m = _DIRECTIVE.search(text)
+            if not m:
+                continue
+            ids = {s.strip() for s in m.group("ids").split(",")}
+            just = (m.group("just") or "").strip()
+            if len(just.strip("()").strip()) == 0:
+                self.errors.append(Finding(
+                    path, lineno, "SP000",
+                    "suppression without a justification — write "
+                    "`# speclint: disable=JX00N (reason)`; the reason "
+                    "string is mandatory"))
+                continue
+            unknown = ids - known_ids
+            for rid in sorted(unknown):
+                self.errors.append(Finding(
+                    path, lineno, "SP001",
+                    f"suppression names unknown rule id {rid}"))
+            ids &= known_ids
+            targets = [lineno]
+            # a directive alone on its line guards the next line
+            if text.split("#", 1)[0].strip() == "":
+                targets.append(lineno + 1)
+            for t in targets:
+                self.by_line.setdefault(t, set()).update(ids)
+
+    def active(self, line: int, rule_id: str) -> bool:
+        return rule_id in self.by_line.get(line, set())
+
+
+def apply(findings: Iterable[Finding],
+          supp: Dict[str, Suppressions]) -> Tuple[List[Finding], int]:
+    """Drop suppressed findings; returns (kept, n_suppressed)."""
+    kept: List[Finding] = []
+    dropped = 0
+    for f in findings:
+        s = supp.get(f.file)
+        if s is not None and s.active(f.line, f.rule_id):
+            dropped += 1
+            continue
+        kept.append(f)
+    return kept, dropped
