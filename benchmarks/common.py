@@ -151,6 +151,7 @@ def serve(cfg_t, cfg_d, pt, pd, prompts: List[List[int]], *,
           max_new_per_req: Optional[List[int]] = None,
           paged: bool = False, kv_block_size: int = 16,
           num_kv_blocks: Optional[int] = None,
+          prefix_caching: bool = False,
           pipelined: bool = False, drafter: str = "model",
           mesh: Optional[str] = None
           ) -> Tuple[Dict, List[Request], ServingEngine]:
@@ -182,6 +183,7 @@ def serve(cfg_t, cfg_d, pt, pd, prompts: List[List[int]], *,
                                       paged_kv=paged,
                                       kv_block_size=kv_block_size,
                                       num_kv_blocks=num_kv_blocks,
+                                      prefix_caching=prefix_caching,
                                       pipelined=pipelined),
                         seed=seed, mesh=mesh_obj)
     reqs = [Request(i, prompt=p,

@@ -34,8 +34,11 @@ Re-seeding after an intentional change::
         --json table6.json
     PYTHONPATH=src python -m benchmarks.table7_drafter_matrix --smoke \
         --json table7.json
+    PYTHONPATH=src python -m benchmarks.table8_prefix_cache --smoke \
+        --json table8.json
     PYTHONPATH=src python -m benchmarks.gate collect --table6 table6.json \
-        --table7 table7.json --out benchmarks/baseline.json
+        --table7 table7.json --table8 table8.json \
+        --out benchmarks/baseline.json
 """
 from __future__ import annotations
 
@@ -99,6 +102,34 @@ def collect_table7(t7: Dict) -> List[Dict]:
     return out
 
 
+def collect_table8(t8: Dict) -> List[Dict]:
+    out = []
+    for cell, m in sorted(t8.items()):
+        if cell == "paged_half_shared":
+            out.append(_entry("table8", "half_pool.requests_finished",
+                              m["requests_finished"], 0.0, "exact"))
+            out.append(_entry("table8", "half_pool.kv_pool_blocks",
+                              m["kv_pool_blocks"], 0.0, "exact"))
+            out.append(_entry("table8", "half_pool.tok_per_round",
+                              m["tok_per_round"], 0.10, "higher"))
+            continue
+        # prefill token area and dispatch count are deterministic
+        # functions of the (seeded) mix and the cache plan — bit-stable
+        out.append(_entry("table8", f"{cell}.prefill_tokens_on",
+                          m["prefill_tokens_on"], 0.0, "exact"))
+        out.append(_entry("table8", f"{cell}.prefill_calls_on",
+                          m["prefill_calls_on"], 0.0, "exact"))
+        if m["prefix_cache_hit_rate"] > 0:     # see table7's zero note
+            out.append(_entry("table8", f"{cell}.prefix_cache_hit_rate",
+                              m["prefix_cache_hit_rate"], 0.10, "higher"))
+            out.append(_entry("table8", f"{cell}.prefix_cache_hit_blocks",
+                              m["prefix_cache_hit_blocks"], 0.0, "exact"))
+        # wall-derived: the 2-core WARN escape hatch — report, never fail
+        out.append(_entry("table8", f"{cell}.ttft_speedup",
+                          m["ttft_speedup"], 0.50, "higher", mode="warn"))
+    return out
+
+
 def cmd_collect(args) -> int:
     entries: List[Dict] = []
     if args.table6:
@@ -107,6 +138,9 @@ def cmd_collect(args) -> int:
     if args.table7:
         with open(args.table7) as f:
             entries += collect_table7(json.load(f))
+    if args.table8:
+        with open(args.table8) as f:
+            entries += collect_table8(json.load(f))
     with open(args.out, "w") as f:
         json.dump(entries, f, indent=2, sort_keys=True)
     print(f"[gate] wrote {len(entries)} metrics -> {args.out}")
@@ -193,6 +227,7 @@ def main() -> None:
                        help="flatten smoke JSONs into BENCH_pr.json")
     c.add_argument("--table6", default=None)
     c.add_argument("--table7", default=None)
+    c.add_argument("--table8", default=None)
     c.add_argument("--out", required=True)
     c.set_defaults(fn=cmd_collect)
     d = sub.add_parser("compare", help="diff PR metrics vs the baseline")

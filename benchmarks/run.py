@@ -14,7 +14,7 @@ import time
 import traceback
 
 SUITES = ("table1", "table2", "table3", "table4", "table5", "table6",
-          "table7", "fig6", "fig9", "roofline")
+          "table7", "table8", "fig6", "fig9", "roofline")
 
 
 def main() -> None:
@@ -38,6 +38,8 @@ def main() -> None:
                 from benchmarks.table6_pipeline_overlap import run
             elif suite == "table7":
                 from benchmarks.table7_drafter_matrix import run
+            elif suite == "table8":
+                from benchmarks.table8_prefix_cache import run
             elif suite == "fig6":
                 from benchmarks.fig6_sensitivity import run
             elif suite == "fig9":

@@ -48,7 +48,14 @@ def main():
                          "--xla_force_host_platform_device_count=N first "
                          "(the CI multidevice lane does).  Greedy streams "
                          "are byte-identical to the single-device engine.")
+    ap.add_argument("--prefix-share", type=float, default=0.0, metavar="S",
+                    help="fraction in [0,1) of every prompt that is a "
+                         "common head; >0 serves on the paged pool with "
+                         "prefix caching on (DESIGN.md §12) and reports "
+                         "the hit/COW telemetry per policy")
     args = ap.parse_args()
+    if not 0.0 <= args.prefix_share < 1.0:
+        ap.error("--prefix-share must be in [0, 1)")
 
     label = "untrained (smoke)" if args.smoke else "trained (cached)"
     print(f"== building target/draft pair: {label} ==")
@@ -67,7 +74,27 @@ def main():
     rng = np.random.RandomState(0)
     rng.shuffle(prompts)
 
-    print(f"== serving {len(prompts)} requests, batch=8, "
+    paged_kw = {}
+    batch = 8
+    if args.prefix_share > 0:
+        # half the slots: the first admission wave is cold (it *creates*
+        # the cache entries), later waves hit the registered head — with
+        # batch >= len(prompts) every request admits cold simultaneously
+        batch = 4
+        # shared head sized so head/(head+tail) ~= share, block-aligned
+        # so full blocks are hashable; the paged pool + prefix caching
+        # turn the repeats into cache hits (DESIGN.md §12)
+        bs, tail = 16, 16
+        head_len = int(round(args.prefix_share
+                             / (1 - args.prefix_share) * tail))
+        head_len = max(head_len // bs * bs, bs)
+        head = common.dataset("code").prompts(1, head_len, seed=7)[0]
+        prompts = [head + p for p in prompts]
+        paged_kw = dict(paged=True, kv_block_size=bs, prefix_caching=True)
+        print(f"== prefix share {args.prefix_share:.2f}: common head of "
+              f"{head_len} tokens, paged pool + prefix caching on ==")
+
+    print(f"== serving {len(prompts)} requests, batch={batch}, "
           f"max_new={max_new} ==")
     header = (f"{'policy':16s} {'rounds':>7s} {'BE':>6s} {'accept':>7s} "
               f"{'latency_units':>14s} {'speedup':>8s}")
@@ -79,24 +106,29 @@ def main():
                if args.drafter == "model" else {})
     for policy in ("autoregressive", "static", "adaedl", "dsde", "goodput"):
         m, reqs, eng = common.serve(cfg_t, cfg_d, pt, pd, prompts,
-                                    policy=policy, max_new=max_new, batch=8,
+                                    policy=policy, max_new=max_new, batch=batch,
                                     drafter=args.drafter, mesh=args.mesh,
-                                    **cost_kw)
+                                    **cost_kw, **paged_kw)
         lu = common.latency_units(
             m, ratio if args.drafter == "model" else m["draft_step_cost"])
         if policy == "autoregressive":   # the speedup baseline row
             lu_ar = lu
+        cache = ""
+        if args.prefix_share > 0:
+            cache = (f"  hit_rate={m['prefix_cache_hit_rate']:.2f} "
+                     f"hit_blocks={m['prefix_cache_hit_blocks']:.0f} "
+                     f"cow={m['cow_copies']:.0f}")
         print(f"{policy:16s} {m['rounds']:7d} {m['block_efficiency']:6.2f} "
               f"{m['mean_acceptance']:7.2f} {lu:14.1f} "
-              f"{lu_ar / lu:7.2f}x")
+              f"{lu_ar / lu:7.2f}x{cache}")
 
     print("\n== sync vs pipelined schedule (dsde, identical streams) ==")
     streams = {}
     for pipelined in (False, True):
         m, reqs, eng = common.serve(cfg_t, cfg_d, pt, pd, prompts,
-                                    policy="dsde", max_new=max_new, batch=8,
+                                    policy="dsde", max_new=max_new, batch=batch,
                                     drafter=args.drafter, mesh=args.mesh,
-                                    pipelined=pipelined)
+                                    pipelined=pipelined, **paged_kw)
         streams[pipelined] = [r.output for r in reqs]
         mode = "pipelined" if pipelined else "sync"
         print(f"  {mode:9s}: wall={m['wall_time_s']:.2f}s "
@@ -110,7 +142,7 @@ def main():
     print("\n== DSDE per-round dynamics (first 12 rounds) ==")
     _, _, eng = common.serve(cfg_t, cfg_d, pt, pd, prompts, policy="dsde",
                              drafter=args.drafter, mesh=args.mesh,
-                             max_new=max_new, batch=8)
+                             max_new=max_new, batch=batch, **paged_kw)
     for i, r in enumerate(eng.round_log[:12]):
         print(f"  round {i:2d}: K={r['k']} emitted={r['emitted']:.0f} "
               f"accepted={r['accepted']:.0f}/{r['proposed']:.0f}")

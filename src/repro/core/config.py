@@ -287,6 +287,13 @@ class ServingConfig:
     # (max_batch_size rows of max_seq_len).  Size below that to pack
     # more sequences per byte of HBM than dense rows ever could.
     num_kv_blocks: Optional[int] = None
+    # prefix caching (DESIGN.md §12): content-hash committed full blocks
+    # and share them copy-on-write across sequences with a common prompt
+    # prefix; admission charges only the uncovered suffix and prefill
+    # skips the covered tokens.  Requires paged_kv and a non-recurrent
+    # model family (per-slot lru/conv state cannot be recovered from the
+    # block pool); the engine gates on both.
+    prefix_caching: bool = False
 
     def blocks_per_seq(self) -> int:
         """Block-table width: worst-case blocks one sequence can hold."""

@@ -135,6 +135,29 @@ class Drafter:
         mirror rows inherit the target's KV layouts (DESIGN.md §5)."""
         return cache
 
+    def prefill_tail(self, params_d: PyTree, cache: PyTree,
+                     idx: jax.Array, tokens: jax.Array,
+                     prompt_lens: jax.Array, tail_tokens: jax.Array,
+                     start_lens: jax.Array, tail_lens: jax.Array,
+                     cow_src: jax.Array, cow_dst: jax.Array, *,
+                     max_len: int, table_rows: Optional[jax.Array] = None,
+                     plan=None) -> PyTree:
+        """Warm (prefix-cache) admission, DESIGN.md §12: the group's
+        ``[0, start_lens)`` prefixes are already resident in shared pool
+        blocks.  ``tokens`` / ``prompt_lens`` are the FULL prefixes —
+        token-history drafters need every token whatever the KV
+        coverage — while ``tail_tokens [R, tail_bucket]`` / ``tail_lens``
+        hold only the uncovered suffixes and ``cow_src`` / ``cow_dst``
+        the group's copy-on-write block pairs (sentinel = pool size).
+        The default absorbs the full prefix through :meth:`prefill`,
+        which is exact for every drafter without a mirrored KV pool;
+        mirroring drafters override this with a tail program over their
+        own pools (their shared-prefix KV is already in the shared
+        blocks, written by this same drafter when the prefix was first
+        committed)."""
+        return self.prefill(params_d, cache, idx, tokens, prompt_lens,
+                            max_len=max_len, table_rows=None, plan=plan)
+
     def propose(self, params_t: PyTree, params_d: PyTree,
                 draft_cache: PyTree, target_cache: PyTree,
                 pending: jax.Array, k: int, sl_i: jax.Array,

@@ -112,8 +112,11 @@ class ModelDrafter(Drafter):
         assert self.cfg_d is not None, "ModelDrafter needs a draft config"
         if paged is not None:
             n_blocks, bs = paged
+            # the scheduler owns the pool-vs-max_len feasibility policy
+            # (prefix-cached pools may be smaller than one max-len seq)
             return cache_lib.paged_cache_struct(self.cfg_d, batch, max_len,
-                                                n_blocks, bs, dtype)
+                                                n_blocks, bs, dtype,
+                                                require_full_seq=False)
         return cache_lib.cache_struct(self.cfg_d, batch, max_len, dtype)
 
     def prefill(self, params_d: PyTree, cache: PyTree, idx: jax.Array,
@@ -133,6 +136,26 @@ class ModelDrafter(Drafter):
         rows, _ = prefill_lib.prefill_rows(params_d, self.cfg_d, tokens,
                                            prompt_lens, max_len, plan=plan)
         return prefill_lib.set_slots(cache, rows, idx)
+
+    def prefill_tail(self, params_d: PyTree, cache: PyTree,
+                     idx: jax.Array, tokens: jax.Array,
+                     prompt_lens: jax.Array, tail_tokens: jax.Array,
+                     start_lens: jax.Array, tail_lens: jax.Array,
+                     cow_src: jax.Array, cow_dst: jax.Array, *,
+                     max_len: int, table_rows=None, plan=None) -> PyTree:
+        # warm admission over the mirrored pool: the draft KV of the
+        # shared prefix is already in the shared blocks (written by this
+        # drafter when that prefix was first committed), so the mirror
+        # runs the same tail program as the target — including the
+        # copy-on-write pairs, which name the same block ids on both
+        # pools by the mirroring invariant
+        assert table_rows is not None, (
+            "warm admission requires the paged draft mirror")
+        rows, _ = prefill_lib.prefill_paged_tail(
+            params_d, self.cfg_d, cache["k"], cache["v"], cache["kv_pos"],
+            table_rows, tail_tokens, start_lens, tail_lens, cow_src,
+            cow_dst, plan=plan)
+        return prefill_lib.scatter_paged_rows(cache, rows, idx)
 
     def propose(self, params_t: PyTree, params_d: PyTree,
                 draft_cache: PyTree, target_cache: PyTree,

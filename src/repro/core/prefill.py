@@ -8,7 +8,10 @@ matter which component issues the call.
 
 ``prefill_rows`` builds fresh dense cache rows; ``prefill_paged_rows``
 writes straight into allocated pool blocks through a multi-row
-block-table view (pools donated — admission never copies the pool).
+block-table view (pools donated — admission never copies the pool);
+``prefill_paged_tail`` is its prefix-cache sibling — it computes only
+the non-cached tail of each row, starting at the cached-coverage
+offset, after running the round's batched copy-on-write block copies.
 ``set_slots`` scatters a batch-R row group into the batched cache at R
 slots with one fused scatter per leaf.
 """
@@ -101,6 +104,52 @@ def prefill_paged_rows(params: PyTree, cfg: ModelConfig, pool_k: jax.Array,
     cache = cache_lib.paged_prefill_view(cfg, pool_k, pool_v, kv_pos,
                                          table_rows)
     cache, last = prefill_forward(params, cfg, cache, tokens, prompt_lens)
+    if plan is not None:
+        cache = plan.cache_constraints(cache)
+        last = jax.lax.with_sharding_constraint(last, plan.replicated())
+    return cache, last
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "plan"),
+                   donate_argnames=("pool_k", "pool_v", "kv_pos"))
+def prefill_paged_tail(params: PyTree, cfg: ModelConfig, pool_k: jax.Array,
+                       pool_v: jax.Array, kv_pos: jax.Array,
+                       table_rows: jax.Array, tokens: jax.Array,
+                       start_lens: jax.Array, tail_lens: jax.Array,
+                       cow_src: jax.Array, cow_dst: jax.Array, plan=None
+                       ) -> Tuple[PyTree, jax.Array]:
+    """Partial-prefix prefill (DESIGN.md §12): one multi-row program that
+    computes only the non-cached tail of each request.
+
+    Row ``r`` starts at its cached coverage ``start_lens[r]`` — the view
+    is built with the per-row length preset, so the decode-mode forward
+    positions the ``tokens [R, bucket]`` tail at ``start + arange`` and
+    attends over the gathered pool view, i.e. straight THROUGH the
+    shared prefix blocks the scheduler mapped into ``table_rows``.
+    ``tail_lens`` masks the right padding out of the KV writes
+    (``write_mask``), and the batched copy-on-write pairs
+    ``cow_src/cow_dst [R]`` (sentinel ``num_blocks`` = no copy) run
+    first so a row whose tail rewrites the last position of a shared
+    block lands in its private fork.  Cold rows degrade gracefully
+    (start 0, tail = full prompt) but the engine keeps them on
+    :func:`prefill_paged_rows` so the cold path stays program-identical
+    with the pre-cache engine.  Recurrent families never reach here —
+    the engine gates prefix caching on attention-only stacks, whose
+    cache state is exactly the pool the shared blocks live in.
+
+    The pools are donated and the returned view is scattered back with
+    :func:`scatter_paged_rows`, same as the cold entry point."""
+    pool_k, pool_v, kv_pos = cache_lib.copy_blocks(pool_k, pool_v, kv_pos,
+                                                   cow_src, cow_dst)
+    cache = cache_lib.paged_prefill_view(cfg, pool_k, pool_v, kv_pos,
+                                         table_rows, lengths=start_lens)
+    t = tokens.shape[1]
+    write_mask = jnp.arange(t)[None] < tail_lens[:, None]
+    logits, cache, _ = forward(params, cfg, tokens, cache=cache,
+                               mode="decode", write_mask=write_mask)
+    cache["length"] = (start_lens + tail_lens).astype(jnp.int32)
+    rows = jnp.arange(tokens.shape[0])
+    last = logits[rows, jnp.maximum(tail_lens - 1, 0)]
     if plan is not None:
         cache = plan.cache_constraints(cache)
         last = jax.lax.with_sharding_constraint(last, plan.replicated())

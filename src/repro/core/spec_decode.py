@@ -319,8 +319,12 @@ def init_round_state(cfg_t: ModelConfig, cfg_d: Optional[ModelConfig],
         eos_id=jnp.full((batch,), -1, jnp.int32))
     if paged is not None:
         n_blocks, bs = paged
+        # the serving scheduler owns the pool-vs-max_len feasibility
+        # policy (prefix-cached pools may be smaller than one max-len
+        # sequence); the data plane only needs drop-semantics
         t_cache = cache_lib.paged_cache_struct(cfg_t, batch, max_len,
-                                               n_blocks, bs, dtype)
+                                               n_blocks, bs, dtype,
+                                               require_full_seq=False)
     else:
         t_cache = cache_lib.cache_struct(cfg_t, batch, max_len, dtype,
                                          enc_len=enc_len)

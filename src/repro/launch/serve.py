@@ -39,6 +39,12 @@ def main() -> None:
     ap.add_argument("--paged", action="store_true",
                     help="serve from the block-paged KV pool at half the "
                          "dense engine's KV bytes (DESIGN.md §4)")
+    ap.add_argument("--prefix-share", type=float, default=0.0,
+                    metavar="S",
+                    help="demo only: fraction in [0,1) of every prompt "
+                         "that is a common head; >0 implies --paged and "
+                         "turns on refcounted prefix caching "
+                         "(DESIGN.md §12)")
     ap.add_argument("--pipelined", action="store_true",
                     help="plan/dispatch/collect pipelined schedule: "
                          "reconcile the host one round behind the device "
@@ -76,12 +82,16 @@ def main() -> None:
                 lambda a, b: a + 0.03 * b, pt, noise), cfg
         else:                       # model-free drafter: no second model
             pd, cfg_d = None, None
+        caching = args.prefix_share > 0
+        if not 0.0 <= args.prefix_share < 1.0:
+            ap.error("--prefix-share must be in [0, 1)")
         serving = ServingConfig(max_batch_size=4, max_seq_len=256,
                                 pipelined=args.pipelined)
-        if args.paged:
+        if args.paged or caching:     # caching lives on the paged pool
             serving = ServingConfig(
                 max_batch_size=4, max_seq_len=256, paged_kv=True,
                 kv_block_size=16, pipelined=args.pipelined,
+                prefix_caching=caching,
                 num_kv_blocks=4 * (256 // 16) // 2)   # 50% of dense bytes
         mesh = None
         if args.mesh:
@@ -89,7 +99,16 @@ def main() -> None:
             mesh = serving_mesh(args.mesh)
         eng = ServingEngine(pt, cfg, pd, cfg_d, spec, serving, mesh=mesh)
         rng = np.random.RandomState(0)
-        reqs = [Request(i, prompt=rng.randint(
+        head = []
+        if caching:
+            # shared head sized so head/(head+tail) ~= share, rounded to
+            # whole KV blocks so the full blocks are hash-addressable
+            tail = 13                 # mean of the per-request draw below
+            n = int(round(args.prefix_share
+                          / (1 - args.prefix_share) * tail))
+            n = max(n // 16 * 16, 16)
+            head = rng.randint(0, cfg.vocab_size, size=n).tolist()
+        reqs = [Request(i, prompt=head + rng.randint(
             0, cfg.vocab_size, size=rng.randint(6, 20)).tolist(),
             max_new_tokens=args.max_new) for i in range(args.requests)]
         m = eng.run(reqs)

@@ -163,7 +163,8 @@ def pool_buf_shape(cfg: ModelConfig, num_blocks: int, block_size: int,
 
 def paged_cache_struct(cfg: ModelConfig, batch: int, max_len: int,
                        num_blocks: int, block_size: int,
-                       dtype=jnp.bfloat16, abstract: bool = False) -> CacheT:
+                       dtype=jnp.bfloat16, abstract: bool = False,
+                       require_full_seq: bool = True) -> CacheT:
     """Block-paged cache pytree: shared KV pool + per-sequence tables.
 
     ``k``/``v`` are pools ``[L, n_blocks, bs, KV, D]`` (the same leading
@@ -171,10 +172,16 @@ def paged_cache_struct(cfg: ModelConfig, batch: int, max_len: int,
     pool-level, ``block_table [B, max_blocks]`` maps logical to physical
     blocks (-1 = unallocated).  Recurrent state (hybrid lru/conv) stays
     dense per-slot.
+
+    ``require_full_seq`` asserts the pool holds at least one max-length
+    sequence — the LIFO-preemption convergence guarantee.  Prefix-cached
+    serving relaxes it (DESIGN.md §12): the scheduler's coverage-aware
+    pool-feasibility check owns convergence there, and the data plane
+    itself only needs drop-semantics, which hold for any pool size.
     """
     if not supports_paged(cfg):
         raise ValueError(f"family {cfg.family!r} has no paged KV layout")
-    assert num_blocks * block_size >= max_len, (
+    assert not require_full_seq or num_blocks * block_size >= max_len, (
         "pool smaller than one max-length sequence: "
         f"{num_blocks}x{block_size} < {max_len}")
 
@@ -209,7 +216,8 @@ def paged_cache_struct(cfg: ModelConfig, batch: int, max_len: int,
 
 def paged_prefill_view(cfg: ModelConfig, pool_k: jax.Array,
                        pool_v: jax.Array, kv_pos: jax.Array,
-                       table_rows: jax.Array) -> CacheT:
+                       table_rows: jax.Array,
+                       lengths: Optional[jax.Array] = None) -> CacheT:
     """Batch-R paged cache view over the *shared* pools, for prefilling a
     group of requests straight into their allocated blocks in ONE
     multi-row program (``table_rows [R, max_blocks]``, one row per
@@ -217,9 +225,16 @@ def paged_prefill_view(cfg: ModelConfig, pool_k: jax.Array,
     writes route through its own block-table row, so the rows land in
     disjoint blocks; per-sequence leaves (length, block table, hybrid
     recurrent rows) are fresh batch-R rows the engine scatters back into
-    the batched cache afterwards."""
+    the batched cache afterwards.
+
+    ``lengths [R]`` presets the committed length per row (zeros when
+    omitted).  The prefix-cache tail prefill uses it to start a row at
+    its cached-coverage offset, so decode-mode positions and attention
+    see the shared prefix blocks as already-committed KV."""
     rows = table_rows.shape[0]
-    c: CacheT = {"length": jnp.zeros((rows,), jnp.int32),
+    length = (jnp.zeros((rows,), jnp.int32) if lengths is None
+              else lengths.astype(jnp.int32))
+    c: CacheT = {"length": length,
                  "k": pool_k, "v": pool_v, "kv_pos": kv_pos,
                  "block_table": table_rows}
     if cfg.family == "hybrid":
@@ -313,6 +328,24 @@ def reset_blocks(kv_pos: jax.Array, block_ids) -> jax.Array:
     could satisfy ``0 <= kv_pos <= q`` for its new owner."""
     ids = jnp.asarray(block_ids, jnp.int32)
     return kv_pos.at[ids].set(-1)
+
+
+def copy_blocks(pool_k: jax.Array, pool_v: jax.Array, kv_pos: jax.Array,
+                src: jax.Array, dst: jax.Array
+                ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Batched device-side block copy (copy-on-write fork, DESIGN.md §12):
+    every KV byte and kv_pos entry of block ``src[i]`` lands in block
+    ``dst[i]``.  Pairs are padded with the sentinel id ``num_blocks``:
+    sentinel writes drop (same out-of-range discipline as
+    :func:`write_kv_paged`) and the clamped sentinel gathers feed only
+    those dropped writes, so one fixed pair width serves every round."""
+    src = jnp.asarray(src, jnp.int32)
+    dst = jnp.asarray(dst, jnp.int32)
+    read = jnp.minimum(src, pool_k.shape[1] - 1)
+    pool_k = pool_k.at[:, dst].set(pool_k[:, read], mode="drop")
+    pool_v = pool_v.at[:, dst].set(pool_v[:, read], mode="drop")
+    kv_pos = kv_pos.at[dst].set(kv_pos[read], mode="drop")
+    return pool_k, pool_v, kv_pos
 
 
 def write_kv(k_buf: jax.Array, v_buf: jax.Array, k_new: jax.Array,

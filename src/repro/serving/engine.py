@@ -49,7 +49,7 @@ from repro.core.drafters import build_drafter
 from repro.core.policies import build_policy
 from repro.core.sampling import sample_token
 from repro.models import cache as cache_lib
-from repro.models.transformer import model_specs
+from repro.models.transformer import has_recurrent_state, model_specs
 from repro.serving.request import Request, RequestState
 from repro.serving.scheduler import LookaheadScheduler
 
@@ -138,13 +138,25 @@ class ServingEngine:
                 f"({cfg_target.family}, "
                 f"{cfg_draft.family if cfg_draft else None}) has no paged "
                 "KV layout (supported: dense/moe/vlm/hybrid)")
+        # prefix caching (DESIGN.md §12): effective only on the paged
+        # data plane with attention-only families — recurrent per-slot
+        # state (hybrid lru/conv, ssm) cannot be recovered from shared
+        # pool blocks, so a cache-hit admission could not reconstruct
+        # it.  When the drafter mirrors the pool its family must be
+        # attention-only too.
+        self.prefix_caching = bool(
+            serving.prefix_caching and self.paged
+            and not has_recurrent_state(cfg_target)
+            and (not drafter.mirrors_kv()
+                 or not has_recurrent_state(cfg_draft)))
         # model-free drafters have no mirrored draft pool: the mirror's
         # block budget returns to the target pool, so the same
         # ServingConfig admits proportionally more in-flight sequences
         # (the per-sequence charge halves, DESIGN.md §9)
         self.scheduler = LookaheadScheduler(serving, spec,
                                             policy=self.policy,
-                                            kv_mirror=drafter.mirrors_kv())
+                                            kv_mirror=drafter.mirrors_kv(),
+                                            prefix_cache=self.prefix_caching)
         self.key = jax.random.PRNGKey(seed)
         b = serving.max_batch_size
         paged_arg = ((self.scheduler.kv_blocks_total(),
@@ -195,6 +207,12 @@ class ServingEngine:
                                         # dynamic-shape runtime would run)
         self.emitted_total = 0
         self.round_log: List[Dict[str, float]] = []
+        # prefix-cache watermarks: the scheduler keeps lifetime totals,
+        # the round log wants per-round deltas
+        self._hit_blocks_logged = 0
+        self._cow_logged = 0
+        self._prefix_tok_logged = 0
+        self._prefix_hit_tok_logged = 0
 
     # ------------------------------------------------------------------ rng
     def _request_keys(self, reqs: List[Request]) -> jax.Array:
@@ -353,30 +371,53 @@ class ServingEngine:
         if not admitted:
             return
         now = time.monotonic()
-        groups: Dict[int, List[Request]] = {}
+        # warm (cache-hit) requests group by TAIL bucket — the program
+        # their prefill actually runs — and separately from cold ones,
+        # which stay on the cold entry point byte- and program-count-
+        # identical with the pre-cache engine
+        groups: Dict[Tuple[bool, int], List[Request]] = {}
         for req in admitted:
             if req.first_dispatch_time is None:
                 req.first_dispatch_time = now
-            b = _bucket(len(req.prefill_tokens()),
-                        cap=self.serving.max_seq_len)
-            groups.setdefault(b, []).append(req)
-        for bucket in sorted(groups):
-            self._prefill_group(groups[bucket], bucket)
+            warm = req.prefill_start > 0
+            n = len(req.prefill_tokens()) - req.prefill_start
+            b = _bucket(n, cap=self.serving.max_seq_len)
+            groups.setdefault((warm, b), []).append(req)
+        for warm, bucket in sorted(groups):
+            self._prefill_group(groups[(warm, bucket)], bucket, warm=warm)
 
-    def _prefill_group(self, reqs: List[Request], bucket: int) -> None:
+    def _prefill_group(self, reqs: List[Request], bucket: int,
+                       warm: bool = False) -> None:
+        """One multi-row prefill program for a same-bucket group.
+
+        Cold groups (``warm=False``) run the pre-cache entry points
+        unchanged.  Warm groups (every row has ``prefill_start > 0``
+        cached tokens) are bucketed by TAIL length and run the
+        partial-prefix entry point: the tail program starts each row at
+        its coverage offset, executes the group's batched copy-on-write
+        block copies first, and only computes the uncovered suffix — the
+        TTFT/FLOPs win prefix caching exists for (DESIGN.md §12)."""
         r = len(reqs)
         slots = [req.slot for req in reqs]
         idx = jnp.asarray(slots, jnp.int32)
         toks_np = np.zeros((r, bucket), np.int32)
         plens = np.zeros((r,), np.int32)
+        starts = np.zeros((r,), np.int32)
+        tails = np.zeros((r,), np.int32)
         readmit = np.zeros((r,), bool)
         budgets = np.zeros((r,), np.int32)
         eos = np.full((r,), -1, np.int32)
         pend_host = np.zeros((r,), np.int32)
+        prefixes: List[List[int]] = []
         for i, req in enumerate(reqs):
             prefix = req.prefill_tokens()
-            toks_np[i, :len(prefix)] = prefix
+            prefixes.append(prefix)
+            start = req.prefill_start if warm else 0
+            tail = prefix[start:]
+            toks_np[i, :len(tail)] = tail      # cold: the full prefix
             plens[i] = len(prefix)
+            starts[i] = start
+            tails[i] = len(tail)
             # recompute-on-readmit (preemption): the last emitted token
             # IS the pending token; re-sampling would fork the RNG
             # stream and (at temperature > 0) the output
@@ -391,17 +432,43 @@ class ServingEngine:
             req.cache_len = len(prefix)
         toks = jnp.asarray(toks_np)
         plen_j = jnp.asarray(plens)
+        starts_j = jnp.asarray(starts)
+        tails_j = jnp.asarray(tails)
         rows_j = None
+        cow_src_j = cow_dst_j = None
+        if warm:
+            # <=1 COW pair per row by construction: only a full
+            # block-aligned hit forks (the last shared block, whose final
+            # position the tail recomputes).  Sentinel = pool size, the
+            # write-drop discipline of cache_lib.copy_blocks.
+            nb = self.scheduler.kv_blocks_total()
+            cow_src = np.full((r,), nb, np.int32)
+            cow_dst = np.full((r,), nb, np.int32)
+            for i, req in enumerate(reqs):
+                if req.cow_pairs:
+                    cow_src[i], cow_dst[i] = req.cow_pairs[0]
+            cow_src_j = jnp.asarray(cow_src)
+            cow_dst_j = jnp.asarray(cow_dst)
         if self.paged:
             rows_np = [self._table_row(req) for req in reqs]
-            alloc_ids = [b for req in reqs for b in req.block_ids]
+            # reset only PRIVATE fresh blocks: shared cache-hit blocks
+            # hold live committed KV other sequences still read, and COW
+            # destinations take their kv_pos from the device-side block
+            # copy, which runs inside the tail program after this reset
+            alloc_ids = [b for req in reqs for b in req.fresh_block_ids]
             self._sync_block_tables(list(zip(slots, rows_np)), alloc_ids)
             st = self.state
             tc = dict(st.target_cache)
             rows_j = jnp.asarray(np.stack(rows_np), jnp.int32)
-            rows_t, last_t = prefill_lib.prefill_paged_rows(
-                self.pt, self.cfg_t, tc["k"], tc["v"], tc["kv_pos"],
-                rows_j, toks, plen_j, plan=self._plan)
+            if warm:
+                rows_t, last_t = prefill_lib.prefill_paged_tail(
+                    self.pt, self.cfg_t, tc["k"], tc["v"], tc["kv_pos"],
+                    rows_j, toks, starts_j, tails_j, cow_src_j, cow_dst_j,
+                    plan=self._plan)
+            else:
+                rows_t, last_t = prefill_lib.prefill_paged_rows(
+                    self.pt, self.cfg_t, tc["k"], tc["v"], tc["kv_pos"],
+                    rows_j, toks, plen_j, plan=self._plan)
             tc = prefill_lib.scatter_paged_rows(tc, rows_t, idx)
         else:
             st = self.state
@@ -416,12 +483,27 @@ class ServingEngine:
         rows_mask = jnp.zeros((self.serving.max_batch_size,),
                               bool).at[idx].set(True)
         dc = self.drafter.reset_rows(st.draft_cache, rows_mask)
-        dc = self.drafter.prefill(
-            self.pd, dc, idx, toks, plen_j,
-            max_len=self.serving.max_seq_len,
-            table_rows=(rows_j if (self.paged and self.drafter.mirrors_kv())
-                        else None),
-            plan=self._plan)
+        mirror_rows = (rows_j if (self.paged and self.drafter.mirrors_kv())
+                       else None)
+        if warm:
+            # token-history drafters need the FULL prefix whatever the
+            # KV coverage; mirroring drafters run the tail program over
+            # their own pools and ignore it
+            fbucket = _bucket(int(plens.max()), cap=self.serving.max_seq_len)
+            full_np = np.zeros((r, fbucket), np.int32)
+            for i, prefix in enumerate(prefixes):
+                full_np[i, :len(prefix)] = prefix
+            dc = self.drafter.prefill_tail(
+                self.pd, dc, idx, jnp.asarray(full_np), plen_j,
+                toks, starts_j, tails_j, cow_src_j, cow_dst_j,
+                max_len=self.serving.max_seq_len,
+                table_rows=mirror_rows, plan=self._plan)
+        else:
+            dc = self.drafter.prefill(
+                self.pd, dc, idx, toks, plen_j,
+                max_len=self.serving.max_seq_len,
+                table_rows=mirror_rows,
+                plan=self._plan)
         # pending token per row: sampled at prefill for fresh requests
         # (per-request keys — schedule/grouping invariant), the
         # already-emitted last token for readmits
@@ -459,6 +541,15 @@ class ServingEngine:
             done=st.done.at[idx].set(done0),
             tokens_budget=st.tokens_budget.at[idx].set(budgets_j),
             eos_id=st.eos_id.at[idx].set(eos_j))
+        for req in reqs:
+            # COW sources are safe to reclaim once the copy is enqueued
+            # (device program order), and the prompt's full blocks are
+            # committed-by-enqueue too: publish them so the NEXT
+            # admission wave can share them
+            self.scheduler.release_cow_sources(req)
+            req.fresh_block_ids = []
+            req.cow_pairs = []
+            self.scheduler.register_prefix(req)
         fresh = [(i, req) for i, req in enumerate(reqs) if not readmit[i]]
         if not fresh:
             return
@@ -635,6 +726,13 @@ class ServingEngine:
                 if fin[slot]:
                     req.state = RequestState.FINISHED
                     req.finish_time = now
+                if not displaced:
+                    # decode extended the committed prefix: publish any
+                    # newly completed full blocks.  Done BEFORE release so
+                    # a finishing request's blocks drop to the evictable
+                    # (warm) list still indexed — the cache survives its
+                    # contributors.
+                    self.scheduler.register_prefix(req)
             if req.done:
                 if displaced:
                     # finished while sitting in the requeue: it must not
@@ -697,6 +795,22 @@ class ServingEngine:
         round_rec["draft_kv_blocks_in_use"] = (
             round_rec["kv_blocks_in_use"] if self.drafter.mirrors_kv()
             else 0.0)
+        # prefix-cache deltas since the previous round's log entry
+        # (admissions land between collects, so the deltas attribute each
+        # wave's hits/copies to the round that carried it)
+        sch = self.scheduler
+        round_rec["kv_blocks_cached"] = float(sch.kv_blocks_cached())
+        round_rec["prefix_cache_hit_blocks"] = float(
+            sch.prefix_hit_blocks_total - self._hit_blocks_logged)
+        self._hit_blocks_logged = sch.prefix_hit_blocks_total
+        round_rec["cow_copies"] = float(
+            sch.cow_copies_total - self._cow_logged)
+        self._cow_logged = sch.cow_copies_total
+        d_tok = sch.prefix_tokens_total - self._prefix_tok_logged
+        d_hit = sch.prefix_hit_tokens_total - self._prefix_hit_tok_logged
+        round_rec["prefix_cache_hit_rate"] = (d_hit / d_tok) if d_tok else 0.0
+        self._prefix_tok_logged = sch.prefix_tokens_total
+        self._prefix_hit_tok_logged = sch.prefix_hit_tokens_total
         round_rec["host_blocked_s"] = host_blocked
         # per-round cadence: with a successor round already in flight,
         # dispatch-to-dispatch (so pipelined per-round walls sum to the
@@ -798,4 +912,22 @@ class ServingEngine:
                 (r["kv_blocks_in_use"] for r in self.round_log),
                 default=0.0)),
             "kv_pool_blocks": float(self.scheduler.kv_blocks_total()),
+            # pool-pressure aggregates + prefix-cache lifetime telemetry
+            # (satellite of DESIGN.md §12): hit rate is token-weighted
+            # over every (re)admission prefill the run performed
+            "kv_pool_utilization_mean": (float(np.mean(
+                [r["kv_pool_utilization"] for r in self.round_log]))
+                if self.round_log else 0.0),
+            "kv_pool_utilization_peak": float(max(
+                (r["kv_pool_utilization"] for r in self.round_log),
+                default=0.0)),
+            "prefix_cache_hit_blocks": float(
+                self.scheduler.prefix_hit_blocks_total),
+            "prefix_cache_hit_rate": (
+                self.scheduler.prefix_hit_tokens_total
+                / max(self.scheduler.prefix_tokens_total, 1)),
+            "cow_copies": float(self.scheduler.cow_copies_total),
+            "prefix_cache_evictions": float(
+                self.scheduler.allocator.evictions
+                if self.scheduler.allocator is not None else 0.0),
         }

@@ -12,7 +12,8 @@ class RequestState(enum.Enum):
     RUNNING = "running"
     FINISHED = "finished"
     # oversize at admission: can never fit prompt + max_new_tokens +
-    # the policy's worst-case lookahead inside max_seq_len.  Terminal;
+    # the policy's worst-case lookahead inside max_seq_len, or (paged,
+    # net of cached-prefix coverage) inside the block pool.  Terminal;
     # surfaced from ``ServingEngine.step`` and counted in the run summary.
     REJECTED = "rejected"
 
@@ -46,6 +47,22 @@ class Request:
     cache_len: int = 0                 # committed tokens in the KV cache
     preemptions: int = 0               # evict-and-requeue count
     admit_seq: int = -1                # admission order (LIFO preemption key)
+    # --- prefix-cache fields (DESIGN.md §12) --------------------------------
+    # first token the (re)admission prefill must actually compute; the
+    # [0, prefill_start) prefix is served from shared cached blocks
+    prefill_start: int = 0
+    # admission-transient plumbing the engine consumes at prefill time:
+    # blocks whose kv_pos must be reset (private, not shared) and
+    # (src, dst) copy-on-write block copies to run before the prefill
+    fresh_block_ids: List[int] = dataclasses.field(default_factory=list)
+    cow_pairs: List[tuple] = dataclasses.field(default_factory=list)
+    # hash-chain registration watermark: block_ids[:hashed_blocks] are
+    # published in the allocator index, chain_hash is the running hash
+    hashed_blocks: int = 0
+    chain_hash: Optional[int] = None
+    # lifetime totals across (re)admissions, for the summary hit rate
+    prefix_tokens_total: int = 0
+    prefix_hit_tokens_total: int = 0
 
     @property
     def done(self) -> bool:
@@ -83,3 +100,9 @@ class Request:
 
     def acceptance_rate(self) -> float:
         return self.accepted_tokens / max(self.proposed_tokens, 1)
+
+    def prefix_hit_rate(self) -> float:
+        """Fraction of (re)admission prefill tokens served from the
+        prefix cache instead of being recomputed (0.0 when the engine
+        runs without prefix caching)."""
+        return self.prefix_hit_tokens_total / max(self.prefix_tokens_total, 1)

@@ -59,11 +59,34 @@ from repro.serving.request import Request, RequestState
 
 
 class BlockAllocator:
-    """Free-list allocator over the shared KV block pool.
+    """Refcounted free-list allocator over the shared KV block pool.
 
     Block ids are logical handles: id ``i`` names slot ``i`` of *both*
     the target and draft pools (the block tables mirror), so one
     allocation decision covers the whole speculative pair.
+
+    Prefix caching (DESIGN.md §4/§12) layers three structures on top of
+    the plain free list:
+
+    * ``refcount[b]`` — how many block tables reference physical block
+      ``b``.  :meth:`alloc` hands out blocks at refcount 1,
+      :meth:`acquire` maps an already-resident block into another
+      sequence (incref), and :meth:`free` is a *decref* — a block only
+      leaves circulation when its last reference drops.
+    * a content-hash index over committed **full** blocks: each
+      registered block stores ``(parent_hash, block_tokens)`` and is
+      addressed by the chained hash of that pair, so a prefix match is
+      a walk down the chain.  Stored tokens are compared on lookup —
+      a hash collision degrades to a cache miss, never a wrong block.
+    * an LRU *evictable* list: registered blocks whose refcount drops
+      to 0 stay warm (still index-addressable, revivable by
+      :meth:`acquire`) and are reclaimed oldest-first only when
+      :meth:`alloc` finds the free list short.  Unregistered blocks
+      return straight to the free list as before.
+
+    Pool accounting invariant (property-tested):
+    ``free + evictable + |{b : refcount[b] > 0}| == num_blocks`` with
+    the three sets pairwise disjoint.
     """
 
     def __init__(self, num_blocks: int, block_size: int):
@@ -74,55 +97,200 @@ class BlockAllocator:
         # ascending id order (pleasant for debugging, irrelevant for
         # correctness — the block table indirection absorbs any order)
         self._free = list(range(num_blocks - 1, -1, -1))
+        self.refcount = [0] * num_blocks
+        # chain_hash -> block id holding that prefix block
+        self._index: dict = {}
+        # block id -> (parent_hash, tokens_tuple, chain_hash)
+        self._meta: dict = {}
+        # unreferenced-but-registered blocks, insertion order = LRU
+        # (oldest first; revived blocks re-enter at the recent end)
+        self._evictable: "collections.OrderedDict[int, None]" = (
+            collections.OrderedDict())
+        self.evictions = 0
 
     @property
     def n_free(self) -> int:
-        return len(self._free)
+        """Allocatable blocks: truly free plus warm evictable."""
+        return len(self._free) + len(self._evictable)
 
     @property
     def n_used(self) -> int:
-        return self.num_blocks - len(self._free)
+        """Blocks referenced by at least one block table."""
+        return self.num_blocks - self.n_free
+
+    @property
+    def n_cached(self) -> int:
+        """Warm unreferenced blocks held for prefix reuse."""
+        return len(self._evictable)
 
     def blocks_for(self, n_tokens: int) -> int:
         return max(0, -(-n_tokens // self.block_size))
 
+    # ------------------------------------------------------------ hash chain
+    @staticmethod
+    def _chain_hash(parent_hash: Optional[int],
+                    tokens: Tuple[int, ...]) -> int:
+        # int-tuple hashing is deterministic within a process, which is
+        # all the host-side index needs (nothing device-visible).
+        return hash((parent_hash, tokens))
+
+    def match_prefix(self, tokens) -> Tuple[List[int], Optional[int], int]:
+        """Walk ``tokens`` down the hash chain over full blocks.
+
+        Returns ``(block_ids, last_chain_hash, covered_tokens)`` for the
+        longest cached prefix.  Does NOT take references — callers pair
+        it with :meth:`acquire` once admission is certain."""
+        ids: List[int] = []
+        parent: Optional[int] = None
+        bs = self.block_size
+        for i in range(len(tokens) // bs):
+            chunk = tuple(int(t) for t in tokens[i * bs:(i + 1) * bs])
+            h = self._chain_hash(parent, chunk)
+            bid = self._index.get(h)
+            if bid is None:
+                break
+            meta = self._meta[bid]
+            if meta[0] != parent or meta[1] != chunk:
+                break                       # collision: treat as a miss
+            ids.append(bid)
+            parent = h
+        return ids, parent, len(ids) * bs
+
+    def register(self, block_id: int, parent_hash: Optional[int],
+                 tokens: Tuple[int, ...]) -> int:
+        """Publish a committed full block under its chain hash.
+
+        First writer wins: if the hash is already indexed (another
+        sequence committed the same prefix first) the caller keeps its
+        private copy unshared and future matches converge on the
+        canonical block.  Returns the chain hash either way so callers
+        can thread it as the next block's parent."""
+        assert self.refcount[block_id] > 0, "registering an unowned block"
+        h = self._chain_hash(parent_hash, tokens)
+        if h not in self._index and block_id not in self._meta:
+            self._index[h] = block_id
+            self._meta[block_id] = (parent_hash, tokens, h)
+        return h
+
+    def _unregister(self, block_id: int) -> None:
+        meta = self._meta.pop(block_id, None)
+        if meta is not None and self._index.get(meta[2]) == block_id:
+            del self._index[meta[2]]
+
+    # ------------------------------------------------------------ lifecycle
     def alloc(self, n: int) -> Optional[List[int]]:
-        """n blocks, or None (and no state change) if the pool is short."""
-        if n > len(self._free):
+        """n private blocks at refcount 1, or None (and no state change)
+        if free + evictable cannot cover the ask.  Evicts warm cached
+        blocks oldest-first only under pressure — a hit on a block that
+        was never evicted costs nothing."""
+        if n > len(self._free) + len(self._evictable):
             return None
         if n <= 0:
             return []
+        while len(self._free) < n:
+            bid, _ = self._evictable.popitem(last=False)     # LRU oldest
+            self._unregister(bid)
+            self._free.append(bid)
+            self.evictions += 1
         out = self._free[-n:][::-1]
         del self._free[-n:]
+        for b in out:
+            assert self.refcount[b] == 0
+            self.refcount[b] = 1
         return out
 
+    def acquire(self, blocks: List[int]) -> None:
+        """Map already-resident blocks into one more block table
+        (incref), reviving warm evictable blocks in place."""
+        for b in blocks:
+            if self.refcount[b] == 0:
+                self._evictable.pop(b)      # registered + warm, by invariant
+            self.refcount[b] += 1
+
     def free(self, blocks: List[int]) -> None:
-        self._free.extend(reversed(blocks))
-        assert len(self._free) <= self.num_blocks
+        """Decref.  A block leaves circulation only at refcount 0:
+        registered blocks stay warm on the evictable LRU (recent end),
+        unregistered blocks return to the free list."""
+        for b in blocks:
+            assert self.refcount[b] > 0, "double free"
+            self.refcount[b] -= 1
+            if self.refcount[b] == 0:
+                meta = self._meta.get(b)
+                if meta is not None and self._index.get(meta[2]) == b:
+                    self._evictable[b] = None
+                else:
+                    self._unregister(b)
+                    self._free.append(b)
+        assert len(self._free) + len(self._evictable) <= self.num_blocks
+
+    def fork_cow(self, block_id: int) -> Optional[int]:
+        """Copy-on-write split: allocate a private destination block and
+        drop this table's reference on the shared source.  Returns the
+        destination id (caller schedules the device-side block copy) or
+        None if the pool cannot cover it.  The source is safe from the
+        eviction inside :meth:`alloc` because the caller still holds its
+        reference until the :meth:`free` below."""
+        dst = self.alloc(1)
+        if dst is None:
+            return None
+        self.free([block_id])
+        return dst[0]
+
+    def check_invariants(self) -> None:
+        """Property-test hook: free/evictable/referenced partition the
+        pool and no block is simultaneously free and referenced."""
+        free = set(self._free)
+        warm = set(self._evictable)
+        ref = {b for b in range(self.num_blocks) if self.refcount[b] > 0}
+        assert len(free) == len(self._free), "duplicate ids on free list"
+        assert not (free & ref), "block simultaneously free and referenced"
+        assert not (warm & ref), "block simultaneously warm and referenced"
+        assert not (free & warm), "block simultaneously free and warm"
+        assert len(free) + len(warm) + len(ref) == self.num_blocks
+        for b in warm:
+            meta = self._meta.get(b)
+            assert meta is not None and self._index.get(meta[2]) == b, (
+                "evictable block not reachable from the hash index")
 
 
 class LookaheadScheduler:
     def __init__(self, serving: ServingConfig, spec: SpecDecodeConfig,
                  policy: Optional[SpecPolicy] = None,
-                 kv_mirror: bool = True):
+                 kv_mirror: bool = True,
+                 prefix_cache: Optional[bool] = None):
         """``kv_mirror``: whether the serving drafter holds a paged KV
         pool mirroring the target's block ids (``Drafter.mirrors_kv``).
         ``ServingConfig.num_kv_blocks`` budgets such a mirrored *pair*;
         a drafter with no draft-side KV halves the per-sequence charge,
         so its whole mirror budget returns to the target pool — the pool
         doubles and admits proportionally more in-flight sequences
-        (DESIGN.md §9)."""
+        (DESIGN.md §9).
+
+        ``prefix_cache`` overrides ``serving.prefix_caching`` — the
+        engine passes the *effective* flag after gating on model-family
+        support (recurrent per-slot state cannot be recovered from the
+        block pool, DESIGN.md §12)."""
         self.serving = serving
         self.spec = spec
         self.policy = policy if policy is not None else build_policy(spec)
         self.queue: collections.deque[Request] = collections.deque()
         self.slots: List[Optional[Request]] = [None] * serving.max_batch_size
         self.allocator: Optional[BlockAllocator] = None
+        self.prefix_cache = bool(
+            serving.prefix_caching if prefix_cache is None else prefix_cache)
+        self.prefix_cache = self.prefix_cache and serving.paged_kv
         if serving.paged_kv:
             pool = serving.pool_blocks() * (1 if kv_mirror else 2)
             self.allocator = BlockAllocator(pool, serving.kv_block_size)
-            assert (self.allocator.num_blocks * self.allocator.block_size
-                    >= serving.max_seq_len), (
+            # Without prefix caching the pool must hold one max-length
+            # sequence outright, so LIFO preemption always converges.
+            # With it, smaller pools are admissible: the pool-feasibility
+            # term of _fits rejects requests that could never be
+            # resident, and ensure_capacity self-preempts (warm readmit
+            # through the cache) instead of asserting.
+            assert self.prefix_cache or (
+                self.allocator.num_blocks * self.allocator.block_size
+                >= serving.max_seq_len), (
                 "KV pool smaller than one max-length sequence — "
                 "preemption could never free enough blocks")
         # latest per-slot SL predictions (host mirror, engine-refreshed)
@@ -131,6 +299,14 @@ class LookaheadScheduler:
         self._rejected: List[Request] = []
         self._admit_seq = 0
         self.preempted_total = 0
+        # lifetime prefix-cache telemetry (engine aggregates per-round)
+        self.prefix_hit_blocks_total = 0
+        self.cow_copies_total = 0
+        self.prefix_tokens_total = 0
+        self.prefix_hit_tokens_total = 0
+
+    def _caching(self) -> bool:
+        return self.allocator is not None and self.prefix_cache
 
     # ------------------------------------------------------------- admission
     def submit(self, req: Request) -> None:
@@ -148,13 +324,29 @@ class LookaheadScheduler:
         sl = self.sl_pred if sl_next is None else np.asarray(sl_next)
         return self.policy.lookahead(sl)
 
-    def _fits(self, req: Request) -> bool:
+    def _fits(self, req: Request, covered_blocks: int = 0) -> bool:
         # feasibility must cover the policy's WORST-case round footprint:
         # a dynamic policy admitted at its initial SL can later predict up
         # to its max, and the verification write would overrun the budget
         need = (len(req.prompt) + req.max_new_tokens
                 + self.policy.max_lookahead())
-        return need <= self.serving.max_seq_len
+        if need > self.serving.max_seq_len:
+            return False
+        if self.allocator is not None:
+            # Pool-feasibility: a request whose worst-case block
+            # residency can never fit the pool would preempt-requeue
+            # forever — reject it up front.  Cached-prefix coverage
+            # discounts the ask: covered blocks are already resident
+            # (paid for by the cache, shareable across requesters), so
+            # only the uncovered suffix must come out of the pool.  A
+            # request that fits only BECAUSE of cache hits admits.
+            # Legacy configs (no prefix cache) are unaffected: the init
+            # assert pins pool >= max_seq_len there, so the max_seq_len
+            # term above already subsumes this one.
+            uncovered = self.allocator.blocks_for(need) - covered_blocks
+            if uncovered > self.allocator.num_blocks:
+                return False
+        return True
 
     def free_slots(self) -> List[int]:
         return [i for i, r in enumerate(self.slots) if r is None]
@@ -173,18 +365,73 @@ class LookaheadScheduler:
         free = collections.deque(self.free_slots())
         while free and self.queue:
             req = self.queue[0]
-            if not self._fits(req):
+            toks = req.prefill_tokens()
+            plen = len(toks)
+            covered_ids: List[int] = []
+            last_hash: Optional[int] = None
+            covered = 0
+            if self._caching():
+                covered_ids, last_hash, covered = (
+                    self.allocator.match_prefix(toks))
+            if not self._fits(req, covered_blocks=len(covered_ids)):
                 self.queue.popleft()
                 req.state = RequestState.REJECTED
                 req.finish_time = time.monotonic()
                 self._rejected.append(req)
                 continue
             if self.allocator is not None:
-                need = self.allocator.blocks_for(len(req.prefill_tokens()))
-                blocks = self.allocator.alloc(need)
-                if blocks is None:
-                    break               # pool dry: keep queued, stop here
-                req.block_ids = blocks
+                if covered == plen:
+                    # Full block-aligned hit: every prompt token is
+                    # cached, but sampling the first new token needs the
+                    # logits at position plen-1 — recompute just that
+                    # token into a COW copy of the last shared block
+                    # (its other positions arrive by device-side copy).
+                    shared = covered_ids[:-1]
+                    start = plen - 1
+                else:
+                    shared = covered_ids
+                    start = covered
+                need = self.allocator.blocks_for(plen) - len(shared)
+                # Pin EVERY matched block before alloc: alloc reclaims
+                # refcount-0 cached blocks under pressure, and the match
+                # — including the COW source, which is not part of the
+                # request's own table — must survive that reclaim.  The
+                # COW source's pin is dropped by the engine once the
+                # device-side copy is enqueued (release_cow_sources);
+                # device program order keeps the copy ahead of any later
+                # owner's reset.
+                self.allocator.acquire(covered_ids)
+                fresh = self.allocator.alloc(need)
+                if fresh is None:
+                    self.allocator.free(covered_ids)
+                    if not any(r is not None for r in self.slots):
+                        # Nothing is running, so nothing will ever decref
+                        # more blocks: even a fully drained pool cannot
+                        # hold this request's committed prefix.  Terminal
+                        # reject instead of spinning forever.
+                        self.queue.popleft()
+                        req.state = RequestState.REJECTED
+                        req.finish_time = time.monotonic()
+                        self._rejected.append(req)
+                        continue
+                    break           # pool dry: keep queued, stop here
+                req.block_ids = shared + fresh
+                req.fresh_block_ids = list(fresh)
+                req.prefill_start = start
+                if covered == plen:
+                    req.cow_pairs = [(covered_ids[-1], fresh[0])]
+                    req.chain_hash = (
+                        self.allocator._meta[covered_ids[-1]][0])
+                else:
+                    req.cow_pairs = []
+                    req.chain_hash = last_hash
+                req.hashed_blocks = len(shared)
+                req.prefix_tokens_total += plen
+                req.prefix_hit_tokens_total += start
+                self.prefix_hit_blocks_total += len(shared)
+                self.cow_copies_total += len(req.cow_pairs)
+                self.prefix_tokens_total += plen
+                self.prefix_hit_tokens_total += start
             self.queue.popleft()
             i = free.popleft()
             req.slot = i
@@ -196,6 +443,35 @@ class LookaheadScheduler:
             self.slots[i] = req
             admitted.append(req)
         return admitted
+
+    def register_prefix(self, req: Request) -> None:
+        """Publish ``req``'s newly committed full blocks in the hash
+        index (engine hook, called after prefill dispatch and after each
+        round's commit).  Registration trails the committed boundary
+        strictly — a registered block is full and below ``cache_len``,
+        so in-flight speculative writes (always at or above the
+        committed boundary) can never touch a shared block, which is
+        what makes sharing safe under the pipelined schedule."""
+        if not self._caching() or req.slot is None:
+            return
+        bs = self.allocator.block_size
+        toks = req.prompt + req.output
+        full = min(req.cache_len, len(toks)) // bs
+        full = min(full, len(req.block_ids))
+        while req.hashed_blocks < full:
+            i = req.hashed_blocks
+            chunk = tuple(int(t) for t in toks[i * bs:(i + 1) * bs])
+            req.chain_hash = self.allocator.register(
+                req.block_ids[i], req.chain_hash, chunk)
+            req.hashed_blocks += 1
+
+    def release_cow_sources(self, req: Request) -> None:
+        """Drop the admission-time pins on ``req``'s copy-on-write source
+        blocks (engine hook, called once the device-side block copy has
+        been ENQUEUED — program order then keeps the copy ahead of any
+        later owner's writes even if the source is reclaimed now)."""
+        if self._caching() and req.cow_pairs:
+            self.allocator.free([src for src, _ in req.cow_pairs])
 
     def pop_rejected(self) -> List[Request]:
         out, self._rejected = self._rejected, []
@@ -231,9 +507,20 @@ class LookaheadScheduler:
                 req.block_ids.extend(blocks)
                 return blocks, preempted
             victim = self._pick_victim(exclude=req)
-            assert victim is not None, (
-                "pool exhausted with nothing to preempt — the single-"
-                "sequence pool guarantee should make this unreachable")
+            if victim is None:
+                # Pool dry with nothing else to preempt.  Under prefix
+                # caching this is reachable (optimistic admission lets a
+                # request in on its uncovered suffix): self-preempt the
+                # requester.  Its committed full blocks stay registered
+                # and warm, so readmission resumes through the cache —
+                # the readmit prefill recomputes at most one partial
+                # block and emits a token, so progress is monotone.
+                assert self.prefix_cache, (
+                    "pool exhausted with nothing to preempt — the single-"
+                    "sequence pool guarantee should make this unreachable")
+                self.preempt(req)
+                preempted.append(req)
+                return [], preempted
             self.preempt(victim)
             preempted.append(victim)
 
@@ -244,15 +531,23 @@ class LookaheadScheduler:
         return max(running, key=lambda r: r.admit_seq)   # LIFO: youngest
 
     def preempt(self, req: Request) -> None:
-        """Evict-and-requeue: free every block, requeue at the *front* so
-        the request readmits first and recomputes its prefix
-        (prompt + emitted output) on readmission."""
+        """Evict-and-requeue: decref every block, requeue at the *front*
+        so the request readmits first and recomputes its prefix
+        (prompt + emitted output) on readmission.  Under prefix caching
+        the decref leaves registered blocks warm in the hash index, so
+        the recompute usually collapses to a tail prefill over at most
+        one partial block."""
         assert self.allocator is not None and req.slot is not None
         self.allocator.free(req.block_ids)
         req.block_ids = []
         self.slots[req.slot] = None
         req.slot = None
         req.cache_len = 0
+        req.prefill_start = 0
+        req.fresh_block_ids = []
+        req.cow_pairs = []
+        req.hashed_blocks = 0
+        req.chain_hash = None
         req.state = RequestState.QUEUED
         req.preemptions += 1
         self.preempted_total += 1
@@ -298,6 +593,12 @@ class LookaheadScheduler:
         if self.allocator is not None:
             return self.allocator.num_blocks
         return self.serving.max_batch_size * self.serving.blocks_per_seq()
+
+    def kv_blocks_cached(self) -> int:
+        """Warm unreferenced blocks parked on the evictable LRU."""
+        if self.allocator is not None:
+            return self.allocator.n_cached
+        return 0
 
     def has_work(self) -> bool:
         return bool(self.queue) or any(r is not None for r in self.slots)

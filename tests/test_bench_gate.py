@@ -19,7 +19,7 @@ import pytest
 # PYTHONPATH=src) — same pattern as examples/serve_dynamic_sl.py
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 from benchmarks.gate import (_entry, _verdict, cmd_collect, cmd_compare,
-                             collect_table6, collect_table7)
+                             collect_table6, collect_table7, collect_table8)
 
 
 # ---------------------------------------------------------------------------
@@ -62,6 +62,12 @@ CELL = {"rounds": 20, "latency_units": 21.0, "block_efficiency": 1.4,
         "mean_acceptance": 0.3, "requests_finished": 8,
         "kv_pool_blocks": 256.0}
 
+T8 = {"share0.5": {"prefill_tokens_on": 256, "prefill_calls_on": 2,
+                   "prefix_cache_hit_rate": 0.44,
+                   "prefix_cache_hit_blocks": 8.0, "ttft_speedup": 1.2},
+      "paged_half_shared": {"requests_finished": 4, "kv_pool_blocks": 32.0,
+                            "tok_per_round": 4.5}}
+
 
 def test_collect_table6_metrics_and_modes():
     entries = collect_table6(T6)
@@ -83,6 +89,22 @@ def test_collect_table7_zero_acceptance_omitted():
     assert "model/dsde.mean_acceptance" in metrics
     assert "ngram/static.mean_acceptance" not in metrics
     assert "ngram/static.rounds" in metrics        # the rest still gated
+
+
+def test_collect_table8_modes_and_zero_hit_omission():
+    by = {e["metric"]: e for e in collect_table8(T8)}
+    # deterministic prefill work: hard-gated, exact
+    assert by["share0.5.prefill_tokens_on"]["mode"] == "fail"
+    assert by["share0.5.prefill_tokens_on"]["better"] == "exact"
+    # wall-derived TTFT: the 2-core warn hatch
+    assert by["share0.5.ttft_speedup"]["mode"] == "warn"
+    assert by["half_pool.requests_finished"]["better"] == "exact"
+    # zero-hit point omits the rate (same rationale as table7 acceptance)
+    cold = {"share0": dict(T8["share0.5"], prefix_cache_hit_rate=0.0)}
+    metrics = {e["metric"] for e in collect_table8(cold)}
+    assert "share0.prefix_cache_hit_rate" not in metrics
+    assert "share0.prefix_cache_hit_blocks" not in metrics
+    assert "share0.prefill_tokens_on" in metrics
 
 
 # ---------------------------------------------------------------------------
@@ -140,12 +162,14 @@ def test_summary_file_written(tmp_path):
 
 
 def test_collect_cli_round_trips_files(tmp_path):
-    t6, t7 = tmp_path / "t6.json", tmp_path / "t7.json"
+    t6, t7, t8 = (tmp_path / "t6.json", tmp_path / "t7.json",
+                  tmp_path / "t8.json")
     t6.write_text(json.dumps(T6))
     t7.write_text(json.dumps({"model/dsde": dict(CELL)}))
+    t8.write_text(json.dumps(T8))
     out = tmp_path / "BENCH_pr.json"
     args = types.SimpleNamespace(table6=str(t6), table7=str(t7),
-                                 out=str(out))
+                                 table8=str(t8), out=str(out))
     assert cmd_collect(args) == 0
     entries = json.loads(out.read_text())
     assert {tuple(sorted(e)) for e in entries} == {
