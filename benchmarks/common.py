@@ -153,7 +153,7 @@ def serve(cfg_t, cfg_d, pt, pd, prompts: List[List[int]], *,
           num_kv_blocks: Optional[int] = None,
           prefix_caching: bool = False,
           pipelined: bool = False, drafter: str = "model",
-          mesh: Optional[str] = None
+          mesh: Optional[str] = None, kv_quant: str = "none"
           ) -> Tuple[Dict, List[Request], ServingEngine]:
     """``mesh``: optional ``DxM`` string ("1x4") — serve under a
     (data, model) mesh (DESIGN.md §5; needs forced host devices)."""
@@ -184,7 +184,8 @@ def serve(cfg_t, cfg_d, pt, pd, prompts: List[List[int]], *,
                                       kv_block_size=kv_block_size,
                                       num_kv_blocks=num_kv_blocks,
                                       prefix_caching=prefix_caching,
-                                      pipelined=pipelined),
+                                      pipelined=pipelined,
+                                      kv_quant=kv_quant),
                         seed=seed, mesh=mesh_obj)
     reqs = [Request(i, prompt=p,
                     max_new_tokens=(max_new_per_req[i]

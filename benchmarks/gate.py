@@ -36,8 +36,10 @@ Re-seeding after an intentional change::
         --json table7.json
     PYTHONPATH=src python -m benchmarks.table8_prefix_cache --smoke \
         --json table8.json
+    PYTHONPATH=src python -m benchmarks.table9_quant_kv --smoke \
+        --json table9.json
     PYTHONPATH=src python -m benchmarks.gate collect --table6 table6.json \
-        --table7 table7.json --table8 table8.json \
+        --table7 table7.json --table8 table8.json --table9 table9.json \
         --out benchmarks/baseline.json
 """
 from __future__ import annotations
@@ -130,6 +132,32 @@ def collect_table8(t8: Dict) -> List[Dict]:
     return out
 
 
+def collect_table9(t9: Dict) -> List[Dict]:
+    out = []
+    for cell, m in sorted(t9.items()):
+        # completion + pool geometry are deterministic under the seeded
+        # greedy smoke lane; byte metrics are pure arithmetic of the
+        # config and must never drift silently
+        out.append(_entry("table9", f"{cell}.requests_finished",
+                          m["requests_finished"], 0.0, "exact"))
+        out.append(_entry("table9", f"{cell}.kv_pool_blocks",
+                          m["kv_pool_blocks"], 0.0, "exact"))
+        out.append(_entry("table9", f"{cell}.kv_block_bytes",
+                          m["kv_block_bytes"], 0.0, "exact"))
+        out.append(_entry("table9", f"{cell}.rounds", m["rounds"],
+                          0.10, "lower"))
+        out.append(_entry("table9", f"{cell}.tok_per_round",
+                          m["tok_per_round"], 0.10, "higher"))
+        out.append(_entry("table9", f"{cell}.kv_bytes_swept",
+                          m["kv_bytes_swept"], 0.10, "lower"))
+        if "prefix_match_frac" in m:
+            # stream divergence vs the fp engine: seeded + greedy, so
+            # bit-stable — a drop means storage numerics changed
+            out.append(_entry("table9", f"{cell}.prefix_match_frac",
+                              m["prefix_match_frac"], 0.0, "exact"))
+    return out
+
+
 def cmd_collect(args) -> int:
     entries: List[Dict] = []
     if args.table6:
@@ -141,6 +169,9 @@ def cmd_collect(args) -> int:
     if args.table8:
         with open(args.table8) as f:
             entries += collect_table8(json.load(f))
+    if args.table9:
+        with open(args.table9) as f:
+            entries += collect_table9(json.load(f))
     with open(args.out, "w") as f:
         json.dump(entries, f, indent=2, sort_keys=True)
     print(f"[gate] wrote {len(entries)} metrics -> {args.out}")
@@ -228,6 +259,7 @@ def main() -> None:
     c.add_argument("--table6", default=None)
     c.add_argument("--table7", default=None)
     c.add_argument("--table8", default=None)
+    c.add_argument("--table9", default=None)
     c.add_argument("--out", required=True)
     c.set_defaults(fn=cmd_collect)
     d = sub.add_parser("compare", help="diff PR metrics vs the baseline")

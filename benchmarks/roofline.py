@@ -4,7 +4,16 @@ seconds, dominant bottleneck, MODEL_FLOPS ratio, and a one-line
 recommendation for the dominant term.
 
 Run after:  PYTHONPATH=src python -m repro.launch.dryrun --all --out dryrun_single_pod.json
-"""
+
+Plus the KV-sweep section (DESIGN.md §13): decode/verify attention is
+bandwidth-bound, so its roofline term is KV bytes streamed per verify
+round.  ``kv_sweep_rows`` serves one tiny mix per storage mode and
+reports the MODELED bytes/round (mean resident blocks x bytes per block
+from ``cache_lib.kv_block_bytes``) against the ACHIEVED bytes/round the
+engine telemetry integrates (``kv_bytes_swept / rounds``) — fp32 vs
+int8, same block geometry.  The two agree by construction of the
+telemetry; the row exists so the fp-vs-int8 bytes ratio (the fused
+dequant kernel's bandwidth win) is tracked with the roofline numbers."""
 from __future__ import annotations
 
 import json
@@ -51,8 +60,37 @@ def rows_from_json(path: str = DEFAULT_JSON) -> List[str]:
     return out
 
 
+def kv_sweep_rows() -> List[str]:
+    """Achieved vs modeled KV bytes per verify round, fp vs int8 pools."""
+    from benchmarks import common
+    from repro.models import cache as cache_lib
+
+    cfg_t, cfg_d, pt, pd, _ = common.untrained_pair()
+    prompts = common.dataset("code").prompts(4, 16, seed=4)
+    out = []
+    for kv_quant in ("none", "int8"):
+        m, _, _ = common.serve(cfg_t, cfg_d, pt, pd, prompts, max_new=12,
+                               max_seq_len=128, batch=4, paged=True,
+                               kv_block_size=16, kv_quant=kv_quant)
+        block_bytes = cache_lib.kv_block_bytes(cfg_t, 16, kv_quant)
+        assert m["kv_block_bytes"] == block_bytes
+        rounds = max(m["rounds"], 1)
+        achieved = m["kv_bytes_swept"] / rounds
+        # model: mean resident blocks/round x bytes per block — resident
+        # blocks are what the paged kv-sweep's block-table grid visits
+        mean_blocks = (m["kv_pool_utilization_mean"] * m["kv_pool_blocks"])
+        modeled = mean_blocks * block_bytes
+        tag = "fp" if kv_quant == "none" else kv_quant
+        out.append(
+            f"roofline/kv_sweep_{tag},0.0,"
+            f"modeled_bytes_per_round={modeled:.0f};"
+            f"achieved_bytes_per_round={achieved:.0f};"
+            f"block_bytes={block_bytes};rounds={rounds:.0f}")
+    return out
+
+
 def run() -> List[str]:
-    return rows_from_json()
+    return rows_from_json() + kv_sweep_rows()
 
 
 if __name__ == "__main__":

@@ -14,7 +14,7 @@ import time
 import traceback
 
 SUITES = ("table1", "table2", "table3", "table4", "table5", "table6",
-          "table7", "table8", "fig6", "fig9", "roofline")
+          "table7", "table8", "table9", "fig6", "fig9", "roofline")
 
 
 def main() -> None:
@@ -40,6 +40,8 @@ def main() -> None:
                 from benchmarks.table7_drafter_matrix import run
             elif suite == "table8":
                 from benchmarks.table8_prefix_cache import run
+            elif suite == "table9":
+                from benchmarks.table9_quant_kv import run
             elif suite == "fig6":
                 from benchmarks.fig6_sensitivity import run
             elif suite == "fig9":

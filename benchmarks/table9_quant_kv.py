@@ -1,0 +1,169 @@
+"""Quantized KV serving: int8 per-block pool vs the fp paged pool
+(beyond-paper; the perf story for DESIGN.md §13's quantized data plane).
+
+The fp paged pool already packs a heterogeneous mix into half the dense
+KV bytes (table5).  Storing the pool int8 with per-slot-per-KV-head amax
+scales cuts the remaining bytes by ~4x at the same block count — blocks
+just cost fewer bytes — so the same byte budget buys >= 2x the blocks,
+and every verify round sweeps proportionally fewer KV bytes through the
+memory system (the regime real decode kernels are bound by).
+
+Three engines serve the identical table5-style heterogeneous mix:
+
+* ``fp_paged``     — fp32 pool at N blocks (the table5 paged engine);
+* ``int8_paged``   — int8 pool at the SAME N blocks: completes the mix
+  at <= 50% (achieved: ~27%) of fp_paged's pool bytes, throughput
+  within tolerance — fp_paged IS the fp-at-2x-bytes comparison point;
+* ``int8_equal_bytes`` — int8 pool at ``equal_byte_blocks(N)``: the
+  capacity row — the fp byte budget re-spent on >= 2x the blocks.
+
+Rows report completion/pressure counters, pool bytes, the per-round KV
+bytes-swept reduction (sum over rounds of blocks-in-use x block bytes,
+the quantity the fused-dequant kernel actually streams), and stream
+divergence stats vs the fp engine (int8 storage legitimately perturbs
+greedy streams; serving-level distributional exactness is pinned by
+tests/test_kv_quant.py's chi-square, not here).
+
+    PYTHONPATH=src python -m benchmarks.table9_quant_kv
+    PYTHONPATH=src python -m benchmarks.table9_quant_kv \
+        --smoke --json /tmp/table9.json     # CI: untrained pair, tiny mix
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, List, Optional
+
+from benchmarks import common
+from repro.models import cache as cache_lib
+
+MAX_SEQ = 256
+BATCH = 8
+BLOCK = 16
+
+
+def workload(smoke: bool):
+    """table5's heterogeneous mix: a few long-prompt/long-gen requests
+    among many short ones, all wanting to run concurrently."""
+    if smoke:
+        long_p = common.dataset("news").prompts(2, 48, seed=3)
+        short_p = common.dataset("code").prompts(4, 16, seed=4)
+        max_new = [24] * len(long_p) + [12] * len(short_p)
+    else:
+        long_p = common.dataset("news").prompts(4, 96, seed=3)
+        short_p = common.dataset("code").prompts(8, 16, seed=4)
+        max_new = [64] * len(long_p) + [32] * len(short_p)
+    return long_p + short_p, max_new
+
+
+def _divergence(ref_reqs, reqs) -> Dict[str, float]:
+    """Stream-divergence stats vs the fp engine: identical-stream
+    fraction and mean common-prefix fraction, by request id."""
+    ref = {r.request_id: r.output for r in ref_reqs}
+    ident, prefix = 0, 0.0
+    for r in reqs:
+        a, b = ref[r.request_id], r.output
+        ident += a == b
+        n = max(len(a), len(b), 1)
+        k = 0
+        for x, y in zip(a, b):
+            if x != y:
+                break
+            k += 1
+        prefix += k / n
+    n = max(len(reqs), 1)
+    return {"identical_frac": ident / n, "prefix_match_frac": prefix / n}
+
+
+def run(smoke: bool = False, json_path: Optional[str] = None) -> List[str]:
+    if smoke:
+        cfg_t, cfg_d, pt, pd, ratio = common.untrained_pair()
+    else:
+        cfg_t, cfg_d, pt, pd, ratio = common.build_pair("llama")
+    prompts, max_new = workload(smoke)
+    # table5's paged_half geometry: half the dense byte budget in blocks
+    n_blocks = BATCH * (MAX_SEQ // BLOCK) // 2
+    eq_blocks = cache_lib.equal_byte_blocks(cfg_t, n_blocks, BLOCK)
+    rows: List[str] = []
+    out: Dict[str, Dict] = {}
+
+    def add_row(label, *, nblocks, kv_quant, ref_reqs=None):
+        t0 = time.monotonic()
+        m, reqs, _ = common.serve(cfg_t, cfg_d, pt, pd, prompts,
+                                  max_new_per_req=max_new,
+                                  max_seq_len=MAX_SEQ, batch=BATCH,
+                                  paged=True, kv_block_size=BLOCK,
+                                  num_kv_blocks=nblocks, kv_quant=kv_quant)
+        wall = (time.monotonic() - t0) * 1e6
+        eng_rounds = m["rounds"]
+        # KV bytes the verify sweeps actually stream: blocks resident
+        # that round x bytes per block, summed over the run
+        swept = m["kv_bytes_swept"]
+        cell = {
+            "requests_finished": m["requests_finished"],
+            "requests_rejected": m["requests_rejected"],
+            "preemptions": m["preemptions"],
+            "rounds": eng_rounds,
+            "tok_per_round": m["batch_tokens_per_round"],
+            "latency_units": common.latency_units(m, ratio),
+            "kv_pool_blocks": m["kv_pool_blocks"],
+            "kv_block_bytes": m["kv_block_bytes"],
+            "kv_pool_bytes": m["kv_pool_bytes"],
+            "kv_bytes_swept": swept,
+        }
+        div = None
+        if ref_reqs is not None:
+            div = _divergence(ref_reqs, reqs)
+            cell.update(div)
+        out[label] = cell
+        extra = (f";ident={div['identical_frac']:.2f};"
+                 f"pfx={div['prefix_match_frac']:.2f}" if div else "")
+        rows.append(common.row(
+            f"table9/{label}", wall,
+            f"finished={m['requests_finished']};"
+            f"preempt={m['preemptions']};rounds={eng_rounds};"
+            f"tok_per_round={m['batch_tokens_per_round']:.2f};"
+            f"pool_mb={m['kv_pool_bytes'] / 2**20:.2f};"
+            f"swept_mb={swept / 2**20:.1f}{extra}"))
+        return m, reqs
+
+    m_fp, reqs_fp = add_row(f"fp_paged_n{n_blocks}", nblocks=n_blocks,
+                            kv_quant="none")
+    m_q8, _ = add_row(f"int8_paged_n{n_blocks}", nblocks=n_blocks,
+                      kv_quant="int8", ref_reqs=reqs_fp)
+    m_eq, _ = add_row(f"int8_equal_bytes_n{eq_blocks}", nblocks=eq_blocks,
+                      kv_quant="int8", ref_reqs=reqs_fp)
+
+    # the demonstration the ISSUE asks for: the int8 pool completes the
+    # whole mix at <= 50% of the fp paged pool's KV bytes (same blocks —
+    # fp_paged doubles as the fp-at-2x-bytes throughput reference) ...
+    assert m_q8["requests_finished"] == len(prompts)
+    assert m_q8["kv_pool_bytes"] <= 0.5 * m_fp["kv_pool_bytes"]
+    assert m_q8["kv_bytes_swept"] <= 0.5 * m_fp["kv_bytes_swept"]
+    # ... with throughput within tolerance of the fp engine (identical
+    # schedule shapes; only storage numerics differ)
+    assert (m_q8["batch_tokens_per_round"]
+            >= 0.7 * m_fp["batch_tokens_per_round"])
+    # ... and the equal-byte pool really is >= 2x blocks, <= same bytes
+    assert m_eq["kv_pool_blocks"] >= 2 * m_fp["kv_pool_blocks"]
+    assert m_eq["kv_pool_bytes"] <= m_fp["kv_pool_bytes"]
+    assert m_eq["requests_finished"] == len(prompts)
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(out, f, indent=2, sort_keys=True)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="untrained pair + tiny mix (CI lane)")
+    ap.add_argument("--json", default=None,
+                    help="write the comparison as JSON (CI artifact)")
+    args = ap.parse_args()
+    print("\n".join(run(smoke=args.smoke, json_path=args.json)))
+
+
+if __name__ == "__main__":
+    main()

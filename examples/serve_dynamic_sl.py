@@ -53,6 +53,11 @@ def main():
                          "common head; >0 serves on the paged pool with "
                          "prefix caching on (DESIGN.md §12) and reports "
                          "the hit/COW telemetry per policy")
+    ap.add_argument("--kv-quant", default="none", choices=["none", "int8"],
+                    help="paged-pool storage mode (DESIGN.md §13): int8 "
+                         "serves off the quantized block pool — same "
+                         "block count, under half the KV bytes (implies "
+                         "the paged data plane)")
     args = ap.parse_args()
     if not 0.0 <= args.prefix_share < 1.0:
         ap.error("--prefix-share must be in [0, 1)")
@@ -93,6 +98,11 @@ def main():
         paged_kw = dict(paged=True, kv_block_size=bs, prefix_caching=True)
         print(f"== prefix share {args.prefix_share:.2f}: common head of "
               f"{head_len} tokens, paged pool + prefix caching on ==")
+    if args.kv_quant != "none":
+        paged_kw.update(paged=True, kv_quant=args.kv_quant)
+        paged_kw.setdefault("kv_block_size", 16)
+        print(f"== kv_quant {args.kv_quant}: int8 block pool, dequant "
+              "fused into the verify kv-sweep (DESIGN.md §13) ==")
 
     print(f"== serving {len(prompts)} requests, batch={batch}, "
           f"max_new={max_new} ==")

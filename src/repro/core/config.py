@@ -294,6 +294,15 @@ class ServingConfig:
     # model family (per-slot lru/conv state cannot be recovered from the
     # block pool); the engine gates on both.
     prefix_caching: bool = False
+    # quantized KV storage (DESIGN.md §4, §13): "none" keeps the pool in
+    # the compute dtype; "int8" stores K/V as int8 with per-slot-per-KV-
+    # head fp32 amax scales, quantized on write and dequantized inside
+    # the verify kv-sweep.  Requires paged_kv and a non-recurrent family
+    # (the recurrent rows stay fp and the hybrid cache threading is out
+    # of scope); the engine validates.  ``num_kv_blocks`` stays a
+    # physical block count — blocks just cost fewer bytes, so an
+    # equal-byte budget buys >= 2x blocks (``equal_byte_blocks``).
+    kv_quant: str = "none"
 
     def blocks_per_seq(self) -> int:
         """Block-table width: worst-case blocks one sequence can hold."""

@@ -113,11 +113,14 @@ class Drafter:
 
     # ------------------------------------------------------- device-side
     def init_cache(self, batch: int, max_len: int, dtype=jnp.float32,
-                   paged: Optional[Tuple[int, int]] = None) -> PyTree:
+                   paged: Optional[Tuple[int, int]] = None,
+                   kv_quant: str = "none") -> PyTree:
         """Fresh per-sequence drafter cache (a pytree; ``()`` if
         stateless).  ``paged=(num_blocks, block_size)`` is the target
         pool's geometry — drafters that mirror it build a matching
-        pool; everyone else ignores it."""
+        pool; everyone else ignores it.  ``kv_quant`` is the target
+        pool's storage mode (DESIGN.md §13): mirroring drafters build
+        their pool in the same mode so block ids stay interchangeable."""
         return ()
 
     def prefill(self, params_d: PyTree, cache: PyTree, idx: jax.Array,

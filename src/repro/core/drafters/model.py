@@ -108,15 +108,19 @@ class ModelDrafter(Drafter):
 
     # ------------------------------------------------------- device-side
     def init_cache(self, batch: int, max_len: int, dtype=jnp.float32,
-                   paged: Optional[Tuple[int, int]] = None) -> PyTree:
+                   paged: Optional[Tuple[int, int]] = None,
+                   kv_quant: str = "none") -> PyTree:
         assert self.cfg_d is not None, "ModelDrafter needs a draft config"
         if paged is not None:
             n_blocks, bs = paged
             # the scheduler owns the pool-vs-max_len feasibility policy
-            # (prefix-cached pools may be smaller than one max-len seq)
+            # (prefix-cached pools may be smaller than one max-len seq);
+            # the mirror inherits the target pool's storage mode so
+            # shared block ids mean the same bytes on both sides
             return cache_lib.paged_cache_struct(self.cfg_d, batch, max_len,
                                                 n_blocks, bs, dtype,
-                                                require_full_seq=False)
+                                                require_full_seq=False,
+                                                kv_quant=kv_quant)
         return cache_lib.cache_struct(self.cfg_d, batch, max_len, dtype)
 
     def prefill(self, params_d: PyTree, cache: PyTree, idx: jax.Array,
@@ -131,7 +135,8 @@ class ModelDrafter(Drafter):
             rows, _ = prefill_lib.prefill_paged_rows(
                 params_d, self.cfg_d, cache["k"], cache["v"],
                 cache["kv_pos"], table_rows, tokens, prompt_lens,
-                plan=plan)
+                plan=plan, k_scale=cache.get("k_scale"),
+                v_scale=cache.get("v_scale"))
             return prefill_lib.scatter_paged_rows(cache, rows, idx)
         rows, _ = prefill_lib.prefill_rows(params_d, self.cfg_d, tokens,
                                            prompt_lens, max_len, plan=plan)
@@ -154,7 +159,8 @@ class ModelDrafter(Drafter):
         rows, _ = prefill_lib.prefill_paged_tail(
             params_d, self.cfg_d, cache["k"], cache["v"], cache["kv_pos"],
             table_rows, tail_tokens, start_lens, tail_lens, cow_src,
-            cow_dst, plan=plan)
+            cow_dst, plan=plan, k_scale=cache.get("k_scale"),
+            v_scale=cache.get("v_scale"))
         return prefill_lib.scatter_paged_rows(cache, rows, idx)
 
     def propose(self, params_t: PyTree, params_d: PyTree,

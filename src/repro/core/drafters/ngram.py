@@ -47,7 +47,8 @@ class NGramDrafter(Drafter):
 
     # ------------------------------------------------------- device-side
     def init_cache(self, batch: int, max_len: int, dtype=jnp.float32,
-                   paged: Optional[Tuple[int, int]] = None) -> PyTree:
+                   paged: Optional[Tuple[int, int]] = None,
+                   kv_quant: str = "none") -> PyTree:
         # token history, NOT a KV cache: ``length`` counts committed
         # tokens, mirroring the target cache's commit arithmetic exactly
         return {"tokens": jnp.zeros((batch, max_len), jnp.int32),

@@ -59,7 +59,8 @@ class SelfDrafter(Drafter):
 
     # ------------------------------------------------------- device-side
     def init_cache(self, batch: int, max_len: int, dtype=jnp.float32,
-                   paged: Optional[Tuple[int, int]] = None) -> PyTree:
+                   paged: Optional[Tuple[int, int]] = None,
+                   kv_quant: str = "none") -> PyTree:
         return ()          # stateless: everything lives in the target cache
 
     def propose(self, params_t: PyTree, params_d: PyTree,

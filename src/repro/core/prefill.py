@@ -84,11 +84,13 @@ def prefill_rows(params: PyTree, cfg: ModelConfig, tokens: jax.Array,
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "plan"),
-                   donate_argnames=("pool_k", "pool_v", "kv_pos"))
+                   donate_argnames=("pool_k", "pool_v", "kv_pos",
+                                    "k_scale", "v_scale"))
 def prefill_paged_rows(params: PyTree, cfg: ModelConfig, pool_k: jax.Array,
                        pool_v: jax.Array, kv_pos: jax.Array,
                        table_rows: jax.Array, tokens: jax.Array,
-                       prompt_lens: jax.Array, plan=None
+                       prompt_lens: jax.Array, plan=None,
+                       k_scale=None, v_scale=None
                        ) -> Tuple[PyTree, jax.Array]:
     """Prefill a same-bucket group of R requests *straight into their
     allocated pool blocks* as one multi-row program: the batch-R cache
@@ -100,9 +102,12 @@ def prefill_paged_rows(params: PyTree, cfg: ModelConfig, pool_k: jax.Array,
     Returns (cache view with updated pools + fresh per-row state,
     last_logits [R, V]).  ``plan`` (static) pins the returned pools /
     rows to the serving mesh's §5 layouts, exactly as in
-    :func:`prefill_rows`."""
+    :func:`prefill_rows`.  ``k_scale``/``v_scale`` (donated) are the
+    int8 pool's amax scale arrays — passing them makes the view a
+    quantized cache, so the prefill writes quantize on the way in."""
     cache = cache_lib.paged_prefill_view(cfg, pool_k, pool_v, kv_pos,
-                                         table_rows)
+                                         table_rows, k_scale=k_scale,
+                                         v_scale=v_scale)
     cache, last = prefill_forward(params, cfg, cache, tokens, prompt_lens)
     if plan is not None:
         cache = plan.cache_constraints(cache)
@@ -111,12 +116,14 @@ def prefill_paged_rows(params: PyTree, cfg: ModelConfig, pool_k: jax.Array,
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "plan"),
-                   donate_argnames=("pool_k", "pool_v", "kv_pos"))
+                   donate_argnames=("pool_k", "pool_v", "kv_pos",
+                                    "k_scale", "v_scale"))
 def prefill_paged_tail(params: PyTree, cfg: ModelConfig, pool_k: jax.Array,
                        pool_v: jax.Array, kv_pos: jax.Array,
                        table_rows: jax.Array, tokens: jax.Array,
                        start_lens: jax.Array, tail_lens: jax.Array,
-                       cow_src: jax.Array, cow_dst: jax.Array, plan=None
+                       cow_src: jax.Array, cow_dst: jax.Array, plan=None,
+                       k_scale=None, v_scale=None
                        ) -> Tuple[PyTree, jax.Array]:
     """Partial-prefix prefill (DESIGN.md §12): one multi-row program that
     computes only the non-cached tail of each request.
@@ -138,11 +145,18 @@ def prefill_paged_tail(params: PyTree, cfg: ModelConfig, pool_k: jax.Array,
     cache state is exactly the pool the shared blocks live in.
 
     The pools are donated and the returned view is scattered back with
-    :func:`scatter_paged_rows`, same as the cold entry point."""
+    :func:`scatter_paged_rows`, same as the cold entry point.  Under the
+    int8 pool (``k_scale``/``v_scale`` given, donated) the COW prologue
+    carries the scale arrays with their blocks and the view quantizes
+    the tail writes."""
     pool_k, pool_v, kv_pos = cache_lib.copy_blocks(pool_k, pool_v, kv_pos,
                                                    cow_src, cow_dst)
+    if k_scale is not None:
+        k_scale, v_scale = cache_lib.copy_scales(k_scale, v_scale,
+                                                 cow_src, cow_dst)
     cache = cache_lib.paged_prefill_view(cfg, pool_k, pool_v, kv_pos,
-                                         table_rows, lengths=start_lens)
+                                         table_rows, lengths=start_lens,
+                                         k_scale=k_scale, v_scale=v_scale)
     t = tokens.shape[1]
     write_mask = jnp.arange(t)[None] < tail_lens[:, None]
     logits, cache, _ = forward(params, cfg, tokens, cache=cache,
@@ -164,6 +178,8 @@ def scatter_paged_rows(big: PyTree, rows: PyTree, idx: jax.Array) -> PyTree:
     out = dict(big)
     out["k"], out["v"] = rows["k"], rows["v"]
     out["kv_pos"] = rows["kv_pos"]
+    if "k_scale" in big:                 # int8 pool scales travel with it
+        out["k_scale"], out["v_scale"] = rows["k_scale"], rows["v_scale"]
     out["length"] = big["length"].at[idx].set(rows["length"])
     for key in ("lru", "conv"):        # hybrid recurrent rows stay dense
         if key in big:

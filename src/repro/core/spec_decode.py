@@ -293,7 +293,8 @@ def init_round_state(cfg_t: ModelConfig, cfg_d: Optional[ModelConfig],
                      key: jax.Array, dtype=jnp.float32,
                      enc_len: Optional[int] = None,
                      paged: Optional[Tuple[int, int]] = None,
-                     drafter: Optional[Drafter] = None) -> RoundState:
+                     drafter: Optional[Drafter] = None,
+                     kv_quant: str = "none") -> RoundState:
     """Fresh round state: target cache (dense, or block-paged when
     ``paged=(num_blocks, block_size)``) plus whatever cache pytree the
     configured drafter owns — built through the same ``paged`` geometry
@@ -313,6 +314,9 @@ def init_round_state(cfg_t: ModelConfig, cfg_d: Optional[ModelConfig],
     policy = build_policy(spec)
     if drafter is None:
         drafter = build_drafter(spec, cfg_t, cfg_d)
+    if kv_quant != "none" and paged is None:
+        raise ValueError("kv_quant requires the block-paged cache "
+                         "(pass paged=(num_blocks, block_size))")
     no_term = dict(
         done=jnp.zeros((batch,), bool),
         tokens_budget=jnp.full((batch,), jnp.int32(2 ** 30), jnp.int32),
@@ -324,11 +328,13 @@ def init_round_state(cfg_t: ModelConfig, cfg_d: Optional[ModelConfig],
         # sequence); the data plane only needs drop-semantics
         t_cache = cache_lib.paged_cache_struct(cfg_t, batch, max_len,
                                                n_blocks, bs, dtype,
-                                               require_full_seq=False)
+                                               require_full_seq=False,
+                                               kv_quant=kv_quant)
     else:
         t_cache = cache_lib.cache_struct(cfg_t, batch, max_len, dtype,
                                          enc_len=enc_len)
-    d_cache = drafter.init_cache(batch, max_len, dtype, paged=paged)
+    d_cache = drafter.init_cache(batch, max_len, dtype, paged=paged,
+                                 kv_quant=kv_quant)
     return RoundState(
         target_cache=t_cache, draft_cache=d_cache,
         policy_state=policy.init_state(batch),

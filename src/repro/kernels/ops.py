@@ -15,8 +15,9 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.kld_accept import fused_kld_accept
 from repro.kernels.ngram_match import ngram_suffix_propose
-from repro.kernels.ragged_attention import (paged_ragged_verify_attention,
-                                            ragged_verify_attention)
+from repro.kernels.ragged_attention import (
+    paged_ragged_verify_attention, paged_ragged_verify_attention_quant,
+    ragged_verify_attention)
 
 
 def _on_tpu() -> bool:
@@ -59,6 +60,27 @@ def paged_ragged_attention(q: jax.Array, pool_k: jax.Array,
     return ref.paged_ragged_verify_attention_ref(q, pool_k, pool_v,
                                                  block_table, q_pos, kv_pos,
                                                  window=window)
+
+
+def paged_ragged_attention_quant(q: jax.Array, pool_k: jax.Array,
+                                 pool_v: jax.Array, k_scale: jax.Array,
+                                 v_scale: jax.Array, block_table: jax.Array,
+                                 q_pos: jax.Array, kv_pos: jax.Array, *,
+                                 window: Optional[int] = None,
+                                 force_kernel: bool = False,
+                                 interpret: Optional[bool] = None
+                                 ) -> jax.Array:
+    """Decode/verify attention off the int8 block pool, dequantizing
+    in-register inside the kv-sweep (DESIGN.md §13)."""
+    if _on_tpu() or force_kernel:
+        return paged_ragged_verify_attention_quant(
+            q, pool_k, pool_v, k_scale, v_scale, block_table, q_pos,
+            kv_pos, window=window,
+            interpret=bool(interpret) if interpret is not None
+            else not _on_tpu())
+    return ref.paged_ragged_verify_attention_quant_ref(
+        q, pool_k, pool_v, k_scale, v_scale, block_table, q_pos, kv_pos,
+        window=window)
 
 
 def ngram_propose(tokens: jax.Array, ctx_len: jax.Array, *, n: int, k: int,

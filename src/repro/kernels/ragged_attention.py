@@ -245,3 +245,128 @@ def paged_ragged_verify_attention(q: jax.Array, pool_k: jax.Array,
         interpret=interpret,
     )(block_table.astype(jnp.int32), qr, pool_k, pool_v, kv_pos, q_pos)
     return out.transpose(0, 3, 1, 2, 4).reshape(b, t, h, d)
+
+
+# ---------------------------------------------------------------------------
+# Quantized-pool variant: int8 K/V tiles plus their per-slot-per-KV-head
+# fp32 amax scales stream through the same scalar-prefetched block-table
+# index maps, and dequantization happens in-register right before the
+# score / value dots — the fp K/V tile never exists outside VMEM
+# registers, so the HBM bytes swept per round shrink to the int8 pool +
+# scale footprint (DESIGN.md §13).
+# ---------------------------------------------------------------------------
+
+
+def _paged_quant_kernel(bt_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
+                        kvp_ref, qp_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                        window: Optional[int], nlb: int, sm_scale: float):
+    lb = pl.program_id(2)
+
+    @pl.when(lb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)              # [G, T, D]
+    g, t, d = q.shape
+    # in-register dequant: int8 tile * fp32 per-slot scale column
+    k = k_ref[0, :, 0, :].astype(jnp.float32) * ks_ref[0, :, 0][:, None]
+    v = v_ref[0, :, 0, :].astype(jnp.float32) * vs_ref[0, :, 0][:, None]
+    kvp = kvp_ref[0]                                 # [BS]
+    qp = qp_ref[0]                                   # [T]
+    entry = bt_ref[pl.program_id(0), lb]             # physical block or -1
+
+    s = jax.lax.dot_general(q.reshape(g * t, d), k,
+                            (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    s = s * sm_scale                                  # [G*T, BS]
+    valid = (kvp[None, :] >= 0) & (kvp[None, :] <= qp[:, None])
+    if window is not None:
+        valid = valid & (qp[:, None] - kvp[None, :] < window)
+    valid = valid & (entry >= 0)   # unallocated logical block: all masked
+    mask = jnp.tile(valid, (g, 1))                    # [G*T, BS]
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_cur = jnp.max(s, axis=-1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where(mask, p, 0.0)
+    l_ref[...] = l_ref[...] * alpha + p.sum(-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(lb == nlb - 1)
+    def _finalize():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0, 0] = out.reshape(g, t, d).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def paged_ragged_verify_attention_quant(
+        q: jax.Array, pool_k: jax.Array, pool_v: jax.Array,
+        k_scale: jax.Array, v_scale: jax.Array, block_table: jax.Array,
+        q_pos: jax.Array, kv_pos: jax.Array, *,
+        window: Optional[int] = None,
+        interpret: bool = False) -> jax.Array:
+    """Paged decode/verify attention off the int8 block pool.
+
+    q [B,T,H,D]; pool_k/pool_v [N, BS, KV, D] int8;
+    k_scale/v_scale [N, BS, KV] fp32 amax scales; block_table [B, MAXB]
+    int32 (-1 = unallocated); q_pos [B,T]; kv_pos [N, BS].  Returns
+    [B,T,H,D].
+
+    Same (B, KV, MAXB) grid and online-softmax scratch as
+    :func:`paged_ragged_verify_attention`; the scale tiles ride the same
+    scalar-prefetched table lookup as the kv_pos tile, so unallocated
+    entries clamp to block 0 and mask out identically.
+    """
+    b, t, h, d = q.shape
+    bs, kv = pool_k.shape[1], pool_k.shape[2]
+    g = h // kv
+    maxb = block_table.shape[1]
+
+    qr = q.reshape(b, t, kv, g, d).transpose(0, 2, 3, 1, 4)  # [B,KV,G,T,D]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, kv, maxb),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, t, d),
+                         lambda bi, ki, li, bt: (bi, ki, 0, 0, 0)),
+            pl.BlockSpec((1, bs, 1, d),
+                         lambda bi, ki, li, bt: (jnp.maximum(bt[bi, li], 0),
+                                                 0, ki, 0)),
+            pl.BlockSpec((1, bs, 1, d),
+                         lambda bi, ki, li, bt: (jnp.maximum(bt[bi, li], 0),
+                                                 0, ki, 0)),
+            pl.BlockSpec((1, bs, 1),
+                         lambda bi, ki, li, bt: (jnp.maximum(bt[bi, li], 0),
+                                                 0, ki)),
+            pl.BlockSpec((1, bs, 1),
+                         lambda bi, ki, li, bt: (jnp.maximum(bt[bi, li], 0),
+                                                 0, ki)),
+            pl.BlockSpec((1, bs),
+                         lambda bi, ki, li, bt: (jnp.maximum(bt[bi, li], 0),
+                                                 0)),
+            pl.BlockSpec((1, t), lambda bi, ki, li, bt: (bi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, t, d),
+                               lambda bi, ki, li, bt: (bi, ki, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g * t,), jnp.float32),
+            pltpu.VMEM((g * t,), jnp.float32),
+            pltpu.VMEM((g * t, d), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_paged_quant_kernel, window=window, nlb=maxb,
+                          sm_scale=1.0 / math.sqrt(d)),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kv, g, t, d), q.dtype),
+        interpret=interpret,
+    )(block_table.astype(jnp.int32), qr, pool_k, pool_v,
+      k_scale, v_scale, kv_pos, q_pos)
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, t, h, d)

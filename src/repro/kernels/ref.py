@@ -56,6 +56,33 @@ def paged_ragged_verify_attention_ref(q: jax.Array, pool_k: jax.Array,
                                        window=window)
 
 
+def paged_ragged_verify_attention_quant_ref(
+        q: jax.Array, pool_k: jax.Array, pool_v: jax.Array,
+        k_scale: jax.Array, v_scale: jax.Array, block_table: jax.Array,
+        q_pos: jax.Array, kv_pos: jax.Array,
+        window: Optional[int] = None) -> jax.Array:
+    """Oracle for the quantized block-paged kernel: gather the int8 view
+    and its scales through the block table, dequantize in f32 (the same
+    ``int8 * scale`` product the kernel fuses in-register), then run the
+    dense oracle.
+
+    pool_k/pool_v [N, BS, KV, D] int8; k_scale/v_scale [N, BS, KV] fp32;
+    block_table [B, MAXB] (-1 = unallocated); kv_pos [N, BS]."""
+    b, maxb = block_table.shape
+    bs = pool_k.shape[1]
+    idx = jnp.maximum(block_table, 0)
+    k_view = (pool_k[idx].astype(jnp.float32)
+              * k_scale[idx][..., None])
+    v_view = (pool_v[idx].astype(jnp.float32)
+              * v_scale[idx][..., None])
+    k_view = k_view.reshape((b, maxb * bs) + k_view.shape[3:])
+    v_view = v_view.reshape((b, maxb * bs) + v_view.shape[3:])
+    pos = jnp.where((block_table >= 0)[:, :, None], kv_pos[idx], -1)
+    pos_view = pos.reshape(b, maxb * bs)
+    return ragged_verify_attention_ref(q, k_view, v_view, q_pos, pos_view,
+                                       window=window)
+
+
 def ngram_propose_ref(tokens: jax.Array, ctx_len: jax.Array, *, n: int,
                       k: int) -> Tuple[jax.Array, jax.Array]:
     """Oracle for the prompt-lookup suffix-match kernel.

@@ -45,6 +45,11 @@ def main() -> None:
                          "that is a common head; >0 implies --paged and "
                          "turns on refcounted prefix caching "
                          "(DESIGN.md §12)")
+    ap.add_argument("--kv-quant", default="none", choices=["none", "int8"],
+                    help="demo only: paged-pool storage mode (DESIGN.md "
+                         "§13); int8 stores K/V as per-block-scaled int8 "
+                         "and fuses the dequant into the verify kv-sweep "
+                         "— implies --paged")
     ap.add_argument("--pipelined", action="store_true",
                     help="plan/dispatch/collect pipelined schedule: "
                          "reconcile the host one round behind the device "
@@ -87,11 +92,12 @@ def main() -> None:
             ap.error("--prefix-share must be in [0, 1)")
         serving = ServingConfig(max_batch_size=4, max_seq_len=256,
                                 pipelined=args.pipelined)
-        if args.paged or caching:     # caching lives on the paged pool
+        quant = args.kv_quant != "none"
+        if args.paged or caching or quant:   # caching/quant need the pool
             serving = ServingConfig(
                 max_batch_size=4, max_seq_len=256, paged_kv=True,
                 kv_block_size=16, pipelined=args.pipelined,
-                prefix_caching=caching,
+                prefix_caching=caching, kv_quant=args.kv_quant,
                 num_kv_blocks=4 * (256 // 16) // 2)   # 50% of dense bytes
         mesh = None
         if args.mesh:

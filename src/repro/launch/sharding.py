@@ -238,6 +238,12 @@ def serve_cache_shardings(cache: PyTree, mesh: Mesh,
                     mesh, canonical_spec(None, None, None, kvp))
             return NamedSharding(
                 mesh, canonical_spec(None, bp(s[1]), None, kvp))
+        if name in ("k_scale", "v_scale"):
+            # int8 pool scales [L, n_blocks, bs, KV]: KV heads follow
+            # their value pool's model-axis split, block axis whole
+            kvp = kv_head_axis(s[3], mesh, rules)
+            return NamedSharding(
+                mesh, canonical_spec(None, None, None, kvp))
         if name in ("ssd", "lru", "conv"):       # [L, B, ...] per-slot rows
             return NamedSharding(mesh, canonical_spec(None, bp(s[1])))
         if name == "tokens":                     # ngram history [B, H]

@@ -138,6 +138,96 @@ def cache_window(cache: CacheT) -> int:
 
 
 # ---------------------------------------------------------------------------
+# int8 quantized KV storage (kv_quant="int8", DESIGN.md §4 / §13)
+# ---------------------------------------------------------------------------
+
+KV_QUANT_MODES = ("none", "int8")
+INT8_QMAX = 127.0
+
+
+def is_quantized(cache: CacheT) -> bool:
+    return "k_scale" in cache
+
+
+def supports_kv_quant(cfg: ModelConfig) -> bool:
+    """Quantized storage rides the block pool; the hybrid family is
+    excluded (its recurrent rows are fp per-slot state and the grouped
+    layer-axis cache threading is not worth the extra plumbing)."""
+    return cfg.family in ("dense", "moe", "vlm")
+
+
+def paged_kv_layers(cfg: ModelConfig) -> int:
+    """Layer-axis size of the paged K/V pools for this family."""
+    if cfg.family == "hybrid":
+        return hybrid_layer_counts(cfg)[0]
+    return cfg.num_layers
+
+
+def scale_buf_shape(cfg: ModelConfig, num_blocks: int, block_size: int,
+                    layers: int) -> Tuple[int, ...]:
+    """Per-slot-per-KV-head fp32 amax scales: one scale per stored KV
+    vector.  Slot granularity (not per-block) because decode writes land
+    one token at a time through the table — requantizing a whole block
+    would need a read-modify-write of its other slots."""
+    return (layers, num_blocks, block_size, eff_kv_heads(cfg))
+
+
+def quantize_kv(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """[..., KV, D] fp -> (int8 values, fp32 per-[..., KV] amax scales).
+
+    All math in f32 with round-half-even, so every producer (multi-row
+    prefill, tail prefill, decode/verify writes) quantizes the same
+    vector bit-identically — the warm-vs-cold stream-identity anchor.
+    A zero vector maps to scale 1.0 (not 0) so dequant never divides or
+    multiplies by zero-by-convention."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1)
+    scale = jnp.where(amax > 0, amax / INT8_QMAX, 1.0)
+    q = jnp.clip(jnp.round(xf / scale[..., None]), -INT8_QMAX, INT8_QMAX)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_kv(q: jax.Array, scale: jax.Array) -> jax.Array:
+    """Inverse of :func:`quantize_kv`: [..., KV, D] int8 + [..., KV]
+    scales -> f32.  The Pallas kv-sweep fuses exactly this product
+    in-register; this jnp form is the oracle's and the XLA fallback's."""
+    return q.astype(jnp.float32) * scale[..., None]
+
+
+def fake_quantize_kv(x: jax.Array) -> jax.Array:
+    """dequantize(quantize(x)) at x's dtype — what attention must read
+    during prefill so cold-prefill, warm-tail and decode paths all see
+    the identical (quantized) KV values."""
+    q, s = quantize_kv(x)
+    return dequantize_kv(q, s).astype(x.dtype)
+
+
+def kv_block_bytes(cfg: ModelConfig, block_size: int, kv_quant: str,
+                   dtype=jnp.float32) -> int:
+    """HBM bytes one pool block costs across all paged layers (K + V,
+    plus the scale arrays under int8).  The scheduler's byte accounting
+    and the equal-byte pool sizing both resolve through here."""
+    layers = paged_kv_layers(cfg)
+    elems = layers * block_size * eff_kv_heads(cfg) * cfg.resolved_head_dim
+    if kv_quant == "int8":
+        scales = layers * block_size * eff_kv_heads(cfg)
+        return 2 * (elems * 1 + scales * 4)
+    if kv_quant == "none":
+        return 2 * elems * jnp.dtype(dtype).itemsize
+    raise ValueError(f"unknown kv_quant mode {kv_quant!r}")
+
+
+def equal_byte_blocks(cfg: ModelConfig, fp_blocks: int, block_size: int,
+                      fp_dtype=jnp.float32) -> int:
+    """How many int8 blocks the byte budget of ``fp_blocks`` fp blocks
+    buys (>= 2x for any head_dim >= 8/3: int8 costs D + 4 bytes per
+    stored vector vs 4*D fp32)."""
+    fp = kv_block_bytes(cfg, block_size, "none", dtype=fp_dtype)
+    q8 = kv_block_bytes(cfg, block_size, "int8")
+    return fp_blocks * fp // q8
+
+
+# ---------------------------------------------------------------------------
 # Block-paged layout
 # ---------------------------------------------------------------------------
 
@@ -164,7 +254,8 @@ def pool_buf_shape(cfg: ModelConfig, num_blocks: int, block_size: int,
 def paged_cache_struct(cfg: ModelConfig, batch: int, max_len: int,
                        num_blocks: int, block_size: int,
                        dtype=jnp.bfloat16, abstract: bool = False,
-                       require_full_seq: bool = True) -> CacheT:
+                       require_full_seq: bool = True,
+                       kv_quant: str = "none") -> CacheT:
     """Block-paged cache pytree: shared KV pool + per-sequence tables.
 
     ``k``/``v`` are pools ``[L, n_blocks, bs, KV, D]`` (the same leading
@@ -172,6 +263,11 @@ def paged_cache_struct(cfg: ModelConfig, batch: int, max_len: int,
     pool-level, ``block_table [B, max_blocks]`` maps logical to physical
     blocks (-1 = unallocated).  Recurrent state (hybrid lru/conv) stays
     dense per-slot.
+
+    ``kv_quant="int8"`` stores the pools as int8 and adds fp32 amax
+    scale arrays ``k_scale``/``v_scale`` ``[L, n_blocks, bs, KV]`` —
+    one scale per stored KV vector, written alongside the values and
+    carried with the block through COW copies and eviction/revival.
 
     ``require_full_seq`` asserts the pool holds at least one max-length
     sequence — the LIFO-preemption convergence guarantee.  Prefix-cached
@@ -181,6 +277,11 @@ def paged_cache_struct(cfg: ModelConfig, batch: int, max_len: int,
     """
     if not supports_paged(cfg):
         raise ValueError(f"family {cfg.family!r} has no paged KV layout")
+    if kv_quant not in KV_QUANT_MODES:
+        raise ValueError(f"unknown kv_quant mode {kv_quant!r}")
+    if kv_quant != "none" and not supports_kv_quant(cfg):
+        raise ValueError(
+            f"family {cfg.family!r} has no quantized KV layout")
     assert not require_full_seq or num_blocks * block_size >= max_len, (
         "pool smaller than one max-length sequence: "
         f"{num_blocks}x{block_size} < {max_len}")
@@ -207,17 +308,25 @@ def paged_cache_struct(cfg: ModelConfig, batch: int, max_len: int,
         c["conv"] = mk((n_rec, batch, cfg.rglru.conv_width - 1,
                         cfg.rglru.lru_width), dtype)
     else:
+        pool_dtype = jnp.int8 if kv_quant == "int8" else dtype
         c["k"] = mk(pool_buf_shape(cfg, num_blocks, block_size,
-                                   cfg.num_layers), dtype)
+                                   cfg.num_layers), pool_dtype)
         c["v"] = mk(pool_buf_shape(cfg, num_blocks, block_size,
-                                   cfg.num_layers), dtype)
+                                   cfg.num_layers), pool_dtype)
+        if kv_quant == "int8":
+            sshape = scale_buf_shape(cfg, num_blocks, block_size,
+                                     cfg.num_layers)
+            c["k_scale"] = mk(sshape, jnp.float32)
+            c["v_scale"] = mk(sshape, jnp.float32)
     return c
 
 
 def paged_prefill_view(cfg: ModelConfig, pool_k: jax.Array,
                        pool_v: jax.Array, kv_pos: jax.Array,
                        table_rows: jax.Array,
-                       lengths: Optional[jax.Array] = None) -> CacheT:
+                       lengths: Optional[jax.Array] = None,
+                       k_scale: Optional[jax.Array] = None,
+                       v_scale: Optional[jax.Array] = None) -> CacheT:
     """Batch-R paged cache view over the *shared* pools, for prefilling a
     group of requests straight into their allocated blocks in ONE
     multi-row program (``table_rows [R, max_blocks]``, one row per
@@ -237,6 +346,8 @@ def paged_prefill_view(cfg: ModelConfig, pool_k: jax.Array,
     c: CacheT = {"length": length,
                  "k": pool_k, "v": pool_v, "kv_pos": kv_pos,
                  "block_table": table_rows}
+    if k_scale is not None:
+        c["k_scale"], c["v_scale"] = k_scale, v_scale
     if cfg.family == "hybrid":
         _, n_rec = hybrid_layer_counts(cfg)
         c["lru"] = jnp.zeros((n_rec, rows, cfg.rglru.lru_width), jnp.float32)
@@ -322,6 +433,51 @@ def gather_paged_pos(kv_pos: jax.Array, block_table: jax.Array) -> jax.Array:
     return g.reshape(block_table.shape[0], -1)
 
 
+def write_kv_paged_quant(pool_k: jax.Array, pool_v: jax.Array,
+                         k_scale: jax.Array, v_scale: jax.Array,
+                         k_new: jax.Array, v_new: jax.Array,
+                         positions: jax.Array, block_table: jax.Array,
+                         keep: Optional[jax.Array] = None
+                         ) -> Tuple[jax.Array, jax.Array,
+                                    jax.Array, jax.Array]:
+    """Quantize-on-write: the int8 values and their fp32 scales scatter
+    through the same flat pool index, so a dropped value write drops its
+    scale too.  Per-layer pools ``[N, bs, KV, D]`` + scales
+    ``[N, bs, KV]`` (the transformer scan slices the layer axis)."""
+    n, bs = pool_k.shape[:2]
+    flat = _paged_flat_index(positions, block_table, bs, n, keep).reshape(-1)
+    qk, sk = quantize_kv(k_new)
+    qv, sv = quantize_kv(v_new)
+    fk = pool_k.reshape((n * bs,) + pool_k.shape[2:])
+    fv = pool_v.reshape((n * bs,) + pool_v.shape[2:])
+    fks = k_scale.reshape((n * bs,) + k_scale.shape[2:])
+    fvs = v_scale.reshape((n * bs,) + v_scale.shape[2:])
+    fk = fk.at[flat].set(qk.reshape((-1,) + qk.shape[2:]), mode="drop")
+    fv = fv.at[flat].set(qv.reshape((-1,) + qv.shape[2:]), mode="drop")
+    fks = fks.at[flat].set(sk.reshape((-1,) + sk.shape[2:]), mode="drop")
+    fvs = fvs.at[flat].set(sv.reshape((-1,) + sv.shape[2:]), mode="drop")
+    return (fk.reshape(pool_k.shape), fv.reshape(pool_v.shape),
+            fks.reshape(k_scale.shape), fvs.reshape(v_scale.shape))
+
+
+def gather_paged_kv_quant(pool_k: jax.Array, pool_v: jax.Array,
+                          k_scale: jax.Array, v_scale: jax.Array,
+                          block_table: jax.Array
+                          ) -> Tuple[jax.Array, jax.Array]:
+    """Dequantized per-sequence dense views [B, max_blocks*bs, KV, D]
+    (f32).  XLA reference path only — the TPU data plane dequantizes
+    in-register inside the Pallas kv-sweep instead
+    (:func:`repro.kernels.ragged_attention
+    .paged_ragged_verify_attention_quant`)."""
+    idx = jnp.maximum(block_table, 0)
+    b, maxb = block_table.shape
+    bs = pool_k.shape[1]
+    k = dequantize_kv(pool_k[idx], k_scale[idx])
+    v = dequantize_kv(pool_v[idx], v_scale[idx])
+    return (k.reshape((b, maxb * bs) + k.shape[3:]),
+            v.reshape((b, maxb * bs) + v.shape[3:]))
+
+
 def reset_blocks(kv_pos: jax.Array, block_ids) -> jax.Array:
     """Mark freshly (re)allocated blocks empty.  Mandatory on allocation:
     a block recycled from another sequence still holds kv_pos values that
@@ -346,6 +502,19 @@ def copy_blocks(pool_k: jax.Array, pool_v: jax.Array, kv_pos: jax.Array,
     pool_v = pool_v.at[:, dst].set(pool_v[:, read], mode="drop")
     kv_pos = kv_pos.at[dst].set(kv_pos[read], mode="drop")
     return pool_k, pool_v, kv_pos
+
+
+def copy_scales(k_scale: jax.Array, v_scale: jax.Array, src: jax.Array,
+                dst: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Scale-array half of a COW block copy (:func:`copy_blocks`): the
+    fp32 amax scales travel with their block's int8 values, same
+    sentinel-padding drop discipline."""
+    src = jnp.asarray(src, jnp.int32)
+    dst = jnp.asarray(dst, jnp.int32)
+    read = jnp.minimum(src, k_scale.shape[1] - 1)
+    k_scale = k_scale.at[:, dst].set(k_scale[:, read], mode="drop")
+    v_scale = v_scale.at[:, dst].set(v_scale[:, read], mode="drop")
+    return k_scale, v_scale
 
 
 def write_kv(k_buf: jax.Array, v_buf: jax.Array, k_new: jax.Array,

@@ -157,9 +157,18 @@ def _attn_sublayer(p: dict, cfg: ModelConfig, x: jax.Array, *,
     Decode attention then reads straight off the pool through the
     block-table-indexed Pallas kernel on TPU (``kv_pos_pool`` is the
     pool-level position map it needs), or over the gathered per-sequence
-    view on the XLA reference path (exact, materializing)."""
+    view on the XLA reference path (exact, materializing).
+
+    A 4-tuple ``kv_buf`` ``(k, v, k_scale, v_scale)`` is the int8
+    quantized pool (DESIGN.md §13): writes quantize (values + per-slot
+    amax scales), decode reads dequantize — in-register inside the
+    Pallas kv-sweep, or via the gathered f32 view on the XLA path — and
+    prefill attends over fake-quantized fresh K/V so every read of a
+    stored vector (cold prefill, warm tail, decode/verify) sees the
+    identical quantized values."""
     q, k, v = qkv_project(p, cfg, x, rope_positions)
     b, t = x.shape[:2]
+    quant = kv_buf is not None and len(kv_buf) == 4
 
     def pin_heads(arr):
         # [B, T, H, D] head-dim TP constraint: sharding does not propagate
@@ -208,9 +217,17 @@ def _attn_sublayer(p: dict, cfg: ModelConfig, x: jax.Array, *,
         return attn_output(p, out), None
 
     if mode == "prefill":
-        # attend over fresh k/v, then store into the ring / block pool
+        # attend over fresh k/v, then store into the ring / block pool.
+        # Quantized pool: attention reads the fake-quantized fresh K/V —
+        # exactly the values any later dequantized read reconstructs
+        # (per-head quantization commutes with pad_kv's exact head
+        # replication), so cold and warm streams stay identical.
         kp_, vp_ = pad_kv(k, v)
-        ke, ve = expand_kv(k, v)
+        if quant:
+            ke, ve = expand_kv(cache_lib.fake_quantize_kv(k),
+                               cache_lib.fake_quantize_kv(v))
+        else:
+            ke, ve = expand_kv(k, v)
         if t >= BLOCKWISE_THRESHOLD:
             out = flash_attend(q, ke, ve, kv_valid=input_mask,
                                window=window, causal=causal)
@@ -219,6 +236,11 @@ def _attn_sublayer(p: dict, cfg: ModelConfig, x: jax.Array, *,
                         else jnp.ones((b, t), bool))
             out = attend(q, ke, ve, q_pos=positions, kv_pos=positions,
                          kv_valid=kv_valid, window=window, causal=causal)
+        if quant:
+            new_bufs = cache_lib.write_kv_paged_quant(
+                kv_buf[0], kv_buf[1], kv_buf[2], kv_buf[3], kp_, vp_,
+                positions, block_table)
+            return attn_output(p, out), new_bufs
         if block_table is not None:
             k_buf, v_buf = cache_lib.write_kv_paged(
                 kv_buf[0], kv_buf[1], kp_, vp_, positions, block_table)
@@ -229,27 +251,43 @@ def _attn_sublayer(p: dict, cfg: ModelConfig, x: jax.Array, *,
 
     # decode / verify: write first, then attend over the ring / pool view
     kp_, vp_ = pad_kv(k, v)
-    if block_table is not None:
+    if quant:
+        k_buf, v_buf, ks_buf, vs_buf = cache_lib.write_kv_paged_quant(
+            kv_buf[0], kv_buf[1], kv_buf[2], kv_buf[3], kp_, vp_,
+            positions, block_table, keep=write_mask)
+        new_bufs = (k_buf, v_buf, ks_buf, vs_buf)
+        if kv_pos_pool is not None and kernel_ops.on_tpu():
+            # TPU data plane: int8 tiles + scale columns stream through
+            # the table lookup and dequantize in-register in the sweep
+            out = kernel_ops.paged_ragged_attention_quant(
+                q, k_buf, v_buf, ks_buf, vs_buf, block_table, positions,
+                kv_pos_pool, window=window)
+            return attn_output(p, out), new_bufs
+        k_att, v_att = cache_lib.gather_paged_kv_quant(
+            k_buf, v_buf, ks_buf, vs_buf, block_table)
+    elif block_table is not None:
         k_buf, v_buf = cache_lib.write_kv_paged(
             kv_buf[0], kv_buf[1], kp_, vp_, positions, block_table,
             keep=write_mask)
+        new_bufs = (k_buf, v_buf)
         if kv_pos_pool is not None and kernel_ops.on_tpu():
             # TPU data plane: the kernel's index maps dereference the
             # block table — no per-sequence dense view is materialized
             out = kernel_ops.paged_ragged_attention(
                 q, k_buf, v_buf, block_table, positions, kv_pos_pool,
                 window=window)
-            return attn_output(p, out), (k_buf, v_buf)
+            return attn_output(p, out), new_bufs
         k_att, v_att = cache_lib.gather_paged_kv(k_buf, v_buf, block_table)
     else:
         k_buf, v_buf = cache_lib.write_kv(kv_buf[0], kv_buf[1], kp_, vp_,
                                           positions)
+        new_bufs = (k_buf, v_buf)
         k_att, v_att = k_buf, v_buf
     kv_valid = kv_pos >= 0
     ke, ve = expand_kv(k_att, v_att)
     out = attend(q, ke, ve, q_pos=positions, kv_pos=kv_pos,
                  kv_valid=kv_valid, window=window)
-    return attn_output(p, out), (k_buf, v_buf)
+    return attn_output(p, out), new_bufs
 
 
 # ---------------------------------------------------------------------------
@@ -269,7 +307,13 @@ def _token_block(p: dict, cfg: ModelConfig, x: jax.Array, layer_cache: PyTree,
             use_chunked=ctx["mode"] in ("train", "prefill"))
         return x + h, new_state, aux
 
-    kv = (layer_cache["k"], layer_cache["v"]) if layer_cache is not None else None
+    kv = None
+    if layer_cache is not None:
+        if "k_scale" in layer_cache:     # int8 pool: scales ride along
+            kv = (layer_cache["k"], layer_cache["v"],
+                  layer_cache["k_scale"], layer_cache["v_scale"])
+        else:
+            kv = (layer_cache["k"], layer_cache["v"])
     h, new_kv = _attn_sublayer(
         p["attn"], cfg, rmsnorm(x, p["ln1"], cfg.norm_eps),
         mode=ctx["mode"], positions=ctx["positions"],
@@ -292,7 +336,9 @@ def _token_block(p: dict, cfg: ModelConfig, x: jax.Array, layer_cache: PyTree,
     if layer_cache is not None and fam != "ssm":
         new_cache = dict(layer_cache)
         if new_kv is not None:
-            new_cache["k"], new_cache["v"] = new_kv
+            new_cache["k"], new_cache["v"] = new_kv[0], new_kv[1]
+            if len(new_kv) == 4:
+                new_cache["k_scale"], new_cache["v_scale"] = new_kv[2:]
     return x, new_cache, aux
 
 
@@ -450,7 +496,11 @@ def _stacked_cache_view(cfg: ModelConfig, cache: Optional[cache_lib.CacheT]
         return None
     fam = cfg.family
     if fam in ("dense", "moe", "vlm"):
-        return {"k": cache["k"], "v": cache["v"]}
+        out = {"k": cache["k"], "v": cache["v"]}
+        if "k_scale" in cache:           # int8 pool: per-layer scales
+            out["k_scale"] = cache["k_scale"]
+            out["v_scale"] = cache["v_scale"]
+        return out
     if fam == "ssm":
         return {"ssd": cache["ssd"], "conv": cache["conv"]}
     if fam == "audio":

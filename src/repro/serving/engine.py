@@ -138,6 +138,21 @@ class ServingEngine:
                 f"({cfg_target.family}, "
                 f"{cfg_draft.family if cfg_draft else None}) has no paged "
                 "KV layout (supported: dense/moe/vlm/hybrid)")
+        # quantized KV storage (DESIGN.md §13): int8 pools exist only on
+        # the paged data plane, and only for families whose paged cache
+        # is a pure attention pool — hybrid recurrent leaves stay fp.
+        self.kv_quant = serving.kv_quant
+        if self.kv_quant != "none":
+            if not self.paged:
+                raise ValueError("kv_quant requires paged_kv=True")
+            if not (cache_lib.supports_kv_quant(cfg_target)
+                    and (not drafter.mirrors_kv()
+                         or cache_lib.supports_kv_quant(cfg_draft))):
+                raise ValueError(
+                    f"kv_quant={self.kv_quant!r} but family pair "
+                    f"({cfg_target.family}, "
+                    f"{cfg_draft.family if cfg_draft else None}) has no "
+                    "quantized paged layout (supported: dense/moe/vlm)")
         # prefix caching (DESIGN.md §12): effective only on the paged
         # data plane with attention-only families — recurrent per-slot
         # state (hybrid lru/conv, ssm) cannot be recovered from shared
@@ -153,17 +168,23 @@ class ServingEngine:
         # block budget returns to the target pool, so the same
         # ServingConfig admits proportionally more in-flight sequences
         # (the per-sequence charge halves, DESIGN.md §9)
+        block_bytes = (cache_lib.kv_block_bytes(cfg_target,
+                                                serving.kv_block_size,
+                                                self.kv_quant)
+                       if self.paged else 0)
         self.scheduler = LookaheadScheduler(serving, spec,
                                             policy=self.policy,
                                             kv_mirror=drafter.mirrors_kv(),
-                                            prefix_cache=self.prefix_caching)
+                                            prefix_cache=self.prefix_caching,
+                                            block_bytes=block_bytes)
         self.key = jax.random.PRNGKey(seed)
         b = serving.max_batch_size
         paged_arg = ((self.scheduler.kv_blocks_total(),
                       serving.kv_block_size) if self.paged else None)
         self.state = sd.init_round_state(
             cfg_target, cfg_draft, spec, b, serving.max_seq_len,
-            self.key, paged=paged_arg, drafter=drafter)
+            self.key, paged=paged_arg, drafter=drafter,
+            kv_quant=self.kv_quant)
         # --- serving mesh (DESIGN.md §5): place params + state, build the
         # per-bucket round jits with explicit in/out shardings ------------
         self.mesh = mesh
@@ -464,11 +485,13 @@ class ServingEngine:
                 rows_t, last_t = prefill_lib.prefill_paged_tail(
                     self.pt, self.cfg_t, tc["k"], tc["v"], tc["kv_pos"],
                     rows_j, toks, starts_j, tails_j, cow_src_j, cow_dst_j,
-                    plan=self._plan)
+                    plan=self._plan, k_scale=tc.get("k_scale"),
+                    v_scale=tc.get("v_scale"))
             else:
                 rows_t, last_t = prefill_lib.prefill_paged_rows(
                     self.pt, self.cfg_t, tc["k"], tc["v"], tc["kv_pos"],
-                    rows_j, toks, plen_j, plan=self._plan)
+                    rows_j, toks, plen_j, plan=self._plan,
+                    k_scale=tc.get("k_scale"), v_scale=tc.get("v_scale"))
             tc = prefill_lib.scatter_paged_rows(tc, rows_t, idx)
         else:
             st = self.state
@@ -912,6 +935,17 @@ class ServingEngine:
                 (r["kv_blocks_in_use"] for r in self.round_log),
                 default=0.0)),
             "kv_pool_blocks": float(self.scheduler.kv_blocks_total()),
+            # storage-plane telemetry (DESIGN.md §13): bytes, not blocks,
+            # are what an int8 pool halves at equal block count
+            "kv_quant": self.kv_quant,
+            "kv_block_bytes": float(self.scheduler.kv_block_bytes()),
+            "kv_pool_bytes": float(self.scheduler.kv_bytes_total()),
+            # resident KV bytes integrated over rounds — a proxy for the
+            # bytes the verify kv-sweeps stream from the pool, the
+            # quantity int8 storage actually cuts (benchmarks/table9)
+            "kv_bytes_swept": float(sum(
+                r["kv_blocks_in_use"] for r in self.round_log))
+                * float(self.scheduler.kv_block_bytes()),
             # pool-pressure aggregates + prefix-cache lifetime telemetry
             # (satellite of DESIGN.md §12): hit rate is token-weighted
             # over every (re)admission prefill the run performed

@@ -89,10 +89,16 @@ class BlockAllocator:
     the three sets pairwise disjoint.
     """
 
-    def __init__(self, num_blocks: int, block_size: int):
+    def __init__(self, num_blocks: int, block_size: int,
+                 block_bytes: int = 0):
         assert num_blocks > 0 and block_size > 0
         self.num_blocks = num_blocks
         self.block_size = block_size
+        # bytes one physical block costs in the backing pool (dtype- and
+        # quant-mode-aware, cache_lib.kv_block_bytes).  Blocks stay the
+        # allocation unit — bytes are telemetry: an int8 pool admits the
+        # same block count at under half the bytes (DESIGN.md §13).
+        self.block_bytes = block_bytes
         # LIFO free list, seeded so the first allocations come out in
         # ascending id order (pleasant for debugging, irrelevant for
         # correctness — the block table indirection absorbs any order)
@@ -122,6 +128,15 @@ class BlockAllocator:
     def n_cached(self) -> int:
         """Warm unreferenced blocks held for prefix reuse."""
         return len(self._evictable)
+
+    @property
+    def bytes_total(self) -> int:
+        """Pool footprint in bytes (0 when the caller never sized it)."""
+        return self.num_blocks * self.block_bytes
+
+    @property
+    def bytes_in_use(self) -> int:
+        return self.n_used * self.block_bytes
 
     def blocks_for(self, n_tokens: int) -> int:
         return max(0, -(-n_tokens // self.block_size))
@@ -257,7 +272,8 @@ class LookaheadScheduler:
     def __init__(self, serving: ServingConfig, spec: SpecDecodeConfig,
                  policy: Optional[SpecPolicy] = None,
                  kv_mirror: bool = True,
-                 prefix_cache: Optional[bool] = None):
+                 prefix_cache: Optional[bool] = None,
+                 block_bytes: int = 0):
         """``kv_mirror``: whether the serving drafter holds a paged KV
         pool mirroring the target's block ids (``Drafter.mirrors_kv``).
         ``ServingConfig.num_kv_blocks`` budgets such a mirrored *pair*;
@@ -269,7 +285,13 @@ class LookaheadScheduler:
         ``prefix_cache`` overrides ``serving.prefix_caching`` — the
         engine passes the *effective* flag after gating on model-family
         support (recurrent per-slot state cannot be recovered from the
-        block pool, DESIGN.md §12)."""
+        block pool, DESIGN.md §12).
+
+        ``block_bytes``: bytes one pool block costs under the serving
+        cache's dtype/quant mode (``cache_lib.kv_block_bytes``); the
+        engine sources it from the target config.  Purely telemetry —
+        admission stays block-denominated — but it is what makes the
+        ``kv_pool_bytes`` metrics honest across fp and int8 pools."""
         self.serving = serving
         self.spec = spec
         self.policy = policy if policy is not None else build_policy(spec)
@@ -281,7 +303,8 @@ class LookaheadScheduler:
         self.prefix_cache = self.prefix_cache and serving.paged_kv
         if serving.paged_kv:
             pool = serving.pool_blocks() * (1 if kv_mirror else 2)
-            self.allocator = BlockAllocator(pool, serving.kv_block_size)
+            self.allocator = BlockAllocator(pool, serving.kv_block_size,
+                                            block_bytes=block_bytes)
             # Without prefix caching the pool must hold one max-length
             # sequence outright, so LIFO preemption always converges.
             # With it, smaller pools are admissible: the pool-feasibility
@@ -293,6 +316,7 @@ class LookaheadScheduler:
                 >= serving.max_seq_len), (
                 "KV pool smaller than one max-length sequence — "
                 "preemption could never free enough blocks")
+        self.block_bytes = block_bytes
         # latest per-slot SL predictions (host mirror, engine-refreshed)
         self.sl_pred = np.full((serving.max_batch_size,),
                                self.policy.initial_sl_value(), np.int32)
@@ -593,6 +617,18 @@ class LookaheadScheduler:
         if self.allocator is not None:
             return self.allocator.num_blocks
         return self.serving.max_batch_size * self.serving.blocks_per_seq()
+
+    def kv_block_bytes(self) -> int:
+        """Bytes one pool block costs (0 when never sized — dense
+        engines or direct-driver schedulers)."""
+        return self.block_bytes
+
+    def kv_bytes_total(self) -> int:
+        """Pool footprint in bytes under the serving storage mode."""
+        return self.kv_blocks_total() * self.block_bytes
+
+    def kv_bytes_in_use(self) -> int:
+        return self.kv_blocks_in_use() * self.block_bytes
 
     def kv_blocks_cached(self) -> int:
         """Warm unreferenced blocks parked on the evictable LRU."""

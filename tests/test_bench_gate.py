@@ -19,7 +19,8 @@ import pytest
 # PYTHONPATH=src) — same pattern as examples/serve_dynamic_sl.py
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 from benchmarks.gate import (_entry, _verdict, cmd_collect, cmd_compare,
-                             collect_table6, collect_table7, collect_table8)
+                             collect_table6, collect_table7, collect_table8,
+                             collect_table9)
 
 
 # ---------------------------------------------------------------------------
@@ -68,6 +69,14 @@ T8 = {"share0.5": {"prefill_tokens_on": 256, "prefill_calls_on": 2,
       "paged_half_shared": {"requests_finished": 4, "kv_pool_blocks": 32.0,
                             "tok_per_round": 4.5}}
 
+T9 = {"fp_paged_n64": {"requests_finished": 6, "kv_pool_blocks": 64.0,
+                       "kv_block_bytes": 16384.0, "rounds": 23,
+                       "tok_per_round": 4.17, "kv_bytes_swept": 4.39e6},
+      "int8_paged_n64": {"requests_finished": 6, "kv_pool_blocks": 64.0,
+                         "kv_block_bytes": 4352.0, "rounds": 23,
+                         "tok_per_round": 4.17, "kv_bytes_swept": 1.17e6,
+                         "prefix_match_frac": 0.53}}
+
 
 def test_collect_table6_metrics_and_modes():
     entries = collect_table6(T6)
@@ -105,6 +114,18 @@ def test_collect_table8_modes_and_zero_hit_omission():
     assert "share0.prefix_cache_hit_rate" not in metrics
     assert "share0.prefix_cache_hit_blocks" not in metrics
     assert "share0.prefill_tokens_on" in metrics
+
+
+def test_collect_table9_modes_and_divergence_pin():
+    by = {e["metric"]: e for e in collect_table9(T9)}
+    # byte geometry is pure config arithmetic: exact, hard-gated
+    assert by["int8_paged_n64.kv_block_bytes"]["better"] == "exact"
+    assert by["int8_paged_n64.kv_block_bytes"]["mode"] == "fail"
+    assert by["fp_paged_n64.kv_bytes_swept"]["better"] == "lower"
+    # seeded greedy stream divergence vs fp is bit-stable — exact
+    assert by["int8_paged_n64.prefix_match_frac"]["better"] == "exact"
+    # the fp reference cell has no divergence metric (it IS the reference)
+    assert "fp_paged_n64.prefix_match_frac" not in by
 
 
 # ---------------------------------------------------------------------------
@@ -162,14 +183,16 @@ def test_summary_file_written(tmp_path):
 
 
 def test_collect_cli_round_trips_files(tmp_path):
-    t6, t7, t8 = (tmp_path / "t6.json", tmp_path / "t7.json",
-                  tmp_path / "t8.json")
+    t6, t7, t8, t9 = (tmp_path / "t6.json", tmp_path / "t7.json",
+                      tmp_path / "t8.json", tmp_path / "t9.json")
     t6.write_text(json.dumps(T6))
     t7.write_text(json.dumps({"model/dsde": dict(CELL)}))
     t8.write_text(json.dumps(T8))
+    t9.write_text(json.dumps(T9))
     out = tmp_path / "BENCH_pr.json"
     args = types.SimpleNamespace(table6=str(t6), table7=str(t7),
-                                 table8=str(t8), out=str(out))
+                                 table8=str(t8), table9=str(t9),
+                                 out=str(out))
     assert cmd_collect(args) == 0
     entries = json.loads(out.read_text())
     assert {tuple(sorted(e)) for e in entries} == {

@@ -22,6 +22,7 @@ from repro.configs import get_config
 from repro.core.config import ServingConfig, SpecDecodeConfig
 from repro.core.drafters import available_drafters
 from repro.core.policies import available_policies
+from repro.models import cache as cache_lib
 from repro.models.module import init_params
 from repro.models.transformer import model_specs
 from repro.serving.engine import ServingEngine
@@ -316,12 +317,12 @@ BATCH2 = [SHARED + RNG.randint(0, 1000, size=5).tolist(),
 
 def _run_batches(cfg, pt, pd, policy, drafter, *, paged, prefix_caching,
                  pipelined, max_new=10, nblocks=None, bs=16, batch=2,
-                 max_seq=128, batches=(BATCH1, BATCH2)):
+                 max_seq=128, batches=(BATCH1, BATCH2), kv_quant="none"):
     spec = SpecDecodeConfig(policy=policy, temperature=0.0, drafter=drafter)
     sv = ServingConfig(max_batch_size=batch, max_seq_len=max_seq,
                        paged_kv=paged, kv_block_size=bs,
                        num_kv_blocks=nblocks, prefix_caching=prefix_caching,
-                       pipelined=pipelined)
+                       pipelined=pipelined, kv_quant=kv_quant)
     model = drafter == "model"
     eng = ServingEngine(pt, cfg, pd if model else None,
                         cfg if model else None, spec, sv, seed=0)
@@ -455,3 +456,63 @@ def test_prefix_caching_requires_paged_and_attention_families(small_pair):
     m = eng.run([r])
     assert m["requests_finished"] == 1
     assert m["prefix_cache_hit_blocks"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Prefix caching x quantized pool (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("drafter", ["model", "ngram"])
+def test_warm_streams_match_cold_in_quant_plane(small_pair, drafter):
+    """The §12 exactness contract holds INSIDE the quantized plane: a
+    cache-warm int8 engine emits streams byte-identical to the cache-cold
+    int8 engine (the fp stream is NOT the reference — storage
+    quantization legitimately shifts it).  BATCH2's block-aligned repeat
+    forces a COW fork, so this also pins copy_scales: a fork that
+    dropped or misrouted the per-slot scales would corrupt the dequant
+    of the whole forked block and diverge loudly."""
+    cfg, pt, pd = small_pair
+    cold, _, _, _ = _run_batches(cfg, pt, pd, "static", drafter, paged=True,
+                                 prefix_caching=False, pipelined=False,
+                                 kv_quant="int8")
+    warm, m, _, _ = _run_batches(cfg, pt, pd, "static", drafter, paged=True,
+                                 prefix_caching=True, pipelined=False,
+                                 kv_quant="int8")
+    assert cold == warm, drafter
+    assert m["prefix_cache_hit_blocks"] > 0
+    assert m["cow_copies"] >= 1
+
+
+def test_warm_revival_restores_scale_state(small_pair):
+    """LRU eviction + revival in the quantized plane: an evicted-then-
+    revived prefix must come back with its scale state intact (the warm
+    block's int8 payload is meaningless without it), and an actually
+    reclaimed block must degrade to a miss, never to corruption."""
+    cfg, pt, pd = small_pair
+    a = SHARED[:32]
+    b = RNG.randint(0, 1000, size=97).tolist()       # 7 blocks: drains pool
+    batches = ([list(a)], [list(b)], [list(a)])
+    kw = dict(max_new=8, nblocks=8, batch=1, batches=batches,
+              kv_quant="int8")
+    cold, _, _, _ = _run_batches(cfg, pt, pd, "static", "model", paged=True,
+                                 prefix_caching=False, pipelined=False, **kw)
+    warm, m, eng, _ = _run_batches(cfg, pt, pd, "static", "model",
+                                   paged=True, prefix_caching=True,
+                                   pipelined=False, **kw)
+    assert m["prefix_cache_evictions"] >= 1
+    assert cold == warm
+    eng.scheduler.allocator.check_invariants()
+
+
+def test_quant_pool_scale_leaves_present_in_engine_cache(small_pair):
+    cfg, pt, pd = small_pair
+    _, _, eng, _ = _run_batches(cfg, pt, pd, "static", "model", paged=True,
+                                prefix_caching=True, pipelined=False,
+                                kv_quant="int8", batches=(BATCH1,))
+    tc = eng.state.target_cache
+    assert cache_lib.is_quantized(tc)
+    assert tc["k"].dtype == jnp.int8
+    assert tc["k_scale"].shape == tc["k"].shape[:-1]
+    # the mirrored draft pool is quantized too (same block ids, same mode)
+    dc = eng.state.draft_cache
+    assert cache_lib.is_quantized(dc)
