@@ -196,6 +196,22 @@ def serve(cfg_t, cfg_d, pt, pd, prompts: List[List[int]], *,
     return metrics, reqs, eng
 
 
+def dist_stats(values, prefix: str,
+               ps: Tuple[int, ...] = (50, 99)) -> Dict[str, float]:
+    """Mean + percentile summary of a latency/size distribution, keyed
+    ``{prefix}_mean`` / ``{prefix}_p{P}``.  Empty-safe (all-zero) and
+    None-filtering, so callers can pass raw per-request metric lists
+    (``[r.ttft() for r in reqs]``) without pre-cleaning.  The one shared
+    definition keeps every table's \"p99\" the same p99
+    (``np.percentile``, linear interpolation)."""
+    vals = [v for v in values if v is not None]
+    out = {f"{prefix}_mean": float(np.mean(vals)) if vals else 0.0}
+    for p in ps:
+        out[f"{prefix}_p{p}"] = (float(np.percentile(vals, p))
+                                 if vals else 0.0)
+    return out
+
+
 def latency_units(metrics: Dict, cost_ratio: float) -> float:
     """Hardware-neutral serving cost: target rounds + draft-step cost.
     Uses *effective* draft steps (early-stopping policies like AdaEDL skip

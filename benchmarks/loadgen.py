@@ -1,0 +1,179 @@
+"""Trace-replay load generation for the serving front-end (DESIGN.md §14).
+
+A *trace* is a deterministic, seeded, JSON-serializable request set with
+arrival offsets — the reproducibility unit for every saturation number
+this repo reports.  Format (``version`` 1):
+
+    {"version": 1, "seed": 0, "process": "poisson", "rate_rps": 4.0,
+     "requests": [{"request_id": 0, "arrival_s": 0.0,
+                   "prompt": [...], "max_new_tokens": 12,
+                   "dataset": "code"}, ...]}
+
+Arrival processes (both seeded):
+
+* ``poisson`` — exponential interarrivals at ``rate_rps`` (the classic
+  open-loop arrival model);
+* ``bursty``  — Gamma interarrivals with shape ``BURST_SHAPE`` < 1 and
+  the same mean, i.e. the same offered load with coefficient of
+  variation 1/sqrt(shape) ≈ 2: arrivals clump into on-off bursts that
+  stress admission and the preemption path far harder than Poisson at
+  equal rate.
+
+Prompt/output heterogeneity comes from the benchmark corpus mix
+(``common.DATASETS``): per-request dataset, prompt length, and
+``max_new_tokens`` are drawn from the trace seed, so a trace replays
+the exact same workload on any machine.
+
+``replay`` drives a trace through a :class:`ServingFrontend` at real
+(optionally time-scaled) arrival times; ``replay_at_zero`` submits
+everything up front and single-threaded-drains — the mode whose streams
+are byte-identical to ``ServingEngine.run()`` (the exactness bar
+tests/test_frontend.py pins).
+"""
+from __future__ import annotations
+
+import json
+import time
+import zlib
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from benchmarks import common
+from repro.serving.frontend import ServingFrontend
+from repro.serving.request import Request, RequestState
+
+BURST_SHAPE = 0.25            # Gamma shape: CV = 2 at equal mean rate
+
+# per-dataset (prompt_len_lo, hi), (max_new_lo, hi): code-like traffic
+# is short-prompt/short-output, news-like is long-prompt/long-output
+MIX: Dict[str, Tuple[Tuple[int, int], Tuple[int, int]]] = {
+    "code": ((8, 16), (8, 16)),
+    "qa": ((12, 24), (8, 24)),
+    "news": ((24, 48), (16, 32)),
+    "dialogue": ((8, 32), (8, 32)),
+}
+
+
+def make_trace(n_requests: int, rate_rps: float, process: str = "poisson",
+               seed: int = 0, max_new_cap: Optional[int] = None) -> Dict:
+    """Deterministic trace: same args → same trace, any machine.
+
+    Requests and arrivals come from SEPARATE rng streams, both derived
+    from ``seed``: the request set (prompts, budgets) depends only on
+    ``(n_requests, seed, max_new_cap)``, so every point of a saturation
+    ladder serves the *identical workload* and only the arrival pattern
+    varies — the comparison isolates load, and one warmup covers every
+    point's prefill shapes."""
+    assert process in ("poisson", "bursty"), process
+    rng = np.random.RandomState(seed)
+    rng_arr = np.random.RandomState(
+        (seed + zlib.crc32(process.encode())) % 2**31)
+    if process == "poisson":
+        gaps = rng_arr.exponential(1.0 / rate_rps, size=n_requests)
+    else:
+        gaps = rng_arr.gamma(BURST_SHAPE, 1.0 / (rate_rps * BURST_SHAPE),
+                             size=n_requests)
+    arrivals = np.cumsum(gaps)
+    arrivals[0] = 0.0                       # the trace starts at its head
+    names = list(MIX)
+    reqs = []
+    for i in range(n_requests):
+        name = names[rng.randint(len(names))]
+        (plo, phi), (nlo, nhi) = MIX[name]
+        plen = int(rng.randint(plo, phi + 1))
+        max_new = int(rng.randint(nlo, nhi + 1))
+        if max_new_cap is not None:
+            max_new = min(max_new, max_new_cap)
+        prompt = common.dataset(name).prompts(1, plen,
+                                              seed=seed * 100003 + i)[0]
+        reqs.append({"request_id": i, "arrival_s": float(arrivals[i]),
+                     "prompt": [int(t) for t in prompt],
+                     "max_new_tokens": max_new, "dataset": name})
+    return {"version": 1, "seed": seed, "process": process,
+            "rate_rps": rate_rps, "requests": reqs}
+
+
+def save_trace(trace: Dict, path: str) -> None:
+    with open(path, "w") as f:
+        json.dump(trace, f)
+
+
+def load_trace(path: str) -> Dict:
+    with open(path) as f:
+        trace = json.load(f)
+    assert trace.get("version") == 1, "unknown trace version"
+    return trace
+
+
+def trace_requests(trace: Dict) -> List[Request]:
+    """Materialize the trace as engine Requests (ids from the trace, so
+    identity-threaded RNG reproduces stochastic streams exactly)."""
+    return [Request(r["request_id"], prompt=list(r["prompt"]),
+                    max_new_tokens=r["max_new_tokens"])
+            for r in trace["requests"]]
+
+
+def replay(frontend: ServingFrontend, trace: Dict,
+           time_scale: float = 1.0, settle_s: float = 120.0) -> Dict:
+    """Open-loop replay: submit each request when its (scaled) arrival
+    time comes due, against the front-end's already-running driver
+    thread, then wait for drain.  Returns the per-point report."""
+    t0 = time.monotonic()
+    handles = []
+    for r in trace["requests"]:
+        due = t0 + r["arrival_s"] * time_scale
+        delay = due - time.monotonic()
+        if delay > 0:
+            time.sleep(delay)
+        req = Request(r["request_id"], prompt=list(r["prompt"]),
+                      max_new_tokens=r["max_new_tokens"])
+        handles.append(frontend.submit_request(req))
+    idle = frontend.wait_idle(timeout=settle_s)
+    assert idle, "replay did not drain within settle_s"
+    wall = time.monotonic() - t0
+    return report(frontend, [h.request for h in handles], wall,
+                  offered_rps=trace["rate_rps"] / time_scale)
+
+
+def replay_at_zero(frontend: ServingFrontend, trace: Dict) -> Dict:
+    """All arrivals at time 0, single-threaded drain — the replay mode
+    that is byte-identical to a direct ``run()`` call."""
+    t0 = time.monotonic()
+    reqs = trace_requests(trace)
+    for r in reqs:
+        frontend.submit_request(r)
+    frontend.run_until_drained()
+    return report(frontend, reqs, time.monotonic() - t0,
+                  offered_rps=float("inf"))
+
+
+def report(frontend: ServingFrontend, reqs: List[Request], wall: float,
+           offered_rps: float, slo_ttft_s: float = 2.5,
+           slo_tpot_s: float = 0.5) -> Dict:
+    """Per-load-point serving report: TTFT/TPOT p50/p99, queue depth,
+    and goodput — output tokens/s counting ONLY SLO-attaining requests
+    (TTFT and TPOT both within bound), the quantity that actually
+    saturates when spec-decode wins evaporate under load."""
+    fin = [r for r in reqs if r.state is RequestState.FINISHED]
+    out = {"offered_rps": float(offered_rps), "wall_s": float(wall),
+           "requests": len(reqs), "requests_finished": len(fin),
+           "requests_rejected": sum(
+               r.state is RequestState.REJECTED for r in reqs),
+           "tokens_emitted": int(sum(len(r.output) for r in fin)),
+           "preemptions": int(sum(r.preemptions for r in reqs))}
+    out.update(common.dist_stats([r.ttft() for r in fin], "ttft_s"))
+    out.update(common.dist_stats([r.tpot() for r in fin], "tpot_s"))
+    out.update(common.dist_stats([r.queue_wait() for r in fin],
+                                 "queue_wait_s"))
+    depths = [q + s for _, q, s, _ in frontend.queue_depth_log]
+    out.update(common.dist_stats(depths, "queue_depth", ps=(99,)))
+    out["queue_depth_peak"] = float(max(depths, default=0))
+    out["throughput_tok_s"] = out["tokens_emitted"] / max(wall, 1e-9)
+    good = [r for r in fin
+            if (r.ttft() or 0.0) <= slo_ttft_s
+            and (r.tpot() is None or r.tpot() <= slo_tpot_s)]
+    out["slo_attained_frac"] = len(good) / max(len(fin), 1)
+    out["goodput_tok_s"] = (sum(len(r.output) for r in good)
+                            / max(wall, 1e-9))
+    return out

@@ -75,9 +75,9 @@ def _serve_once(cfg_t, cfg_d, pt, pd, prompts, max_new, *, pipelined: bool
         paged=True, kv_block_size=KV_BLOCK, pipelined=pipelined)
     blocked = [r["host_blocked_s"] for r in eng.round_log]
     m = dict(m)
-    m["blocked_mean_s"] = float(np.mean(blocked)) if blocked else 0.0
-    m["blocked_p95_s"] = (float(np.percentile(blocked, 95))
-                          if blocked else 0.0)
+    st = common.dist_stats(blocked, "blocked", ps=(95,))
+    m["blocked_mean_s"] = st["blocked_mean"]
+    m["blocked_p95_s"] = st["blocked_p95"]
     return m, [r.output for r in reqs]
 
 

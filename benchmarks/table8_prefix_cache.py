@@ -117,7 +117,7 @@ def _serve_point(cfg_t, cfg_d, pt, pd, head, prompts, max_new, *,
         t0 = time.monotonic()
         m = eng.run(reqs)
         wall = time.monotonic() - t0
-    ttft = float(np.mean([r.ttft() for r in reqs]))
+    ttft = common.dist_stats([r.ttft() for r in reqs], "ttft")["ttft_mean"]
     assert m["requests_finished"] == len(reqs)
     return {
         "ttft_s": ttft,

@@ -112,6 +112,9 @@ def run(smoke: bool = False, json_path: Optional[str] = None) -> List[str]:
             "kv_pool_bytes": m["kv_pool_bytes"],
             "kv_bytes_swept": swept,
         }
+        # per-request TTFT distribution (shared helper — same p99 as
+        # every other table): storage numerics must not shift latency
+        cell.update(common.dist_stats([r.ttft() for r in reqs], "ttft_s"))
         div = None
         if ref_reqs is not None:
             div = _divergence(ref_reqs, reqs)

@@ -4,6 +4,13 @@ Two modes:
 
 * ``--demo``       — run the real CPU serving engine on a reduced pair of
                      the chosen architecture (what this container can do).
+* ``--http``       — stand the OpenAI-compatible HTTP front door
+                     (DESIGN.md §14) over that same reduced engine:
+                     continuous-batching front-end + ``/v1/completions``
+                     with SSE streaming.  ``--http-smoke`` instead runs
+                     one streaming + one non-streaming completion
+                     through a real socket and exits (the CI fast-lane
+                     self-test).
 * default          — lower + compile the production serve step for the
                      chosen arch/shape/mesh and report the plan (what a
                      TPU deployment would load; shares all code with
@@ -12,6 +19,7 @@ Two modes:
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-32b --shape decode_32k
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --demo
+  PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --http --paged --pipelined
 """
 import argparse
 import sys
@@ -25,6 +33,17 @@ def main() -> None:
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--demo", action="store_true",
                     help="run the CPU serving demo on the reduced config")
+    ap.add_argument("--http", action="store_true",
+                    help="serve the reduced engine over the OpenAI-"
+                         "compatible HTTP layer (/v1/completions, SSE "
+                         "streaming; DESIGN.md §14) until interrupted")
+    ap.add_argument("--http-smoke", action="store_true",
+                    help="start the HTTP server on an ephemeral port, "
+                         "run one streaming + one non-streaming "
+                         "completion, print the result JSON, exit")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=0,
+                    help="0 picks an ephemeral port")
     from repro.core.drafters import available_drafters
     from repro.core.policies import available_policies
     ap.add_argument("--policy", default="dsde",
@@ -63,50 +82,17 @@ def main() -> None:
                          "the single-device engine.")
     args = ap.parse_args()
 
-    if args.demo:
-        import jax
-        import jax.numpy as jnp
+    if args.demo or args.http or args.http_smoke:
         import numpy as np
-        from repro.configs import get_config
-        from repro.core.config import ServingConfig, SpecDecodeConfig
-        from repro.models.module import init_params
-        from repro.models.transformer import model_specs
-        from repro.serving.engine import ServingEngine
         from repro.serving.request import Request
 
-        from repro.core.drafters import build_drafter
-
-        cfg = get_config(args.arch).reduced()
-        pt = init_params(model_specs(cfg), jax.random.PRNGKey(1),
-                         jnp.float32)
-        spec = SpecDecodeConfig(policy=args.policy, drafter=args.drafter)
-        if build_drafter(spec, cfg, cfg).uses_draft_model():
-            noise = init_params(model_specs(cfg), jax.random.PRNGKey(7),
-                                jnp.float32)
-            pd, cfg_d = jax.tree_util.tree_map(
-                lambda a, b: a + 0.03 * b, pt, noise), cfg
-        else:                       # model-free drafter: no second model
-            pd, cfg_d = None, None
-        caching = args.prefix_share > 0
-        if not 0.0 <= args.prefix_share < 1.0:
-            ap.error("--prefix-share must be in [0, 1)")
-        serving = ServingConfig(max_batch_size=4, max_seq_len=256,
-                                pipelined=args.pipelined)
-        quant = args.kv_quant != "none"
-        if args.paged or caching or quant:   # caching/quant need the pool
-            serving = ServingConfig(
-                max_batch_size=4, max_seq_len=256, paged_kv=True,
-                kv_block_size=16, pipelined=args.pipelined,
-                prefix_caching=caching, kv_quant=args.kv_quant,
-                num_kv_blocks=4 * (256 // 16) // 2)   # 50% of dense bytes
-        mesh = None
-        if args.mesh:
-            from repro.launch.mesh import serving_mesh
-            mesh = serving_mesh(args.mesh)
-        eng = ServingEngine(pt, cfg, pd, cfg_d, spec, serving, mesh=mesh)
+        eng, cfg = _build_demo_engine(args, ap)
         rng = np.random.RandomState(0)
+        if args.http or args.http_smoke:
+            _serve_http(args, eng, cfg, rng)
+            return
         head = []
-        if caching:
+        if args.prefix_share > 0:
             # shared head sized so head/(head+tail) ~= share, rounded to
             # whole KV blocks so the full blocks are hash-addressable
             tail = 13                 # mean of the per-request draw below
@@ -126,6 +112,86 @@ def main() -> None:
     from repro.launch.dryrun import dryrun_one
     rec = dryrun_one(args.arch, args.shape, args.multi_pod)
     sys.exit(0 if rec["status"] in ("ok", "skipped") else 1)
+
+
+def _build_demo_engine(args, ap):
+    """Reduced-config CPU engine shared by --demo and the HTTP modes."""
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.core.config import ServingConfig, SpecDecodeConfig
+    from repro.core.drafters import build_drafter
+    from repro.models.module import init_params
+    from repro.models.transformer import model_specs
+    from repro.serving.engine import ServingEngine
+
+    cfg = get_config(args.arch).reduced()
+    pt = init_params(model_specs(cfg), jax.random.PRNGKey(1),
+                     jnp.float32)
+    spec = SpecDecodeConfig(policy=args.policy, drafter=args.drafter)
+    if build_drafter(spec, cfg, cfg).uses_draft_model():
+        noise = init_params(model_specs(cfg), jax.random.PRNGKey(7),
+                            jnp.float32)
+        pd, cfg_d = jax.tree_util.tree_map(
+            lambda a, b: a + 0.03 * b, pt, noise), cfg
+    else:                       # model-free drafter: no second model
+        pd, cfg_d = None, None
+    caching = args.prefix_share > 0
+    if not 0.0 <= args.prefix_share < 1.0:
+        ap.error("--prefix-share must be in [0, 1)")
+    serving = ServingConfig(max_batch_size=4, max_seq_len=256,
+                            pipelined=args.pipelined)
+    quant = args.kv_quant != "none"
+    if args.paged or caching or quant:   # caching/quant need the pool
+        serving = ServingConfig(
+            max_batch_size=4, max_seq_len=256, paged_kv=True,
+            kv_block_size=16, pipelined=args.pipelined,
+            prefix_caching=caching, kv_quant=args.kv_quant,
+            num_kv_blocks=4 * (256 // 16) // 2)   # 50% of dense bytes
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import serving_mesh
+        mesh = serving_mesh(args.mesh)
+    eng = ServingEngine(pt, cfg, pd, cfg_d, spec, serving, mesh=mesh)
+    return eng, cfg
+
+
+def _serve_http(args, eng, cfg, rng) -> None:
+    """Stand the front-end + HTTP server over the demo engine; either
+    serve until interrupted (--http) or self-test and exit
+    (--http-smoke)."""
+    import json
+    import time
+
+    from repro.serving.frontend import ServingFrontend
+    from repro.serving.server import smoke_check, start_http_server_thread
+
+    fe = ServingFrontend(eng).start()
+    port, stop = start_http_server_thread(
+        fe, host=args.host, port=args.port, model_name=args.arch,
+        default_max_tokens=args.max_new)
+    try:
+        if args.http_smoke:
+            prompt = rng.randint(0, cfg.vocab_size, size=8).tolist()
+            out = smoke_check(args.host, port, prompt, max_tokens=8)
+            out["port"] = port
+            out["summary"] = {
+                k: round(v, 4) if isinstance(v, float) else v
+                for k, v in fe.summary().items()
+                if k in ("requests_finished", "tokens_emitted", "rounds",
+                         "ttft_mean_s", "queue_depth_peak")}
+            print(json.dumps(out))
+            return
+        print(f"serving {args.arch} ({args.drafter} drafter, "
+              f"{args.policy} policy) on "
+              f"http://{args.host}:{port}/v1/completions", flush=True)
+        while True:             # the server + driver live on daemons
+            time.sleep(3600)
+    except KeyboardInterrupt:
+        pass
+    finally:
+        stop()
+        fe.stop()
 
 
 if __name__ == "__main__":

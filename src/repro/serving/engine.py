@@ -365,6 +365,21 @@ class ServingEngine:
         self._sync_block_tables(rows + cleared, fresh_ids)
 
     # --------------------------------------------------------------- prefill
+    def _emit_token(self, req: Request, tok: int, now: float) -> None:
+        """The single host-side token-delivery point: append to the
+        request's output, stamp first-token latency, and fire the
+        request's streaming callback (DESIGN.md §14).  Every reconciled
+        token — prefill-sampled first tokens and round emissions alike —
+        flows through here exactly once, in stream order, which is the
+        whole streaming contract: consumers see the same byte sequence
+        ``run()`` accumulates in ``Request.output``."""
+        req.output.append(tok)
+        self.emitted_total += 1
+        if req.first_token_time is None:
+            req.first_token_time = now
+        if req.on_token is not None:
+            req.on_token(req, tok)
+
     def _commit_first_tokens(self, items: List[Tuple[Request, int]],
                              now: float) -> List[Request]:
         """Append prefill-sampled first tokens host-side and apply the
@@ -372,10 +387,7 @@ class ServingEngine:
         device-side ``done`` computation at prefill)."""
         finished = []
         for req, tok in items:
-            req.output.append(tok)
-            self.emitted_total += 1
-            if req.first_token_time is None:
-                req.first_token_time = now
+            self._emit_token(req, tok, now)
             if ((req.eos_token_id is not None and tok == req.eos_token_id)
                     or len(req.output) >= req.max_new_tokens):
                 req.state = RequestState.FINISHED
@@ -744,8 +756,7 @@ class ServingEngine:
                 for t in toks:
                     if t == self.cfg_t.vocab_size:   # pad sentinel
                         continue
-                    req.output.append(int(t))
-                    self.emitted_total += 1
+                    self._emit_token(req, int(t), now)
                 if fin[slot]:
                     req.state = RequestState.FINISHED
                     req.finish_time = now
@@ -863,6 +874,43 @@ class ServingEngine:
         rec = self.dispatch()
         return done_early + self.collect(rec)
 
+    # ------------------------------------------------------------------ pump
+    def has_pending_work(self) -> bool:
+        """True while the engine still owes work: queued or running
+        requests, or (pipelined) a dispatched round awaiting its
+        reconciliation.  The front-end's driver loop (DESIGN.md §14)
+        polls this between ``pump()`` iterations."""
+        return self.scheduler.has_work() or self._inflight is not None
+
+    def pump(self) -> List[Request]:
+        """One driver-loop iteration — exactly ``run()``'s loop body, so
+        an external driver that interleaves ``submit()`` between pumps
+        replays the same admit/dispatch/collect sequence (and therefore,
+        with arrival-time-0 submissions, the same streams) ``run()``
+        produces.  Sync mode is one lockstep ``step()``; pipelined mode
+        plans + dispatches round N+1, then reconciles round N while N+1
+        executes on device.  Returns requests that reached a terminal
+        state this iteration; when ``has_pending_work()`` goes false the
+        driver must ``drain()`` the final in-flight round."""
+        if not self.serving.pipelined:
+            return self.step() if self.scheduler.has_work() else []
+        done: List[Request] = []
+        self.plan()
+        done += self.scheduler.pop_rejected()
+        prev = self._inflight
+        self.dispatch()
+        if prev is not None:
+            done += self.collect(prev)
+        return done
+
+    def drain(self) -> List[Request]:
+        """Reconcile the last in-flight round after the final ``pump()``
+        (pipelined mode dispatches one round ahead of reconciliation).
+        No-op in sync mode or when nothing is in flight."""
+        if self._inflight is not None:
+            return self.collect(self._inflight)
+        return []
+
     # ------------------------------------------------------------------- run
     def run(self, requests: Sequence[Request],
             max_rounds: Optional[int] = None) -> Dict[str, float]:
@@ -870,26 +918,21 @@ class ServingEngine:
         for r in requests:
             self.submit(r)
         done: List[Request] = []
-        if self.serving.pipelined:
-            # plan(N+1) → dispatch(N+1) → collect(N): the host reconciles
-            # one round behind while the device never waits for it
-            while self.scheduler.has_work() or self._inflight is not None:
-                self.plan()
-                done += self.scheduler.pop_rejected()
-                prev = self._inflight
-                rec = self.dispatch()
-                if prev is not None:
-                    done += self.collect(prev)
-                if max_rounds is not None and self.rounds >= max_rounds:
-                    break
-            if self._inflight is not None:      # drain the last round
-                done += self.collect(self._inflight)
-        else:
-            while self.scheduler.has_work():
-                done += self.step()
-                if max_rounds is not None and self.rounds >= max_rounds:
-                    break
+        # pipelined: plan(N+1) → dispatch(N+1) → collect(N), the host
+        # reconciling one round behind while the device never waits
+        while self.has_pending_work():
+            done += self.pump()
+            if max_rounds is not None and self.rounds >= max_rounds:
+                break
+        done += self.drain()
         wall = time.monotonic() - t0
+        return self.summary(done, wall)
+
+    def summary(self, done: Sequence[Request],
+                wall: float) -> Dict[str, float]:
+        """Run-level metrics over a set of terminal requests — shared by
+        ``run()`` and any external driver (the serving front-end) so a
+        ``pump()``-driven session reports through the same lens."""
         fin = [r for r in done if r.state == RequestState.FINISHED]
         rej = [r for r in done if r.state == RequestState.REJECTED]
         lat = [r.latency() for r in fin if r.latency() is not None]

@@ -4,7 +4,7 @@ from __future__ import annotations
 import dataclasses
 import enum
 import time
-from typing import List, Optional
+from typing import Callable, List, Optional
 
 
 class RequestState(enum.Enum):
@@ -63,6 +63,14 @@ class Request:
     # lifetime totals across (re)admissions, for the summary hit rate
     prefix_tokens_total: int = 0
     prefix_hit_tokens_total: int = 0
+    # --- streaming (DESIGN.md §14) ------------------------------------------
+    # per-token consumer callback, fired by the engine at the moment a
+    # token is host-reconciled and appended to ``output`` — in order,
+    # exactly once per token, never for recompute-on-readmit prefills
+    # (a readmit's pending token was already delivered when it was first
+    # emitted).  The front-end threads stream handles through this.
+    on_token: Optional[Callable[["Request", int], None]] = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     @property
     def done(self) -> bool:
@@ -93,6 +101,27 @@ class Request:
         if self.first_token_time is None:
             return None
         return self.first_token_time - self.arrival_time
+
+    def tpot(self) -> Optional[float]:
+        """Time per output token after the first (the serving-side
+        decode-cadence metric paired with TTFT): first token observed ->
+        finish, averaged over the remaining tokens.  None until finished
+        or for single-token outputs (no decode cadence to measure)."""
+        if (self.finish_time is None or self.first_token_time is None
+                or len(self.output) < 2):
+            return None
+        return ((self.finish_time - self.first_token_time)
+                / (len(self.output) - 1))
+
+    def finish_reason(self) -> Optional[str]:
+        """OpenAI-style terminal cause: "stop" (EOS) or "length"
+        (max_new_tokens budget).  None while running."""
+        if self.state is not RequestState.FINISHED:
+            return None
+        if (self.eos_token_id is not None and self.output
+                and self.output[-1] == self.eos_token_id):
+            return "stop"
+        return "length"
 
     def block_efficiency(self) -> float:
         """Tokens emitted per target verification (paper's BE metric)."""

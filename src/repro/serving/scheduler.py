@@ -375,6 +375,35 @@ class LookaheadScheduler:
     def free_slots(self) -> List[int]:
         return [i for i, r in enumerate(self.slots) if r is None]
 
+    def _is_readmit(self, req: Request) -> bool:
+        """A queued request that has run before (evict-and-requeue)."""
+        return req.preemptions > 0 or req.admit_time is not None
+
+    def assert_readmit_fifo(self) -> None:
+        """Starvation guard: preempted readmits form a contiguous PREFIX
+        of the queue, ahead of every fresh arrival — a preempted request
+        always readmits before new work is started, so sustained arrival
+        pressure can delay but never starve in-flight requests.
+
+        Holds by construction — fresh arrivals only ever ``append``
+        (:meth:`submit`), readmits only ever ``appendleft``
+        (:meth:`preempt`), and requests leave the queue strictly from
+        the front — but the assert pins it against future scheduler
+        edits.  Tie-break among the readmits themselves: within one
+        preemption wave :meth:`ensure_capacity` picks victims
+        youngest-first (LIFO by ``admit_seq``) and each ``appendleft``
+        reverses that, so the wave lands oldest-admission-first — FIFO
+        in admission order; across waves the most recent wave sits in
+        front (the recompute-on-readmit stack discipline
+        :meth:`preempt` documents)."""
+        seen_fresh = False
+        for r in self.queue:
+            if self._is_readmit(r):
+                assert not seen_fresh, (
+                    "readmit queued behind a fresh arrival — starvation")
+            else:
+                seen_fresh = True
+
     def admit(self) -> List[Request]:
         """Move queued requests into free slots (continuous batching).
 
@@ -384,7 +413,13 @@ class LookaheadScheduler:
         prefill it stays queued (preemption during the round, not
         admission, resolves sustained pressure).  Infeasible (oversize)
         requests become ``REJECTED`` and are drained via
-        :meth:`pop_rejected`."""
+        :meth:`pop_rejected`.
+
+        Ordering: strict queue order, and :meth:`assert_readmit_fifo`
+        pins the starvation guard — preempted readmits sit ahead of
+        every fresh arrival, FIFO among themselves."""
+        if __debug__:
+            self.assert_readmit_fifo()
         admitted = []
         free = collections.deque(self.free_slots())
         while free and self.queue:
@@ -560,7 +595,12 @@ class LookaheadScheduler:
         (prompt + emitted output) on readmission.  Under prefix caching
         the decref leaves registered blocks warm in the hash index, so
         the recompute usually collapses to a tail prefill over at most
-        one partial block."""
+        one partial block.
+
+        The ``appendleft`` is also the starvation guard: every readmit
+        sits ahead of every fresh arrival (``submit`` appends), FIFO in
+        admission order within a preemption wave — see
+        :meth:`assert_readmit_fifo`."""
         assert self.allocator is not None and req.slot is not None
         self.allocator.free(req.block_ids)
         req.block_ids = []

@@ -20,7 +20,7 @@ import pytest
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 from benchmarks.gate import (_entry, _verdict, cmd_collect, cmd_compare,
                              collect_table6, collect_table7, collect_table8,
-                             collect_table9)
+                             collect_table9, collect_table10)
 
 
 # ---------------------------------------------------------------------------
@@ -68,6 +68,19 @@ T8 = {"share0.5": {"prefill_tokens_on": 256, "prefill_calls_on": 2,
                    "prefix_cache_hit_blocks": 8.0, "ttft_speedup": 1.2},
       "paged_half_shared": {"requests_finished": 4, "kv_pool_blocks": 32.0,
                             "tok_per_round": 4.5}}
+
+_POINT = {"load_ratio": 0.6, "requests_finished": 8, "tokens_emitted": 78,
+          "ttft_s_p50": 0.05, "ttft_s_p99": 0.07, "tpot_s_p50": 0.01,
+          "goodput_tok_s": 62.0, "queue_depth_peak": 1.0,
+          "queue_depth_mean": 0.13, "slo_attained_frac": 1.0}
+
+T10 = {"capacity_rps": 18.3, "smoke": True,
+       "poisson": {"points": [dict(_POINT),
+                              dict(_POINT, load_ratio=1.5,
+                                   queue_depth_peak=2.0)]},
+       "bursty": {"points": [dict(_POINT),
+                             dict(_POINT, load_ratio=1.5,
+                                  goodput_tok_s=17.8)]}}
 
 T9 = {"fp_paged_n64": {"requests_finished": 6, "kv_pool_blocks": 64.0,
                        "kv_block_bytes": 16384.0, "rounds": 23,
@@ -128,6 +141,28 @@ def test_collect_table9_modes_and_divergence_pin():
     assert "fp_paged_n64.prefix_match_frac" not in by
 
 
+def test_collect_table10_counters_fail_latency_warns():
+    """Saturation points gate hard on the deterministic counters only:
+    trace-fixed budgets make requests_finished/tokens_emitted exact,
+    while every wall-derived latency/goodput number rides the 2-core
+    warn hatch (table6 precedent)."""
+    by = {e["metric"]: e for e in collect_table10(T10)}
+    # 2 processes x 2 load points x 7 metrics
+    assert len(by) == 2 * 2 * 7
+    for cell in ("poisson_x0.6", "poisson_x1.5", "bursty_x0.6",
+                 "bursty_x1.5"):
+        assert by[f"{cell}.requests_finished"]["mode"] == "fail"
+        assert by[f"{cell}.requests_finished"]["better"] == "exact"
+        assert by[f"{cell}.tokens_emitted"]["better"] == "exact"
+        for m in ("ttft_s_p50", "ttft_s_p99", "tpot_s_p50",
+                  "goodput_tok_s", "queue_depth_peak"):
+            assert by[f"{cell}.{m}"]["mode"] == "warn", m
+    assert by["bursty_x1.5.goodput_tok_s"]["better"] == "higher"
+    assert by["poisson_x1.5.queue_depth_peak"]["better"] == "lower"
+    # capacity itself is host-dependent — never a gated metric
+    assert not any(m.startswith("capacity") for m in by)
+
+
 # ---------------------------------------------------------------------------
 # compare: round-trip + failure paths through the CLI entry points
 # ---------------------------------------------------------------------------
@@ -183,16 +218,18 @@ def test_summary_file_written(tmp_path):
 
 
 def test_collect_cli_round_trips_files(tmp_path):
-    t6, t7, t8, t9 = (tmp_path / "t6.json", tmp_path / "t7.json",
-                      tmp_path / "t8.json", tmp_path / "t9.json")
+    t6, t7, t8, t9, t10 = (tmp_path / "t6.json", tmp_path / "t7.json",
+                           tmp_path / "t8.json", tmp_path / "t9.json",
+                           tmp_path / "t10.json")
     t6.write_text(json.dumps(T6))
     t7.write_text(json.dumps({"model/dsde": dict(CELL)}))
     t8.write_text(json.dumps(T8))
     t9.write_text(json.dumps(T9))
+    t10.write_text(json.dumps(T10))
     out = tmp_path / "BENCH_pr.json"
     args = types.SimpleNamespace(table6=str(t6), table7=str(t7),
                                  table8=str(t8), table9=str(t9),
-                                 out=str(out))
+                                 table10=str(t10), out=str(out))
     assert cmd_collect(args) == 0
     entries = json.loads(out.read_text())
     assert {tuple(sorted(e)) for e in entries} == {

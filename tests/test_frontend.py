@@ -1,0 +1,342 @@
+"""Serving front-end: replay exactness, streaming contract, scheduling.
+
+The standing bar (DESIGN.md §14): the same request set submitted
+through the continuous-batching front-end with all arrival times = 0
+must produce byte-identical token streams to a direct
+``ServingEngine.run()`` call — ``pump()`` is ``run()``'s loop body, so
+an all-up-front submission replays the identical admit/dispatch/collect
+sequence.  On top of that, greedy streams are schedule-invariant
+(identity-threaded RNG + device-side termination, DESIGN.md §7/§9), so
+even *staggered* arrivals must deliver the same per-request bytes —
+only the timing moves.
+
+Streaming contract: every host-reconciled token fires the request's
+callback in order, exactly once, EOS/budget truncation never
+over-delivers, and requests that finish inside the pipelined window
+(reconciled one round late) still stream every token.
+"""
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.config import ServingConfig, SpecDecodeConfig
+from repro.core.policies import available_policies
+from repro.models.module import init_params
+from repro.models.transformer import model_specs
+from repro.serving.engine import ServingEngine
+from repro.serving.frontend import ServingFrontend
+from repro.serving.request import Request, RequestState
+from repro.serving.scheduler import LookaheadScheduler
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def small_pair():
+    cfg = get_config("smollm-135m").reduced()
+    pt = init_params(model_specs(cfg), jax.random.PRNGKey(1), jnp.float32)
+    noise = init_params(model_specs(cfg), jax.random.PRNGKey(7), jnp.float32)
+    pd = jax.tree_util.tree_map(lambda a, b: a + 0.05 * b, pt, noise)
+    return cfg, pt, pd
+
+
+def _engine(cfg, pt, pd, *, policy="dsde", drafter="model", paged=True,
+            pipelined=True, batch=2, max_seq=128, bs=16, nblocks=None,
+            seed=0):
+    spec = SpecDecodeConfig(policy=policy, temperature=0.0, drafter=drafter)
+    model_free = drafter != "model"
+    sv = ServingConfig(max_batch_size=batch, max_seq_len=max_seq,
+                       paged_kv=paged, kv_block_size=bs,
+                       num_kv_blocks=nblocks, pipelined=pipelined)
+    return ServingEngine(pt, cfg, None if model_free else pd,
+                         None if model_free else cfg, spec, sv, seed=seed)
+
+
+def _prompts(cfg, sizes=(7, 12, 5), seed=11):
+    rng = np.random.RandomState(seed)
+    return [rng.randint(0, cfg.vocab_size, size=n).tolist() for n in sizes]
+
+
+def _reqs(prompts, max_new=8, eos=None):
+    return [Request(i, prompt=list(p), max_new_tokens=max_new,
+                    eos_token_id=eos) for i, p in enumerate(prompts)]
+
+
+# ---------------------------------------------------------------------------
+# Replay exactness: front-end at arrival-time 0  ==  run()
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("drafter", ["model", "ngram"])
+@pytest.mark.parametrize("policy", available_policies())
+def test_replay_at_zero_matches_run(small_pair, policy, drafter):
+    """All 5 policies x model+ngram drafters, paged + pipelined: the
+    front-end replay of an all-at-once submission is byte-identical to
+    run(), and the streamed events reproduce the same bytes."""
+    cfg, pt, pd = small_pair
+    prompts = _prompts(cfg)
+    ref_eng = _engine(cfg, pt, pd, policy=policy, drafter=drafter)
+    ref = _reqs(prompts)
+    ref_eng.run(ref)
+    ref_streams = [r.output for r in ref]
+
+    fe = ServingFrontend(_engine(cfg, pt, pd, policy=policy,
+                                 drafter=drafter))
+    handles = [fe.submit_request(r) for r in _reqs(prompts)]
+    fe.run_until_drained()
+    assert [h.request.output for h in handles] == ref_streams, (
+        policy, drafter)
+    for h, want in zip(handles, ref_streams):
+        toks, reason = h.result(timeout=0)      # all events already queued
+        assert toks == want
+        assert reason == "length"
+
+
+@pytest.mark.parametrize("pipelined", [False, True], ids=["sync", "pipe"])
+def test_staggered_arrivals_same_streams(small_pair, pipelined):
+    """Greedy streams are schedule-invariant: submissions arriving
+    MID-RUN (between pumps) change admission grouping but not one byte
+    of any request's stream."""
+    cfg, pt, pd = small_pair
+    prompts = _prompts(cfg, sizes=(7, 12, 5, 9))
+    ref_eng = _engine(cfg, pt, pd, pipelined=pipelined)
+    ref = _reqs(prompts)
+    ref_eng.run(ref)
+
+    fe = ServingFrontend(_engine(cfg, pt, pd, pipelined=pipelined))
+    reqs = _reqs(prompts)
+    for r in reqs[:2]:
+        fe.submit_request(r)
+    # drive a couple of rounds, then land the stragglers mid-flight
+    for _ in range(2):
+        fe._drive_once()
+    for r in reqs[2:]:
+        fe.submit_request(r)
+    fe.run_until_drained()
+    assert [r.output for r in reqs] == [r.output for r in ref]
+    assert all(r.state == RequestState.FINISHED for r in reqs)
+
+
+def test_threaded_driver_delivers_all_streams(small_pair):
+    """start()/stop() mode: concurrent submitters against the live
+    driver thread; every stream terminates and matches the direct-run
+    bytes (greedy schedule invariance again)."""
+    cfg, pt, pd = small_pair
+    prompts = _prompts(cfg, sizes=(7, 12, 5, 9, 6))
+    ref_eng = _engine(cfg, pt, pd)
+    ref = _reqs(prompts, max_new=6)
+    ref_eng.run(ref)
+
+    fe = ServingFrontend(_engine(cfg, pt, pd)).start()
+    handles = [None] * len(prompts)
+
+    def _submit(i):
+        time.sleep(0.01 * i)
+        handles[i] = fe.submit_request(
+            Request(i, prompt=list(prompts[i]), max_new_tokens=6))
+
+    threads = [threading.Thread(target=_submit, args=(i,))
+               for i in range(len(prompts))]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert fe.wait_idle(timeout=120)
+    fe.stop()
+    results = [h.result(timeout=5) for h in handles]
+    assert [toks for toks, _ in results] == [r.output for r in ref]
+    assert all(reason == "length" for _, reason in results)
+
+
+# ---------------------------------------------------------------------------
+# Streaming callback contract
+# ---------------------------------------------------------------------------
+
+def test_tokens_in_order_exactly_once(small_pair):
+    """The callback sees exactly the bytes of Request.output, in order,
+    one call per token — across admission waves and the pipelined
+    window (more requests than slots)."""
+    cfg, pt, pd = small_pair
+    prompts = _prompts(cfg, sizes=(7, 12, 5, 9))
+    eng = _engine(cfg, pt, pd)
+    seen = {i: [] for i in range(len(prompts))}
+    reqs = _reqs(prompts, max_new=10)
+    for r in reqs:
+        r.on_token = lambda rq, t: seen[rq.request_id].append(t)
+    eng.run(reqs)
+    for r in reqs:
+        assert seen[r.request_id] == r.output, r.request_id
+        assert len(r.output) == 10          # budget exactly, greedy no-EOS
+
+
+def test_eos_truncation_never_over_delivers(small_pair):
+    """Pick an EOS from a reference stream so termination happens
+    mid-stream; the callback must stop AT the EOS token — device-side
+    truncation rows never leak past it."""
+    cfg, pt, pd = small_pair
+    prompts = _prompts(cfg, sizes=(7, 12))
+    ref_eng = _engine(cfg, pt, pd)
+    ref = _reqs(prompts, max_new=12)
+    ref_eng.run(ref)
+    eos = ref[0].output[5]                  # forces a mid-stream stop
+    eng = _engine(cfg, pt, pd)
+    seen = {i: [] for i in range(len(prompts))}
+    reqs = _reqs(prompts, max_new=12, eos=eos)
+    for r in reqs:
+        r.on_token = lambda rq, t: seen[rq.request_id].append(t)
+    eng.run(reqs)
+    for r in reqs:
+        assert seen[r.request_id] == r.output
+        assert len(r.output) <= 12
+        if eos in r.output:
+            assert r.output.index(eos) == len(r.output) - 1
+            assert r.finish_reason() == "stop"
+        else:
+            assert r.finish_reason() == "length"
+
+
+def test_callback_fires_for_finished_in_pipelined_window(small_pair):
+    """A request finishing inside the pipelined window (its terminal
+    round reconciled one iteration late, slot possibly already
+    re-admitted) still streams every token and terminates its handle."""
+    cfg, pt, pd = small_pair
+    prompts = _prompts(cfg, sizes=(7, 5, 9, 6, 8))   # 5 reqs, 2 slots
+    fe = ServingFrontend(_engine(cfg, pt, pd, pipelined=True))
+    handles = [fe.submit_request(r) for r in _reqs(prompts, max_new=4)]
+    fe.run_until_drained()
+    for h in handles:
+        toks, reason = h.result(timeout=0)
+        assert toks == h.request.output and len(toks) == 4
+        assert reason == "length"
+
+
+def test_readmitted_request_streams_each_token_once(small_pair):
+    """Forced preemption: the pending token of an evicted request was
+    already streamed when first reconciled; recompute-on-readmit must
+    not re-deliver it."""
+    cfg, pt, pd = small_pair
+    prompts = _prompts(cfg, sizes=(30, 25, 20), seed=5)
+    # the known-preempting pool from test_pipeline: 16 blocks of 8
+    eng = _engine(cfg, pt, pd, paged=True, bs=8, nblocks=16)
+    seen = {i: [] for i in range(len(prompts))}
+    reqs = _reqs(prompts, max_new=40)
+    for r in reqs:
+        r.on_token = lambda rq, t: seen[rq.request_id].append(t)
+    m = eng.run(reqs)
+    assert m["preemptions"] >= 1, "test needs real preemption pressure"
+    for r in reqs:
+        assert seen[r.request_id] == r.output
+        assert len(r.output) == 40
+
+
+# ---------------------------------------------------------------------------
+# Scheduler: readmit-FIFO starvation guard
+# ---------------------------------------------------------------------------
+
+def _sched(batch=2):
+    sv = ServingConfig(max_batch_size=batch, max_seq_len=128,
+                       paged_kv=True, kv_block_size=16)
+    return LookaheadScheduler(sv, SpecDecodeConfig(policy="static"))
+
+
+def test_readmits_keep_fifo_priority_over_fresh():
+    """Preempted readmits admit before fresh arrivals, FIFO among the
+    wave (victims picked youngest-first, appendleft reverses)."""
+    sched = _sched(batch=2)
+    old = [Request(i, prompt=[1] * 4, max_new_tokens=4) for i in range(2)]
+    for r in old:
+        sched.submit(r)
+    assert [r.request_id for r in sched.admit()] == [0, 1]
+    fresh = [Request(i, prompt=[2] * 4, max_new_tokens=4)
+             for i in range(10, 13)]
+    for r in fresh:
+        sched.submit(r)
+    # one preemption wave, youngest-first (the ensure_capacity order)
+    sched.preempt(old[1])
+    sched.preempt(old[0])
+    sched.assert_readmit_fifo()
+    assert [r.request_id for r in sched.queue] == [0, 1, 10, 11, 12]
+    # readmits re-enter first, in original admission order
+    assert [r.request_id for r in sched.admit()] == [0, 1]
+    sched.assert_readmit_fifo()
+
+
+def test_starvation_guard_detects_violation():
+    """The guard actually guards: a readmit filed behind a fresh
+    arrival (a future scheduler bug) trips the assertion."""
+    sched = _sched(batch=1)
+    victim = Request(0, prompt=[1] * 4, max_new_tokens=4)
+    sched.submit(victim)
+    sched.admit()
+    fresh = Request(1, prompt=[2] * 4, max_new_tokens=4)
+    sched.submit(fresh)
+    # simulate the bug: requeue the victim BEHIND the fresh arrival
+    sched.allocator.free(victim.block_ids)
+    victim.block_ids = []
+    sched.slots[victim.slot] = None
+    victim.slot = None
+    victim.state = RequestState.QUEUED
+    victim.preemptions += 1
+    sched.queue.append(victim)              # append, not appendleft
+    with pytest.raises(AssertionError, match="starvation"):
+        sched.assert_readmit_fifo()
+
+
+# ---------------------------------------------------------------------------
+# Satellite: step()-driven sessions get run()'s summary for free
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("pipelined", [False, True], ids=["sync", "pipe"])
+def test_summary_regression_run_vs_pump_loop(small_pair, pipelined):
+    """run() == submit + pump-loop + drain + summary().  An external
+    driver reproduces run()'s summary dict exactly on every
+    deterministic field, with the same key set (the satellite fix:
+    latency stamping and summary logic live on the step()/pump() path,
+    not inside run())."""
+    cfg, pt, pd = small_pair
+    prompts = _prompts(cfg)
+    m_run = _engine(cfg, pt, pd, pipelined=pipelined).run(_reqs(prompts))
+
+    eng = _engine(cfg, pt, pd, pipelined=pipelined)
+    t0 = time.monotonic()
+    for r in _reqs(prompts):
+        eng.submit(r)
+    done = []
+    while eng.has_pending_work():
+        done += eng.pump()
+    done += eng.drain()
+    m_ext = eng.summary(done, time.monotonic() - t0)
+
+    assert set(m_run) == set(m_ext)
+    deterministic = [
+        "requests_finished", "requests_rejected", "preemptions",
+        "tokens_emitted", "rounds", "drafter", "draft_step_cost",
+        "draft_steps", "draft_steps_effective", "block_efficiency",
+        "batch_tokens_per_round", "mean_acceptance", "kv_blocks_peak",
+        "kv_pool_blocks", "kv_quant", "kv_block_bytes", "kv_pool_bytes",
+        "kv_bytes_swept", "prefix_cache_hit_blocks",
+        "prefix_cache_hit_rate", "cow_copies", "prefix_cache_evictions",
+    ]
+    for k in deterministic:
+        assert m_run[k] == m_ext[k], k
+    # latency stamps populated on the pump path too (reconciliation-
+    # time stamping, not run()-specific bookkeeping)
+    assert m_ext["ttft_mean_s"] > 0
+    assert m_ext["queue_wait_mean_s"] >= 0
+
+
+def test_request_tpot_and_finish_reason(small_pair):
+    cfg, pt, pd = small_pair
+    eng = _engine(cfg, pt, pd)
+    reqs = _reqs(_prompts(cfg, sizes=(7,)), max_new=6)
+    eng.run(reqs)
+    r = reqs[0]
+    assert r.finish_reason() == "length"
+    assert r.tpot() is not None and r.tpot() >= 0
+    assert r.ttft() is not None
+    # finish_reason is None while a request is not FINISHED
+    assert Request(9, prompt=[1, 2]).finish_reason() is None

@@ -1,0 +1,87 @@
+"""Trace format determinism (benchmarks/loadgen.py, DESIGN.md §14).
+
+No engine here — these pin the reproducibility contract of the trace
+generator itself: same args → byte-identical trace on any machine, the
+request set independent of the arrival process/rate (the property the
+saturation ladder's single-warmup and exact-counter gating rely on),
+and the v1 JSON round-trip.
+"""
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+from benchmarks import loadgen
+from benchmarks.loadgen import MIX, load_trace, make_trace, save_trace
+
+
+def test_same_args_same_trace():
+    a = make_trace(12, rate_rps=4.0, process="poisson", seed=3)
+    b = make_trace(12, rate_rps=4.0, process="poisson", seed=3)
+    assert json.dumps(a, sort_keys=True) == json.dumps(b, sort_keys=True)
+
+
+def test_request_set_independent_of_arrival_pattern():
+    """The split-rng contract: every point of a saturation ladder — any
+    process, any rate — serves the IDENTICAL workload; only arrival
+    offsets differ.  (This is why one capacity-probe warmup covers all
+    load points' prefill shapes and why tokens_emitted is gate-exact.)"""
+    def strip(trace):
+        return [{k: v for k, v in r.items() if k != "arrival_s"}
+                for r in trace["requests"]]
+
+    base = make_trace(10, rate_rps=2.0, process="poisson", seed=7)
+    for process, rate in (("poisson", 50.0), ("bursty", 2.0),
+                          ("bursty", 50.0)):
+        other = make_trace(10, rate_rps=rate, process=process, seed=7)
+        assert strip(other) == strip(base), (process, rate)
+    # different seed → different workload
+    assert strip(make_trace(10, 2.0, "poisson", seed=8)) != strip(base)
+
+
+def test_arrivals_shape():
+    for process in ("poisson", "bursty"):
+        tr = make_trace(20, rate_rps=5.0, process=process, seed=1)
+        arr = [r["arrival_s"] for r in tr["requests"]]
+        assert arr[0] == 0.0                    # trace starts at its head
+        assert arr == sorted(arr)
+        assert all(a >= 0.0 for a in arr)
+    pois = make_trace(20, 5.0, "poisson", seed=1)
+    burst = make_trace(20, 5.0, "bursty", seed=1)
+    assert ([r["arrival_s"] for r in pois["requests"]]
+            != [r["arrival_s"] for r in burst["requests"]])
+
+
+def test_mix_bounds_and_cap():
+    tr = make_trace(40, rate_rps=1.0, seed=5)
+    for r in tr["requests"]:
+        (plo, phi), (nlo, nhi) = MIX[r["dataset"]]
+        assert plo <= len(r["prompt"]) <= phi
+        assert nlo <= r["max_new_tokens"] <= nhi
+    capped = make_trace(40, rate_rps=1.0, seed=5, max_new_cap=9)
+    assert max(r["max_new_tokens"] for r in capped["requests"]) <= 9
+    # cap only clamps budgets; prompts and datasets are untouched
+    assert [r["prompt"] for r in capped["requests"]] == \
+        [r["prompt"] for r in tr["requests"]]
+
+
+def test_save_load_round_trip(tmp_path):
+    tr = make_trace(6, rate_rps=3.0, process="bursty", seed=2)
+    path = str(tmp_path / "trace.json")
+    save_trace(tr, path)
+    assert load_trace(path) == tr
+    bad = dict(tr, version=2)
+    save_trace(bad, path)
+    with pytest.raises(AssertionError, match="trace version"):
+        load_trace(path)
+
+
+def test_trace_requests_carry_trace_ids():
+    tr = make_trace(5, rate_rps=1.0, seed=9)
+    reqs = loadgen.trace_requests(tr)
+    assert [r.request_id for r in reqs] == [0, 1, 2, 3, 4]
+    assert [r.prompt for r in reqs] == [r["prompt"] for r in tr["requests"]]
+    assert [r.max_new_tokens for r in reqs] == \
+        [r["max_new_tokens"] for r in tr["requests"]]

@@ -1,0 +1,172 @@
+"""OpenAI-compatible HTTP layer: socket-level tests (DESIGN.md §14).
+
+One tiny engine + front-end + HTTP server thread per module; every
+test talks through a real socket with stdlib ``http.client`` — the
+same path CI's ``--http-smoke`` lane exercises.  Greedy decoding makes
+the token streams request-id-independent, so HTTP responses are
+compared byte-for-byte against a direct ``ServingEngine.run()``.
+"""
+import http.client
+import json
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.core.config import ServingConfig, SpecDecodeConfig
+from repro.models.module import init_params
+from repro.models.transformer import model_specs
+from repro.serving.engine import ServingEngine
+from repro.serving.frontend import ServingFrontend
+from repro.serving.request import Request
+from repro.serving.server import (_parse_prompt, _text, smoke_check,
+                                  start_http_server_thread)
+
+jax.config.update("jax_platform_name", "cpu")
+
+PROMPT = [3, 7, 11, 2, 9, 4]
+
+
+def _make_engine():
+    cfg = get_config("smollm-135m").reduced()
+    pt = init_params(model_specs(cfg), jax.random.PRNGKey(1), jnp.float32)
+    noise = init_params(model_specs(cfg), jax.random.PRNGKey(7), jnp.float32)
+    pd = jax.tree_util.tree_map(lambda a, b: a + 0.05 * b, pt, noise)
+    spec = SpecDecodeConfig(policy="dsde", temperature=0.0)
+    sv = ServingConfig(max_batch_size=2, max_seq_len=128, paged_kv=True,
+                       kv_block_size=16, pipelined=True)
+    return ServingEngine(pt, cfg, pd, cfg, spec, sv, seed=0), cfg
+
+
+@pytest.fixture(scope="module")
+def served():
+    eng, cfg = _make_engine()
+    fe = ServingFrontend(eng).start()
+    port, stop = start_http_server_thread(fe, model_name="repro-test")
+    # reference stream for the same prompt from a *direct* run — greedy
+    # streams are request-id-independent, so HTTP must reproduce it
+    ref_eng, _ = _make_engine()
+    ref = Request(0, prompt=list(PROMPT), max_new_tokens=6)
+    ref_eng.run([ref])
+    yield {"port": port, "frontend": fe, "cfg": cfg, "ref": ref.output}
+    stop()
+    fe.stop()
+
+
+def _post(port, obj, path="/v1/completions"):
+    conn = http.client.HTTPConnection("127.0.0.1", port, timeout=120)
+    conn.request("POST", path, json.dumps(obj),
+                 {"Content-Type": "application/json"})
+    resp = conn.getresponse()
+    body = resp.read().decode()
+    status, ctype = resp.status, resp.getheader("Content-Type")
+    conn.close()
+    return status, ctype, body
+
+
+def _get(port, path):
+    conn = http.client.HTTPConnection("127.0.0.1", port, timeout=30)
+    conn.request("GET", path)
+    resp = conn.getresponse()
+    out = resp.status, json.loads(resp.read().decode())
+    conn.close()
+    return out
+
+
+def test_non_streaming_completion_matches_run(served):
+    status, _, body = _post(served["port"], {
+        "model": "repro-test", "prompt": PROMPT, "max_tokens": 6})
+    assert status == 200
+    out = json.loads(body)
+    assert out["object"] == "text_completion"
+    assert out["model"] == "repro-test"
+    choice = out["choices"][0]
+    assert choice["token_ids"] == served["ref"]
+    assert choice["text"] == _text(served["ref"])
+    assert choice["finish_reason"] == "length"
+    assert out["usage"] == {"prompt_tokens": len(PROMPT),
+                            "completion_tokens": 6,
+                            "total_tokens": len(PROMPT) + 6}
+
+
+def test_streaming_sse_matches_run(served):
+    status, ctype, raw = _post(served["port"], {
+        "prompt": " ".join(str(t) for t in PROMPT),   # id-string form
+        "max_tokens": 6, "stream": True})
+    assert status == 200
+    assert ctype == "text/event-stream"
+    lines = [ln for ln in raw.split("\n\n") if ln.startswith("data: ")]
+    assert lines[-1].strip() == "data: [DONE]"
+    events = [json.loads(ln[len("data: "):]) for ln in lines[:-1]]
+    toks = [t for ev in events for t in ev["choices"][0]["token_ids"]]
+    assert toks == served["ref"]
+    finishes = [ev["choices"][0]["finish_reason"] for ev in events]
+    assert finishes == [None] * 6 + ["length"]      # one event per token
+
+
+def test_smoke_check_self_test(served):
+    res = smoke_check("127.0.0.1", served["port"], PROMPT, max_tokens=6)
+    assert res["streamed_tokens"] == res["non_streaming_tokens"]
+    assert res["non_streaming_tokens"] == served["ref"]
+    assert res["events"] == 7
+
+
+def test_health_and_models(served):
+    status, health = _get(served["port"], "/health")
+    assert status == 200 and health["status"] == "ok"
+    assert health["queued"] == 0
+    status, models = _get(served["port"], "/v1/models")
+    assert status == 200
+    assert models["data"][0]["id"] == "repro-test"
+
+
+def test_error_paths(served):
+    port = served["port"]
+    status, _, body = _post(port, {"prompt": PROMPT}, path="/v1/chat")
+    assert status == 404 and "no route" in json.loads(body)["error"]["message"]
+    status, _, _ = _post(port, {"max_tokens": 4})          # prompt missing
+    assert status == 400
+    status, _, _ = _post(port, {"prompt": "not token ids"})
+    assert status == 400
+    status, _, _ = _post(port, {"prompt": PROMPT, "max_tokens": 0})
+    assert status == 400
+    # malformed JSON body
+    conn = http.client.HTTPConnection("127.0.0.1", port, timeout=30)
+    conn.request("POST", "/v1/completions", "{nope",
+                 {"Content-Type": "application/json"})
+    assert conn.getresponse().status == 400
+    conn.close()
+
+
+def test_parse_prompt_forms():
+    assert _parse_prompt([1, 2, 3]) == [1, 2, 3]
+    assert _parse_prompt("4 5 6") == [4, 5, 6]
+    assert _parse_prompt(7) == [7]
+    for bad in (None, "", [], [1, "x"], {"a": 1}):
+        with pytest.raises(ValueError):
+            _parse_prompt(bad)
+
+
+def test_concurrent_streaming_clients(served):
+    """Two simultaneous SSE consumers: per-request handles keep the
+    streams separate, both byte-correct (greedy → identical)."""
+    import threading
+
+    outs = [None, None]
+
+    def _stream(i):
+        _, _, raw = _post(served["port"], {
+            "prompt": PROMPT, "max_tokens": 6, "stream": True})
+        events = [json.loads(ln[len("data: "):])
+                  for ln in raw.split("\n\n")
+                  if ln.startswith("data: ") and "[DONE]" not in ln]
+        outs[i] = [t for ev in events
+                   for t in ev["choices"][0]["token_ids"]]
+
+    threads = [threading.Thread(target=_stream, args=(i,)) for i in (0, 1)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert outs[0] == outs[1] == served["ref"]
