@@ -38,8 +38,13 @@ Re-seeding after an intentional change::
         --json table8.json
     PYTHONPATH=src python -m benchmarks.table9_quant_kv --smoke \
         --json table9.json
+    PYTHONPATH=src python -m benchmarks.table10_saturation --smoke \
+        --json table10.json
+    PYTHONPATH=src python -m benchmarks.table11_slo --smoke \
+        --json table11.json
     PYTHONPATH=src python -m benchmarks.gate collect --table6 table6.json \
         --table7 table7.json --table8 table8.json --table9 table9.json \
+        --table10 table10.json --table11 table11.json \
         --out benchmarks/baseline.json
 """
 from __future__ import annotations
@@ -191,6 +196,40 @@ def collect_table10(t10: Dict) -> List[Dict]:
     return out
 
 
+def collect_table11(t11: Dict) -> List[Dict]:
+    out = []
+    for cell, policies in sorted(t11["points"].items()):
+        for policy, point in sorted(policies.items()):
+            # deterministic under the seeded greedy traces (greedy
+            # streams are K-invariant and the SLO gate defers but never
+            # drops, so totals are exact whatever the timing did —
+            # benchmarks/table11_slo.py asserts them in-run)
+            out.append(_entry("table11",
+                              f"{cell}.{policy}.requests_finished",
+                              point["requests_finished"], 0.0, "exact"))
+            out.append(_entry("table11", f"{cell}.{policy}.tokens_emitted",
+                              point["tokens_emitted"], 0.0, "exact"))
+            # the latency model must be FIT by end of run — readiness is
+            # deterministic (min_rounds is far below any smoke's round
+            # count), only the coefficients are host-dependent
+            out.append(_entry("table11",
+                              f"{cell}.{policy}.latency_model_ready",
+                              point["latency_model_ready"], 0.0, "exact"))
+            # wall-derived SLO goodput / attainment: the 2-core WARN
+            # escape hatch — report, never fail (table10 precedent)
+            out.append(_entry("table11", f"{cell}.{policy}.goodput_tok_s",
+                              point["goodput_tok_s"], 0.50, "higher",
+                              mode="warn"))
+            out.append(_entry("table11",
+                              f"{cell}.{policy}.slo_attained_frac",
+                              point["slo_attained_frac"], 0.50, "higher",
+                              mode="warn"))
+            out.append(_entry("table11", f"{cell}.{policy}.ttft_s_p99",
+                              point["ttft_s_p99"], 0.50, "lower",
+                              mode="warn"))
+    return out
+
+
 def cmd_collect(args) -> int:
     entries: List[Dict] = []
     if args.table6:
@@ -208,6 +247,9 @@ def cmd_collect(args) -> int:
     if args.table10:
         with open(args.table10) as f:
             entries += collect_table10(json.load(f))
+    if args.table11:
+        with open(args.table11) as f:
+            entries += collect_table11(json.load(f))
     with open(args.out, "w") as f:
         json.dump(entries, f, indent=2, sort_keys=True)
     print(f"[gate] wrote {len(entries)} metrics -> {args.out}")
@@ -297,6 +339,7 @@ def main() -> None:
     c.add_argument("--table8", default=None)
     c.add_argument("--table9", default=None)
     c.add_argument("--table10", default=None)
+    c.add_argument("--table11", default=None)
     c.add_argument("--out", required=True)
     c.set_defaults(fn=cmd_collect)
     d = sub.add_parser("compare", help="diff PR metrics vs the baseline")

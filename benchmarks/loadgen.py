@@ -2,12 +2,19 @@
 
 A *trace* is a deterministic, seeded, JSON-serializable request set with
 arrival offsets — the reproducibility unit for every saturation number
-this repo reports.  Format (``version`` 1):
+this repo reports.  Format (``version`` 2):
 
-    {"version": 1, "seed": 0, "process": "poisson", "rate_rps": 4.0,
+    {"version": 2, "seed": 0, "process": "poisson", "rate_rps": 4.0,
      "requests": [{"request_id": 0, "arrival_s": 0.0,
                    "prompt": [...], "max_new_tokens": 12,
-                   "dataset": "code"}, ...]}
+                   "dataset": "code",
+                   "slo_deadline_s": 3.5, "priority": 0}, ...]}
+
+``slo_deadline_s`` (completion deadline, seconds from arrival) and
+``priority`` are optional per request — version-1 traces (no SLO
+fields) still load, with deadlines defaulting to None, and
+``make_trace`` emits version 1 unless deadlines are requested, so every
+pre-v2 trace and consumer is untouched (DESIGN.md §15).
 
 Arrival processes (both seeded):
 
@@ -56,7 +63,8 @@ MIX: Dict[str, Tuple[Tuple[int, int], Tuple[int, int]]] = {
 
 
 def make_trace(n_requests: int, rate_rps: float, process: str = "poisson",
-               seed: int = 0, max_new_cap: Optional[int] = None) -> Dict:
+               seed: int = 0, max_new_cap: Optional[int] = None,
+               deadline: Optional[Tuple[float, float]] = None) -> Dict:
     """Deterministic trace: same args → same trace, any machine.
 
     Requests and arrivals come from SEPARATE rng streams, both derived
@@ -64,7 +72,13 @@ def make_trace(n_requests: int, rate_rps: float, process: str = "poisson",
     ``(n_requests, seed, max_new_cap)``, so every point of a saturation
     ladder serves the *identical workload* and only the arrival pattern
     varies — the comparison isolates load, and one warmup covers every
-    point's prefill shapes."""
+    point's prefill shapes.
+
+    ``deadline=(base_s, per_token_s)`` stamps each request with a
+    completion deadline ``base_s + per_token_s * max_new_tokens``
+    (output-proportional, so long generations get proportionally more
+    wall) and bumps the trace to version 2; None (the default) keeps the
+    deadline-free version-1 format byte-identical to pre-v2 traces."""
     assert process in ("poisson", "bursty"), process
     rng = np.random.RandomState(seed)
     rng_arr = np.random.RandomState(
@@ -87,11 +101,16 @@ def make_trace(n_requests: int, rate_rps: float, process: str = "poisson",
             max_new = min(max_new, max_new_cap)
         prompt = common.dataset(name).prompts(1, plen,
                                               seed=seed * 100003 + i)[0]
-        reqs.append({"request_id": i, "arrival_s": float(arrivals[i]),
-                     "prompt": [int(t) for t in prompt],
-                     "max_new_tokens": max_new, "dataset": name})
-    return {"version": 1, "seed": seed, "process": process,
-            "rate_rps": rate_rps, "requests": reqs}
+        rec = {"request_id": i, "arrival_s": float(arrivals[i]),
+               "prompt": [int(t) for t in prompt],
+               "max_new_tokens": max_new, "dataset": name}
+        if deadline is not None:
+            base_s, per_token_s = deadline
+            rec["slo_deadline_s"] = float(base_s + per_token_s * max_new)
+            rec["priority"] = 0
+        reqs.append(rec)
+    return {"version": 2 if deadline is not None else 1, "seed": seed,
+            "process": process, "rate_rps": rate_rps, "requests": reqs}
 
 
 def save_trace(trace: Dict, path: str) -> None:
@@ -102,16 +121,22 @@ def save_trace(trace: Dict, path: str) -> None:
 def load_trace(path: str) -> Dict:
     with open(path) as f:
         trace = json.load(f)
-    assert trace.get("version") == 1, "unknown trace version"
+    assert trace.get("version") in (1, 2), "unknown trace version"
     return trace
+
+
+def _trace_request(r: Dict) -> Request:
+    return Request(r["request_id"], prompt=list(r["prompt"]),
+                   max_new_tokens=r["max_new_tokens"],
+                   slo_deadline_s=r.get("slo_deadline_s"),
+                   priority=int(r.get("priority", 0)))
 
 
 def trace_requests(trace: Dict) -> List[Request]:
     """Materialize the trace as engine Requests (ids from the trace, so
-    identity-threaded RNG reproduces stochastic streams exactly)."""
-    return [Request(r["request_id"], prompt=list(r["prompt"]),
-                    max_new_tokens=r["max_new_tokens"])
-            for r in trace["requests"]]
+    identity-threaded RNG reproduces stochastic streams exactly).  v2
+    SLO fields thread through; v1 requests get deadline None."""
+    return [_trace_request(r) for r in trace["requests"]]
 
 
 def replay(frontend: ServingFrontend, trace: Dict,
@@ -126,8 +151,8 @@ def replay(frontend: ServingFrontend, trace: Dict,
         delay = due - time.monotonic()
         if delay > 0:
             time.sleep(delay)
-        req = Request(r["request_id"], prompt=list(r["prompt"]),
-                      max_new_tokens=r["max_new_tokens"])
+        req = _trace_request(r)
+        req.arrival_time = time.monotonic()   # deadline clock starts NOW
         handles.append(frontend.submit_request(req))
     idle = frontend.wait_idle(timeout=settle_s)
     assert idle, "replay did not drain within settle_s"
@@ -153,7 +178,9 @@ def report(frontend: ServingFrontend, reqs: List[Request], wall: float,
            slo_tpot_s: float = 0.5) -> Dict:
     """Per-load-point serving report: TTFT/TPOT p50/p99, queue depth,
     and goodput — output tokens/s counting ONLY SLO-attaining requests
-    (TTFT and TPOT both within bound), the quantity that actually
+    (TTFT and TPOT both within bound, plus each request's own
+    ``slo_deadline_s`` when the trace carries one — the shared
+    ``Request.slo_attained`` definition), the quantity that actually
     saturates when spec-decode wins evaporate under load."""
     fin = [r for r in reqs if r.state is RequestState.FINISHED]
     out = {"offered_rps": float(offered_rps), "wall_s": float(wall),
@@ -170,9 +197,7 @@ def report(frontend: ServingFrontend, reqs: List[Request], wall: float,
     out.update(common.dist_stats(depths, "queue_depth", ps=(99,)))
     out["queue_depth_peak"] = float(max(depths, default=0))
     out["throughput_tok_s"] = out["tokens_emitted"] / max(wall, 1e-9)
-    good = [r for r in fin
-            if (r.ttft() or 0.0) <= slo_ttft_s
-            and (r.tpot() is None or r.tpot() <= slo_tpot_s)]
+    good = [r for r in fin if r.slo_attained(slo_ttft_s, slo_tpot_s)]
     out["slo_attained_frac"] = len(good) / max(len(fin), 1)
     out["goodput_tok_s"] = (sum(len(r.output) for r in good)
                             / max(wall, 1e-9))

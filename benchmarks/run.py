@@ -14,8 +14,8 @@ import time
 import traceback
 
 SUITES = ("table1", "table2", "table3", "table4", "table5", "table6",
-          "table7", "table8", "table9", "table10", "fig6", "fig9",
-          "roofline")
+          "table7", "table8", "table9", "table10", "table11", "fig6",
+          "fig9", "roofline")
 
 
 def main() -> None:
@@ -45,6 +45,8 @@ def main() -> None:
                 from benchmarks.table9_quant_kv import run
             elif suite == "table10":
                 from benchmarks.table10_saturation import run
+            elif suite == "table11":
+                from benchmarks.table11_slo import run
             elif suite == "fig6":
                 from benchmarks.fig6_sensitivity import run
             elif suite == "fig9":

@@ -1,0 +1,211 @@
+"""SLO goodput under deadline-carrying load: does the ``slo`` policy's
+latency-model arbitration buy attained-deadline tokens/s over dsde and
+static speculation? (DESIGN.md §15)
+
+Setup mirrors table10's capacity-relative ladder: a closed-loop probe
+measures the host's service rate (and doubles as program warmup AND as
+the calibration sweep that warm-starts the analytic per-round latency
+model, ``RoundLatencyModel.warm_start_from_rounds``).  Version-2 traces
+(benchmarks/loadgen.py) stamp every request with an output-proportional
+completion deadline derived from the probe's measured per-token wall,
+then each load point replays the identical trace through three
+policies:
+
+* ``static``  — fixed-K speculation, deadline-blind;
+* ``dsde``    — the paper's KLD controller, deadline-blind;
+* ``slo``     — dsde + batch-tightness shrink + SLO admission gating.
+
+Per point the report's ``goodput_tok_s`` counts ONLY requests that met
+their own deadline (``Request.slo_attained``) — the SLO goodput the
+paper's serving framing optimizes.  Deterministic per point (gate
+``mode=fail``): requests_finished / tokens_emitted (greedy + no EOS +
+trace-fixed budgets; the SLO gate defers or flags but never drops, and
+greedy streams are K-invariant, so totals are bit-stable).  All
+latency/goodput numbers are wall-derived (gate ``mode=warn``) — on a
+shared-core CI container the slo-vs-baseline comparison is reported as
+a WARN row, never hard-asserted.
+
+    PYTHONPATH=src python -m benchmarks.table11_slo
+    PYTHONPATH=src python -m benchmarks.table11_slo \
+        --smoke --json /tmp/table11.json    # CI: untrained pair, tiny ladder
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, List, Optional
+
+from benchmarks import common, loadgen
+from repro.core.config import ServingConfig, SpecDecodeConfig
+from repro.serving.engine import ServingEngine
+from repro.serving.frontend import ServingFrontend
+from repro.serving.latency_model import RoundLatencyModel
+
+BATCH = 4
+MAX_SEQ = 256
+KV_BLOCK = 16
+POLICIES = ("static", "dsde", "slo")
+RATIOS_FULL = (0.8, 1.2, 2.0)
+RATIOS_SMOKE = (0.8, 1.2)
+# the load point the acceptance story reads: near saturation, deadlines
+# are tight enough to separate deadline-aware from deadline-blind
+HEADLINE_RATIO = 1.2
+
+
+def _engine(cfg_t, cfg_d, pt, pd, policy: str,
+            latency_model: Optional[RoundLatencyModel] = None
+            ) -> ServingEngine:
+    spec = SpecDecodeConfig(policy=policy, sf_normalize=True)
+    sv = ServingConfig(max_batch_size=BATCH, max_seq_len=MAX_SEQ,
+                       paged_kv=True, kv_block_size=KV_BLOCK,
+                       num_kv_blocks=BATCH * (MAX_SEQ // KV_BLOCK) // 2,
+                       pipelined=True)
+    return ServingEngine(pt, cfg_t, pd, cfg_d, spec, sv, seed=0,
+                         latency_model=latency_model)
+
+
+def run(smoke: bool = False, json_path: Optional[str] = None) -> List[str]:
+    if smoke:
+        cfg_t, cfg_d, pt, pd, _ = common.untrained_pair()
+        n_req, max_new_cap, ratios = 8, 10, RATIOS_SMOKE
+    else:
+        cfg_t, cfg_d, pt, pd, _ = common.build_pair("llama")
+        n_req, max_new_cap, ratios = 24, None, RATIOS_FULL
+
+    # capacity probe = warmup = latency-model calibration sweep: the
+    # closed-loop replay compiles every prefill shape, measures the
+    # service rate the ladder is relative to, and its engine round log
+    # (per-round wall_s/k/b_eff/prefill_tokens) batch-fits the analytic
+    # model the slo runs start from
+    probe = loadgen.make_trace(n_req, rate_rps=1.0, process="poisson",
+                               seed=13, max_new_cap=max_new_cap)
+    fe = ServingFrontend(_engine(cfg_t, cfg_d, pt, pd, "dsde"))
+    loadgen.replay_at_zero(fe, probe)           # compile
+    eng = _engine(cfg_t, cfg_d, pt, pd, "dsde")
+    fe = ServingFrontend(eng)
+    cap = loadgen.replay_at_zero(fe, probe)
+    cap_rps = cap["requests_finished"] / max(cap["wall_s"], 1e-9)
+    calib_rounds = list(eng.round_log)
+
+    # output-proportional deadlines from the measured closed-loop pace:
+    # a few batch-rounds of headroom + ~4x the probe's per-token wall,
+    # so the light point attains comfortably while overload queueing
+    # genuinely misses — tight enough to separate deadline-aware from
+    # deadline-blind at the headline ratio
+    per_tok_s = cap["wall_s"] / max(cap["tokens_emitted"], 1)
+    deadline = (max(8.0 * BATCH * per_tok_s, 0.05), 4.0 * per_tok_s)
+
+    # per-policy warmup on the deadline-stamped probe: policies fork
+    # compiled programs (the spec is a static arg), and the slo policy's
+    # shrink path visits smaller K buckets than dsde ever picks — replay
+    # the deadline trace closed-loop once per policy so no measured
+    # point pays a compile
+    warm_trace = loadgen.make_trace(n_req, rate_rps=1.0, process="poisson",
+                                    seed=13, max_new_cap=max_new_cap,
+                                    deadline=deadline)
+    paced_warm = loadgen.make_trace(
+        n_req, rate_rps=max(cap_rps * ratios[0], 1e-3), process="poisson",
+        seed=13, max_new_cap=max_new_cap, deadline=deadline)
+    for policy in POLICIES:
+        for trace, paced in ((warm_trace, False), (paced_warm, True)):
+            lm = RoundLatencyModel()
+            if policy == "slo":
+                lm.warm_start_from_rounds(calib_rounds)
+            fe = ServingFrontend(_engine(cfg_t, cfg_d, pt, pd, policy, lm))
+            if paced:
+                # timed arrivals visit K buckets the closed-loop drain
+                # never composes (partial batches -> different SL maxima)
+                fe.start()
+                try:
+                    loadgen.replay(fe, trace)
+                finally:
+                    fe.stop()
+            else:
+                loadgen.replay_at_zero(fe, trace)
+
+    rows: List[str] = []
+    out: Dict[str, object] = {"capacity_rps": cap_rps, "smoke": bool(smoke),
+                              "deadline_base_s": deadline[0],
+                              "deadline_per_token_s": deadline[1],
+                              "points": {}}
+    for ratio in ratios:
+        trace = loadgen.make_trace(
+            n_req, rate_rps=max(cap_rps * ratio, 1e-3), process="poisson",
+            seed=13, max_new_cap=max_new_cap, deadline=deadline)
+        budget = sum(r["max_new_tokens"] for r in trace["requests"])
+        cell: Dict[str, Dict] = {}
+        for policy in POLICIES:
+            lm = RoundLatencyModel()
+            if policy == "slo":
+                lm.warm_start_from_rounds(calib_rounds)
+            fe = ServingFrontend(
+                _engine(cfg_t, cfg_d, pt, pd, policy, lm)).start()
+            t0 = time.monotonic()
+            try:
+                point = loadgen.replay(fe, trace)
+            finally:
+                fe.stop()
+            # deterministic totals: greedy + K-invariant streams + a
+            # never-drops SLO gate → exact, whatever the timing did
+            assert point["requests_finished"] == n_req, point
+            assert point["tokens_emitted"] == budget, (
+                point["tokens_emitted"], budget)
+            summ = fe.summary()
+            point["load_ratio"] = ratio
+            point["slo_predicted_violations"] = (
+                summ["slo_predicted_violations"])
+            point["slo_deferrals"] = summ["slo_deferrals"]
+            point["latency_model_ready"] = float(
+                summ["latency_model_rounds_fit"]
+                >= RoundLatencyModel().min_rounds)
+            for k, v in summ.items():
+                if k.startswith("latency_model_"):
+                    point[k] = v
+            cell[policy] = point
+            rows.append(common.row(
+                f"table11/x{ratio}_{policy}",
+                (time.monotonic() - t0) * 1e6,
+                f"goodput_tok_s={point['goodput_tok_s']:.1f};"
+                f"slo_frac={point['slo_attained_frac']:.2f};"
+                f"ttft_p99_ms={point['ttft_s_p99'] * 1e3:.0f};"
+                f"deferrals={point['slo_deferrals']};"
+                f"pred_viol={point['slo_predicted_violations']}"))
+        out["points"][f"x{ratio}"] = cell
+        best_base = max(cell[p]["goodput_tok_s"]
+                        for p in POLICIES if p != "slo")
+        if cell["slo"]["goodput_tok_s"] < 0.95 * best_base:
+            # wall-derived on a shared-core box: report, never fail
+            rows.append(common.row(
+                f"table11/WARN_x{ratio}", 0.0,
+                f"slo_goodput={cell['slo']['goodput_tok_s']:.1f}<"
+                f"best_baseline={best_base:.1f};"
+                "host timing noise suspected"))
+    lm_fields = out["points"][f"x{ratios[-1]}"]["slo"]
+    rows.append(common.row(
+        "table11/latency_model", 0.0,
+        f"c0={lm_fields['latency_model_c0']:.2e};"
+        f"c_prefill={lm_fields['latency_model_c_prefill']:.2e};"
+        f"c_draft={lm_fields['latency_model_c_draft']:.2e};"
+        f"c_verify={lm_fields['latency_model_c_verify']:.2e};"
+        f"rounds_fit={lm_fields['latency_model_rounds_fit']:.0f}"))
+    rows.append(common.row("table11/capacity", 0.0,
+                           f"closed_loop_rps={cap_rps:.2f}"))
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(out, f, indent=2, sort_keys=True)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="untrained pair + tiny ladder (CI lane)")
+    ap.add_argument("--json", default=None,
+                    help="write the SLO-goodput points as JSON (CI artifact)")
+    args = ap.parse_args()
+    print("\n".join(run(smoke=args.smoke, json_path=args.json)))
+
+
+if __name__ == "__main__":
+    main()

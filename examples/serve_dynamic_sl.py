@@ -114,7 +114,10 @@ def main():
     # drafters let the engine source the cost from Drafter.step_cost()
     cost_kw = ({"goodput_draft_cost": ratio}
                if args.drafter == "model" else {})
-    for policy in ("autoregressive", "static", "adaedl", "dsde", "goodput"):
+    # "slo" rides with no deadlines set, so its row must equal dsde's —
+    # the DESIGN.md §15 no-deadline exactness bar, live in the demo
+    for policy in ("autoregressive", "static", "adaedl", "dsde", "goodput",
+                   "slo"):
         m, reqs, eng = common.serve(cfg_t, cfg_d, pt, pd, prompts,
                                     policy=policy, max_new=max_new, batch=batch,
                                     drafter=args.drafter, mesh=args.mesh,

@@ -303,6 +303,14 @@ class ServingConfig:
     # physical block count — blocks just cost fewer bytes, so an
     # equal-byte budget buys >= 2x blocks (``equal_byte_blocks``).
     kv_quant: str = "none"
+    # SLO-aware admission (DESIGN.md §15): how many times a fresh
+    # deadline-carrying request whose predicted completion already
+    # breaches its deadline may be deferred behind later feasible
+    # arrivals before it admits unconditionally anyway.  Bounds the
+    # aging so predicted violators are surfaced and de-prioritized but
+    # never starved or dropped; 0 disables deferral entirely (predicted
+    # violations are still surfaced).
+    slo_defer_limit: int = 4
 
     def blocks_per_seq(self) -> int:
         """Block-table width: worst-case blocks one sequence can hold."""

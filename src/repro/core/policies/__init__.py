@@ -7,22 +7,27 @@ Importing this package registers the built-in policies:
 * ``adaedl``          — entropy early-stop baseline;
 * ``autoregressive``  — no speculation (K = 0);
 * ``goodput``         — acceptance-EMA goodput controller (TurboSpec-style,
-  beyond-paper; built purely through this public API).
+  beyond-paper; built purely through this public API);
+* ``slo``             — DSDE + deadline-aware bucket arbitration from the
+  analytic latency model (SpecServe-style, beyond-paper; DESIGN.md §15).
 
 Build one from a config with ``build_policy(spec)``; register new ones
 with ``@register("name")``.
 """
-from repro.core.policies.base import (PolicyObservation, SpecPolicy,
+from repro.core.policies.base import (HostRoundContext, PolicyObservation,
+                                      SpecPolicy, as_host_round_context,
                                       available_policies, build_policy,
                                       register)
 from repro.core.policies.adaedl import AdaEDLPolicy
 from repro.core.policies.autoregressive import AutoregressivePolicy
 from repro.core.policies.dsde import DSDEPolicy
 from repro.core.policies.goodput import GoodputPolicy, GoodputState
+from repro.core.policies.slo import SLOPolicy
 from repro.core.policies.static import KLDTrackingPolicy, StaticPolicy
 
 __all__ = [
     "AdaEDLPolicy", "AutoregressivePolicy", "DSDEPolicy", "GoodputPolicy",
-    "GoodputState", "KLDTrackingPolicy", "PolicyObservation", "SpecPolicy",
-    "StaticPolicy", "available_policies", "build_policy", "register",
+    "GoodputState", "HostRoundContext", "KLDTrackingPolicy",
+    "PolicyObservation", "SLOPolicy", "SpecPolicy", "StaticPolicy",
+    "as_host_round_context", "available_policies", "build_policy", "register",
 ]

@@ -12,7 +12,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.policies.base import SpecPolicy, register
+from repro.core.policies.base import (HostRoundContext, SpecPolicy,
+                                      as_host_round_context, register)
 
 PyTree = Any
 
@@ -26,9 +27,10 @@ class AutoregressivePolicy(SpecPolicy):
     def uses_draft(self) -> bool:
         return False
 
-    def lookahead(self, sl: np.ndarray) -> np.ndarray:
+    def lookahead(self, ctx: HostRoundContext) -> np.ndarray:
         # one decode slot per round, no speculative lookahead
-        return np.ones_like(np.asarray(sl))
+        ctx = as_host_round_context(ctx, hook="lookahead")
+        return np.ones_like(np.asarray(ctx.sl_next))
 
     def max_lookahead(self) -> int:
         return 1

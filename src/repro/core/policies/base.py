@@ -15,9 +15,16 @@ stack without touching the jitted round:
   state they thread through :class:`RoundState` must be a pytree.
 * host-side hooks (``pick_bucket`` / ``lookahead`` / ``uses_draft``)
   drive the engine's Python-side bucket choice and the scheduler's
-  admission capacity planning.  They consume **already-materialized
-  numpy arrays** — the engine transfers once per round, policies never
-  trigger their own device→host syncs.
+  admission capacity planning.  They consume a :class:`HostRoundContext`
+  — the batch-global host view of the round (SL predictions, active
+  mask, per-slot deadlines-remaining, the fitted latency model, round
+  ordinal) built from **already-materialized numpy arrays**: the engine
+  transfers once per round, policies never trigger their own
+  device→host syncs.  The old bare-positional form
+  (``pick_bucket(sl_next, active)`` / ``lookahead(sl)``) still works
+  for one release via :func:`as_host_round_context` but emits a
+  ``DeprecationWarning`` (speclint JX008 keeps in-repo callers on the
+  context form).
 * a string registry (:func:`register` / :func:`build_policy`) keyed by
   ``SpecDecodeConfig.policy`` so existing config strings keep working.
 
@@ -34,6 +41,7 @@ Writing a new policy (see DESIGN.md §6 for the full guide)::
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple, Type
 
 import jax
@@ -43,6 +51,89 @@ import numpy as np
 from repro.core.config import SpecDecodeConfig
 
 PyTree = Any
+
+
+@dataclasses.dataclass
+class HostRoundContext:
+    """Batch-global host-side view of one serving round.
+
+    The single argument of the host policy hooks (``pick_bucket`` /
+    ``lookahead``).  Everything in it is plain numpy / Python — built by
+    ``LookaheadScheduler.host_context`` from arrays the engine already
+    materialized, never triggering a device sync of its own.
+
+    ``deadline_remaining_s`` is +inf for slots without a deadline (and
+    for empty slots); ``tokens_remaining`` is 0 for empty slots.  Both
+    are None when the builder has no per-request view (e.g. the legacy
+    positional shim), and policies must treat None as "no deadlines".
+    ``latency_model`` is the engine's :class:`RoundLatencyModel` (or
+    None); deadline-aware policies must check ``latency_model.ready()``
+    before acting on its predictions.
+    """
+
+    sl_next: np.ndarray                               # [B] int, SL predictions
+    active: np.ndarray                                # [B] bool, live slots
+    deadline_remaining_s: Optional[np.ndarray] = None  # [B] float, +inf unset
+    tokens_remaining: Optional[np.ndarray] = None      # [B] int, budget left
+    latency_model: Optional[Any] = None
+    round_ordinal: int = 0
+
+    @classmethod
+    def from_arrays(cls, sl_next: np.ndarray,
+                    active: Optional[np.ndarray] = None) -> "HostRoundContext":
+        """Minimal context over bare arrays (tests, legacy shim).  With
+        no ``active`` mask every slot is considered live."""
+        sl = np.asarray(sl_next)
+        act = (np.ones(sl.shape, bool) if active is None
+               else np.asarray(active).astype(bool))
+        return cls(sl_next=sl, active=act)
+
+    def _live_deadlines(self) -> Optional[np.ndarray]:
+        """Finite, still-attainable (>0) deadlines on active slots.
+        Lapsed deadlines (<=0) are excluded everywhere — a deadline
+        already missed must not pin the batch to minimum speculation
+        forever (it cannot be attained no matter what K does)."""
+        if self.deadline_remaining_s is None:
+            return None
+        act = np.asarray(self.active, bool)
+        if not act.any():
+            return None
+        dl = np.asarray(self.deadline_remaining_s, float)[act]
+        dl = dl[np.isfinite(dl) & (dl > 0.0)]
+        return dl if dl.size else None
+
+    def has_deadlines(self) -> bool:
+        """True iff some *live* slot carries an attainable deadline."""
+        return self._live_deadlines() is not None
+
+    def tightest_deadline_s(self) -> Optional[float]:
+        """Smallest live attainable deadline-remaining, or None."""
+        dl = self._live_deadlines()
+        return None if dl is None else float(dl.min())
+
+
+def as_host_round_context(ctx: Any, active: Optional[np.ndarray] = None,
+                          hook: str = "pick_bucket") -> HostRoundContext:
+    """Coerce a host-hook argument to :class:`HostRoundContext`.
+
+    One-release back-compat shim: callers still passing the pre-context
+    positional form (a bare ``sl`` array, optionally with an ``active``
+    mask) get a context built from it plus a ``DeprecationWarning``.
+    Context-form calls pass through untouched.
+    """
+    if isinstance(ctx, HostRoundContext):
+        if active is not None:
+            raise TypeError(
+                f"SpecPolicy.{hook}: pass either a HostRoundContext or the "
+                "legacy (sl_next, active) arrays, not both")
+        return ctx
+    warnings.warn(
+        f"SpecPolicy.{hook} with bare numpy positionals is deprecated; "
+        "pass a HostRoundContext (e.g. HostRoundContext.from_arrays(sl, "
+        "active) or LookaheadScheduler.host_context()). The positional "
+        "form will be removed next release.",
+        DeprecationWarning, stacklevel=3)
+    return HostRoundContext.from_arrays(ctx, active)
 
 
 def masked_row_reset(fresh: PyTree, state: PyTree, rows: jax.Array) -> PyTree:
@@ -117,11 +208,14 @@ class SpecPolicy:
         """False => the engine never runs the draft model (K = 0)."""
         return True
 
-    def lookahead(self, sl: np.ndarray) -> np.ndarray:
+    def lookahead(self, ctx: "HostRoundContext") -> np.ndarray:
         """KV slots each sequence needs next round: SL_i + 1 bonus token.
         Consumed by ``LookaheadScheduler`` for per-round capacity planning
-        (paper §3.2's vLLM lookahead modification)."""
-        return np.asarray(sl) + 1
+        (paper §3.2's vLLM lookahead modification).  ``ctx`` is the
+        round's :class:`HostRoundContext`; a bare SL array still works
+        for one release (DeprecationWarning)."""
+        ctx = as_host_round_context(ctx, hook="lookahead")
+        return np.asarray(ctx.sl_next) + 1
 
     def max_lookahead(self) -> int:
         """Worst-case KV slots any single round can consume under this
@@ -143,15 +237,18 @@ class SpecPolicy:
             return 0
         return self.max_lookahead() - 1
 
-    def pick_bucket(self, sl_next: np.ndarray, active: np.ndarray) -> int:
+    def pick_bucket(self, ctx: "HostRoundContext",
+                    active: Optional[np.ndarray] = None) -> int:
         """Python-side draft bucket choice: K = max active SL prediction
         (the paper's SL_max^(t) = max_i SL_i^(t) verification length).
-        ``sl_next`` / ``active`` are host arrays the engine materialized
-        once at the end of the previous round."""
+        ``ctx`` is the round's :class:`HostRoundContext`; the legacy
+        ``(sl_next, active)`` array form still works for one release
+        (DeprecationWarning)."""
+        ctx = as_host_round_context(ctx, active, hook="pick_bucket")
         if not self.uses_draft():
             return 0
-        sl = np.asarray(sl_next)
-        act = np.asarray(active)
+        sl = np.asarray(ctx.sl_next)
+        act = np.asarray(ctx.active)
         live = sl[act] if act.any() else sl
         return int(max(live.max() if live.size else self.spec.sl_min,
                        self.spec.sl_min))

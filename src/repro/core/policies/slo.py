@@ -1,0 +1,87 @@
+"""SLO-aware speculation control (DESIGN.md §15).
+
+DSDE's stability penalty caps stragglers *per batch*; real serving
+(paper §4's framing, SpecServe/AdaSpec in PAPERS.md) ultimately answers
+to per-request *deadlines*.  This policy generalizes the straggler cap
+to SLOs: it is DSDE on the device (identical KLD-variance SL
+adaptation, byte-identical streams when no deadlines are set) plus a
+host-side batch-global arbitration layer that shrinks the draft bucket
+when the analytic latency model predicts the next round's cost would
+breach the batch's tightest live deadline.
+
+The arbitration is a pure reduction over the :class:`HostRoundContext`:
+
+1. each live deadline-carrying slot i affords a per-round budget
+   ``deadline_remaining_i / rounds_remaining_i(K)`` where
+   ``rounds_remaining_i(K) = ceil(tokens_remaining_i / (K+1))`` is the
+   *best-case* round count at bucket K (every position accepted).  The
+   batch tightness scalar is the min over slots;
+2. starting from DSDE's K, shrink while the latency model predicts
+   ``T_round(K) >`` tightness(K) — both sides move as K shrinks:
+   cheaper rounds, but more of them;
+3. never below ``sl_min``; an infeasible batch runs at ``sl_min``
+   (best effort — admission gating is where infeasibility is surfaced,
+   not here).
+
+Slots whose deadline has already lapsed (remaining <= 0) cannot be
+saved by any K and are excluded from the tightness reduction rather
+than pinning the whole batch at ``sl_min`` forever.
+
+Exactness: for greedy decoding the emitted token stream is invariant
+to K (verification accepts the same prefix; the bonus token is the
+same argmax), so deadline-driven K changes never alter outputs — only
+wall-clock.  With no finite deadlines, or before the latency model is
+ready, step 2 is skipped entirely and the policy IS DSDE.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import numpy as np
+
+from repro.core.policies.base import (HostRoundContext,
+                                      as_host_round_context, register)
+from repro.core.policies.dsde import DSDEPolicy
+
+
+def batch_tightness_s(ctx: HostRoundContext, k: int) -> Optional[float]:
+    """The batch's tightest per-round wall budget at bucket ``k``, or
+    None when nothing constrains the round (no live finite positive
+    deadlines)."""
+    if not ctx.has_deadlines():
+        return None
+    act = np.asarray(ctx.active, bool)
+    dl = np.asarray(ctx.deadline_remaining_s, float)[act]
+    if ctx.tokens_remaining is not None:
+        rem = np.asarray(ctx.tokens_remaining)[act].astype(float)
+    else:
+        rem = np.ones(dl.shape)
+    # lapsed deadlines are unsalvageable at any K; don't let them pin K
+    live = np.isfinite(dl) & (dl > 0.0)
+    if not live.any():
+        return None
+    rounds = np.maximum(np.ceil(rem[live] / float(k + 1)), 1.0)
+    return float((dl[live] / rounds).min())
+
+
+@register("slo")
+@dataclasses.dataclass(frozen=True)
+class SLOPolicy(DSDEPolicy):
+    """DSDE + deadline-aware host arbitration of the draft bucket."""
+
+    def pick_bucket(self, ctx: HostRoundContext,
+                    active: Optional[np.ndarray] = None) -> int:
+        ctx = as_host_round_context(ctx, active, hook="pick_bucket")
+        k = super().pick_bucket(ctx)
+        lm = ctx.latency_model
+        if lm is None or not lm.ready():
+            return k
+        b_eff = int(np.asarray(ctx.active, bool).sum())
+        while k > self.spec.sl_min:
+            budget = batch_tightness_s(ctx, k)
+            if budget is None or lm.predict_round_s(k, b_eff) <= budget:
+                break
+            k -= 1
+        return k

@@ -54,7 +54,6 @@ from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.config import ModelConfig, SpecDecodeConfig
 from repro.core.drafters import Drafter, build_drafter
@@ -344,12 +343,3 @@ def init_round_state(cfg_t: ModelConfig, cfg_d: Optional[ModelConfig],
         seed=jnp.arange(batch, dtype=jnp.int32),
         round_idx=jnp.zeros((batch,), jnp.int32),
         **no_term)
-
-
-def pick_bucket(sl_next, spec: SpecDecodeConfig, active) -> int:
-    """Python-side bucket choice, delegated to the policy.  Prefer calling
-    ``policy.pick_bucket`` directly with pre-materialized host arrays (the
-    engine does); this wrapper keeps the historical (sl, spec, active)
-    signature for scripts and tests."""
-    return build_policy(spec).pick_bucket(np.asarray(sl_next),
-                                          np.asarray(active))

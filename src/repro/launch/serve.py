@@ -69,6 +69,14 @@ def main() -> None:
                          "§13); int8 stores K/V as per-block-scaled int8 "
                          "and fuses the dequant into the verify kv-sweep "
                          "— implies --paged")
+    ap.add_argument("--slo-deadline", default=None, metavar="BASE,PER_TOK",
+                    help="demo only: stamp every request with a "
+                         "completion deadline of BASE + PER_TOK * "
+                         "max_new_tokens seconds (DESIGN.md §15).  Pair "
+                         "with --policy slo for deadline-aware "
+                         "speculation; the run summary reports "
+                         "slo_attained_frac / slo_goodput_tok_s and the "
+                         "fitted latency-model coefficients either way")
     ap.add_argument("--pipelined", action="store_true",
                     help="plan/dispatch/collect pipelined schedule: "
                          "reconcile the host one round behind the device "
@@ -100,9 +108,17 @@ def main() -> None:
                           / (1 - args.prefix_share) * tail))
             n = max(n // 16 * 16, 16)
             head = rng.randint(0, cfg.vocab_size, size=n).tolist()
+        deadline = None
+        if args.slo_deadline:
+            try:
+                base_s, per_tok_s = map(float, args.slo_deadline.split(","))
+            except ValueError:
+                ap.error("--slo-deadline expects BASE,PER_TOK floats")
+            deadline = base_s + per_tok_s * args.max_new
         reqs = [Request(i, prompt=head + rng.randint(
             0, cfg.vocab_size, size=rng.randint(6, 20)).tolist(),
-            max_new_tokens=args.max_new) for i in range(args.requests)]
+            max_new_tokens=args.max_new, slo_deadline_s=deadline)
+            for i in range(args.requests)]
         m = eng.run(reqs)
         print({k: round(v, 3) if isinstance(v, float) else v
                for k, v in m.items()})

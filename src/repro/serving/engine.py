@@ -50,6 +50,7 @@ from repro.core.policies import build_policy
 from repro.core.sampling import sample_token
 from repro.models import cache as cache_lib
 from repro.models.transformer import has_recurrent_state, model_specs
+from repro.serving.latency_model import RoundLatencyModel
 from repro.serving.request import Request, RequestState
 from repro.serving.scheduler import LookaheadScheduler
 
@@ -84,9 +85,11 @@ class _DispatchRecord:
     arrays whose host copies were started with ``copy_to_host_async``).
     """
 
-    __slots__ = ("k", "rows", "admits", "out", "sl_next", "t_dispatch")
+    __slots__ = ("k", "rows", "admits", "out", "sl_next", "t_dispatch",
+                 "prefill_tokens")
 
-    def __init__(self, k: int, rows, admits, out, sl_next, t_dispatch):
+    def __init__(self, k: int, rows, admits, out, sl_next, t_dispatch,
+                 prefill_tokens=0):
         self.k = k
         self.rows = rows          # [(req, slot, preemptions-at-dispatch)]
         self.admits = admits      # [(fresh_reqs, pend [R] jax, fresh_idx,
@@ -94,6 +97,9 @@ class _DispatchRecord:
         self.out = out            # RoundOutput (device futures)
         self.sl_next = sl_next    # [B] jax — post-round SL predictions
         self.t_dispatch = t_dispatch
+        # prefill tokens computed by the admission wave riding this
+        # round's wall interval (the latency model's c_prefill regressor)
+        self.prefill_tokens = prefill_tokens
 
 
 class ServingEngine:
@@ -101,14 +107,21 @@ class ServingEngine:
                  params_draft: Optional[PyTree],
                  cfg_draft: Optional[ModelConfig],
                  spec: SpecDecodeConfig, serving: ServingConfig,
-                 seed: int = 0, mesh: Optional[Any] = None):
+                 seed: int = 0, mesh: Optional[Any] = None,
+                 latency_model: Optional[RoundLatencyModel] = None):
         """``mesh``: an optional ``jax.sharding.Mesh`` with ``data`` /
         ``model`` axes.  None (the default) is the single-device engine,
         bit-for-bit unchanged.  With a mesh, params and round state are
         placed under the §5 ``serve`` rule set and every round runs
         through a jit with explicit in/out shardings — greedy token
         streams stay byte-identical to the single-device engine
-        (tests/test_serving_mesh.py)."""
+        (tests/test_serving_mesh.py).
+
+        ``latency_model``: a pre-seeded :class:`RoundLatencyModel`
+        (e.g. warm-started from a calibration sweep's round log); None
+        builds a fresh one.  Either way the engine feeds it one sample
+        per collected round and installs it on the scheduler, where the
+        SLO policy hooks and admission gate consult it (DESIGN.md §15)."""
         self.pt, self.cfg_t = params_target, cfg_target
         self.pd, self.cfg_d = params_draft, cfg_draft
         # the drafter (DESIGN.md §9) — the proposer half of every round.
@@ -177,6 +190,13 @@ class ServingEngine:
                                             kv_mirror=drafter.mirrors_kv(),
                                             prefix_cache=self.prefix_caching,
                                             block_bytes=block_bytes)
+        # the analytic per-round latency model (DESIGN.md §15): fed one
+        # (features, wall_s) sample per collect, installed on the
+        # scheduler so the SLO admission gate and the policy host hooks
+        # (via HostRoundContext) consult the same fit
+        self.latency_model = (latency_model if latency_model is not None
+                              else RoundLatencyModel())
+        self.scheduler.latency_model = self.latency_model
         self.key = jax.random.PRNGKey(seed)
         b = serving.max_batch_size
         paged_arg = ((self.scheduler.kv_blocks_total(),
@@ -221,6 +241,10 @@ class ServingEngine:
                                          List[int], List[int]]] = []
         self._planned_k: Optional[int] = None
         self._finished_at_prefill: List[Request] = []
+        # prefill tokens computed since the last dispatch — snapshotted
+        # into each dispatch record as the latency model's c_prefill
+        # regressor for the round interval they ride
+        self._prefill_tokens_pending = 0
         # telemetry
         self.rounds = 0
         self.draft_steps = 0            # padded bucket steps (k+1)
@@ -463,6 +487,7 @@ class ServingEngine:
             if req.output:
                 pend_host[i] = req.output[-1]
             req.cache_len = len(prefix)
+        self._prefill_tokens_pending += int(tails.sum())
         toks = jnp.asarray(toks_np)
         plen_j = jnp.asarray(plens)
         starts_j = jnp.asarray(starts)
@@ -641,8 +666,14 @@ class ServingEngine:
         padding work."""
         if self.spec.temperature > 0.0:
             return self.policy.max_bucket()
-        return self.policy.pick_bucket(self._sl_next_host,
-                                       self.scheduler.active_mask)
+        return self.policy.pick_bucket(self._host_context())
+
+    def _host_context(self):
+        """The round's :class:`HostRoundContext` for the policy host
+        hooks — scheduler-owned per-slot state plus the engine's SL
+        mirror, latency model, and round ordinal."""
+        return self.scheduler.host_context(self._sl_next_host,
+                                           round_ordinal=self.rounds)
 
     def dispatch(self) -> Optional[_DispatchRecord]:
         """Phase 2 — enqueue one speculative round.  Returns the dispatch
@@ -656,7 +687,7 @@ class ServingEngine:
         rows = [(r, r.slot, r.preemptions) for r in self.scheduler.running]
         active_mask = self.scheduler.active_mask
         k = (self._planned_k if self._planned_k is not None
-             else self.policy.pick_bucket(self._sl_next_host, active_mask))
+             else self.policy.pick_bucket(self._host_context()))
         self._planned_k = None
         t_dispatch = time.monotonic()
         self.state, out = self._round_fn(k)(self.state,
@@ -672,7 +703,9 @@ class ServingEngine:
                 pass
         rec = _DispatchRecord(k=k, rows=rows, admits=self._pending_admits,
                               out=out, sl_next=sl_next,
-                              t_dispatch=t_dispatch)
+                              t_dispatch=t_dispatch,
+                              prefill_tokens=self._prefill_tokens_pending)
+        self._prefill_tokens_pending = 0
         self._pending_admits = []
         self._inflight = rec
         return rec
@@ -855,6 +888,15 @@ class ServingEngine:
             round_rec["wall_s"] = self._inflight.t_dispatch - rec.t_dispatch
         else:
             round_rec["wall_s"] = time.monotonic() - rec.t_dispatch
+        # latency-model regressors + prediction-before-update, then fold
+        # the measured wall in (one RLS sample per round, DESIGN.md §15)
+        b_eff = len(rec.rows)
+        round_rec["b_eff"] = float(b_eff)
+        round_rec["prefill_tokens"] = float(rec.prefill_tokens)
+        round_rec["t_round_pred_s"] = self.latency_model.predict_round_s(
+            rec.k, b_eff, rec.prefill_tokens)
+        self.latency_model.observe(round_rec["wall_s"], rec.k, b_eff,
+                                   rec.prefill_tokens)
         self.round_log.append(round_rec)
         if self._inflight is rec:
             self._inflight = None
@@ -940,7 +982,24 @@ class ServingEngine:
         qw = [r.queue_wait() for r in fin if r.queue_wait() is not None]
         blocked = float(sum(r.get("host_blocked_s", 0.0)
                             for r in self.round_log))
+        # SLO accounting (DESIGN.md §15): attainment over every terminal
+        # request (a rejected request never attains); goodput counts only
+        # tokens of requests that met their own deadline.  With no
+        # deadlines anywhere every finished request attains, so
+        # slo_goodput_tok_s == throughput_tok_s.
+        attained = [r for r in done if r.slo_attained()]
+        slo = {
+            "slo_requests_attained": len(attained),
+            "slo_attained_frac": len(attained) / max(len(done), 1),
+            "slo_goodput_tok_s": (sum(len(r.output) for r in attained)
+                                  / max(wall, 1e-9)),
+            "slo_predicted_violations": float(
+                self.scheduler.slo_predicted_violations),
+            "slo_deferrals": float(self.scheduler.slo_deferrals_total),
+        }
         return {
+            **self.latency_model.summary_fields(),
+            **slo,
             "wall_time_s": wall,
             "requests_finished": len(fin),
             "requests_rejected": len(rej),

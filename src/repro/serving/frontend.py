@@ -133,12 +133,17 @@ class ServingFrontend:
     # ------------------------------------------------------------ ingestion
     def submit(self, prompt: Sequence[int], max_new_tokens: int = 128,
                eos_token_id: Optional[int] = None,
-               request_id: Optional[int] = None) -> StreamHandle:
+               request_id: Optional[int] = None,
+               slo_deadline_s: Optional[float] = None,
+               priority: int = 0) -> StreamHandle:
         """Thread-safe submission; stamps ``arrival_time`` NOW and
         returns the stream handle.  ``request_id`` defaults to a
         monotonic counter; callers replaying a trace pass the trace's
         ids so the identity-threaded RNG (DESIGN.md §9) reproduces the
-        exact stochastic streams of any other schedule."""
+        exact stochastic streams of any other schedule.
+        ``slo_deadline_s`` / ``priority`` thread straight onto the
+        Request (DESIGN.md §15); left at their defaults the request is
+        untouched by every SLO path."""
         if self._stop.is_set():
             raise RuntimeError("front-end is stopped")
         if request_id is None:
@@ -150,7 +155,8 @@ class ServingFrontend:
                 self._next_id = max(self._next_id, request_id + 1)
         req = Request(request_id=request_id, prompt=list(prompt),
                       max_new_tokens=max_new_tokens,
-                      eos_token_id=eos_token_id)
+                      eos_token_id=eos_token_id,
+                      slo_deadline_s=slo_deadline_s, priority=priority)
         handle = StreamHandle(req)
         req.on_token = lambda r, t: handle._push_token(t)
         self._ingress.put((req, handle))

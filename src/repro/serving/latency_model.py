@@ -1,0 +1,166 @@
+"""Interpretable analytic per-round latency model (DESIGN.md §15).
+
+"An Interpretable Latency Model for Speculative Decoding in LLM
+Serving" (PAPERS.md) observes that the wall cost of one speculative
+round is predictable from a handful of schedule-visible quantities.
+This module fits exactly that — a four-coefficient linear form
+
+    T_round  ≈  c0  +  c_prefill · tokens  +  c_draft · K
+                    +  c_verify · (K + 1) · B_eff
+
+where ``tokens`` is the prefill tokens that rode the round's plan
+phase, ``K`` the draft bucket, and ``B_eff`` the number of live rows
+the round verified.  The terms mirror the round's actual phases:
+``c0`` is the fixed dispatch/launch overhead, ``c_prefill`` the
+per-token prefill cost, ``c_draft`` the per-step draft cost (a
+property of the *drafter* — model drafters pay real forwards, lookup
+drafters pay ~0), and ``c_verify`` the per-(position × row) cost of
+the target verification, which scales with both the bucket and the
+batch.
+
+The fit is ordinary recursive least squares (RLS) with a forgetting
+factor over the engine's existing per-round telemetry — every
+``collect`` feeds one ``(features, wall_s)`` sample, so the model
+tracks the *serving host it is running on* (including interference)
+with O(16) floats of state and no extra timing instrumentation.  A
+calibration sweep (any short run's ``round_log``) warm-starts the
+coefficients via :meth:`warm_start_from_rounds` so SLO decisions are
+grounded before the online fit has seen enough rounds.
+
+Consumers:
+
+* the ``slo`` policy (repro/core/policies/slo.py) asks
+  :meth:`predict_round_s` whether the next round's predicted cost
+  breaches the batch's tightest live deadline;
+* ``LookaheadScheduler.admit`` asks :meth:`predict_completion_s`-style
+  questions at admission (via the scheduler's own helper) to surface
+  requests that cannot meet their deadline even in the best case;
+* ``ServingEngine.summary()`` exposes the coefficients
+  (``latency_model_*``) so every benchmark row reports the fitted
+  model alongside the latencies it predicts.
+
+Everything here is host-side numpy — nothing is traced, nothing
+touches the jitted round.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, List, Optional, Sequence
+
+import numpy as np
+
+# feature order, fixed: [1, tokens, K, (K+1)*B_eff]
+COEF_NAMES = ("c0", "c_prefill", "c_draft", "c_verify")
+N_COEF = 4
+
+
+def round_features(k: int, b_eff: int,
+                   prefill_tokens: float = 0.0) -> np.ndarray:
+    """The model's regressor vector for one round."""
+    return np.array(
+        [1.0, float(prefill_tokens), float(k), float(k + 1) * float(b_eff)],
+        np.float64)
+
+
+class RoundLatencyModel:
+    """RLS fit of the four-term per-round latency form.
+
+    ``forgetting`` < 1 geometrically down-weights old rounds so the
+    model tracks drifting host conditions; ``prior_scale`` sets the
+    initial parameter covariance (large = the first samples dominate
+    the zero prior quickly); ``min_rounds`` is the readiness gate —
+    below it :meth:`ready` is False and SLO consumers fall back to
+    their deadline-blind behaviour rather than act on a junk fit.
+    """
+
+    def __init__(self, forgetting: float = 0.995,
+                 prior_scale: float = 1e4, min_rounds: int = 8):
+        assert 0.0 < forgetting <= 1.0
+        self.forgetting = float(forgetting)
+        self.min_rounds = int(min_rounds)
+        self.theta = np.zeros((N_COEF,), np.float64)
+        self.P = np.eye(N_COEF, dtype=np.float64) * float(prior_scale)
+        self.rounds_fit = 0
+        # EMA of squared prediction error (pre-update residual), for the
+        # summary's honesty field: how well the form actually fits
+        self._mse_ema = 0.0
+
+    # ------------------------------------------------------------------ fit
+    def observe(self, wall_s: float, k: int, b_eff: int,
+                prefill_tokens: float = 0.0) -> float:
+        """Fold one measured round in; returns the pre-update residual
+        (prediction error the model made on this round)."""
+        phi = round_features(k, b_eff, prefill_tokens)
+        err = float(wall_s) - float(self.theta @ phi)
+        lam = self.forgetting
+        Pphi = self.P @ phi
+        gain = Pphi / (lam + float(phi @ Pphi))
+        self.theta = self.theta + gain * err
+        self.P = (self.P - np.outer(gain, Pphi)) / lam
+        self.rounds_fit += 1
+        a = 0.9 if self.rounds_fit > 1 else 0.0
+        self._mse_ema = a * self._mse_ema + (1.0 - a) * err * err
+        return err
+
+    def warm_start_from_rounds(self, round_log: Iterable[Dict]) -> int:
+        """Seed the fit from a calibration sweep: a batch ridge
+        least-squares over an engine ``round_log`` (entries carrying
+        ``wall_s`` / ``k`` / ``b_eff`` / ``prefill_tokens``, which every
+        engine logs per round).  Returns the number of rounds absorbed;
+        entries missing the fields are skipped."""
+        X: List[np.ndarray] = []
+        y: List[float] = []
+        for rec in round_log:
+            if "wall_s" not in rec or "k" not in rec:
+                continue
+            X.append(round_features(int(rec["k"]),
+                                    int(rec.get("b_eff", 1)),
+                                    float(rec.get("prefill_tokens", 0.0))))
+            y.append(float(rec["wall_s"]))
+        if not X:
+            return 0
+        Xm = np.stack(X)
+        yv = np.asarray(y, np.float64)
+        ridge = 1e-8 * np.eye(N_COEF)
+        gram = Xm.T @ Xm + ridge
+        self.theta = np.linalg.solve(gram, Xm.T @ yv)
+        # the batch information becomes the RLS prior: P = gram^-1, so
+        # subsequent online samples update FROM the calibration, not
+        # from scratch
+        self.P = np.linalg.inv(gram)
+        self.rounds_fit += len(y)
+        resid = yv - Xm @ self.theta
+        self._mse_ema = float(np.mean(resid * resid))
+        return len(y)
+
+    # -------------------------------------------------------------- predict
+    def ready(self) -> bool:
+        return self.rounds_fit >= self.min_rounds
+
+    def predict_round_s(self, k: int, b_eff: int,
+                        prefill_tokens: float = 0.0) -> float:
+        """Predicted wall seconds of one round at bucket ``k`` with
+        ``b_eff`` live rows (clamped at 0 — a noisy fit must never
+        return a negative cost to the SLO arbitration)."""
+        return max(float(self.theta @ round_features(k, b_eff,
+                                                     prefill_tokens)), 0.0)
+
+    def predict_prefill_s(self, tokens: int) -> float:
+        """Predicted cost of prefilling ``tokens`` (the c0 + c_prefill
+        slice of the form — what an admission wave adds to the round it
+        rides)."""
+        return max(float(self.theta[0] + self.theta[1] * float(tokens)), 0.0)
+
+    # ------------------------------------------------------------ telemetry
+    def coefficients(self) -> Dict[str, float]:
+        return {name: float(v) for name, v in zip(COEF_NAMES, self.theta)}
+
+    def rmse_s(self) -> float:
+        return float(np.sqrt(max(self._mse_ema, 0.0)))
+
+    def summary_fields(self) -> Dict[str, float]:
+        """The run-summary view: prefixed coefficient fields plus fit
+        telemetry, merged into ``ServingEngine.summary()``."""
+        out = {f"latency_model_{k}": v for k, v in self.coefficients().items()}
+        out["latency_model_rounds_fit"] = float(self.rounds_fit)
+        out["latency_model_rmse_s"] = self.rmse_s()
+        return out

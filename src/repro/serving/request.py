@@ -24,6 +24,15 @@ class Request:
     prompt: List[int]
     max_new_tokens: int = 128
     eos_token_id: Optional[int] = None
+    # --- SLO fields (DESIGN.md §15) -----------------------------------------
+    # completion deadline in seconds from arrival (None = no deadline).
+    # The `slo` policy reduces live deadlines to a per-round budget and
+    # the scheduler's admission gate checks predicted completion against
+    # it; requests without one are entirely unaffected.
+    slo_deadline_s: Optional[float] = None
+    # admission tie-break under SLO deferral: a predicted-violation head
+    # only yields to later FRESH arrivals of same-or-higher priority
+    priority: int = 0
     # --- runtime fields -----------------------------------------------------
     state: RequestState = RequestState.QUEUED
     output: List[int] = dataclasses.field(default_factory=list)
@@ -42,6 +51,13 @@ class Request:
     rounds: int = 0                    # target verifications consumed
     accepted_tokens: int = 0
     proposed_tokens: int = 0
+    # SLO runtime telemetry: flagged once by the admission gate when the
+    # latency model predicts even the best case misses the deadline
+    # (surfaced via ``LookaheadScheduler.pop_slo_risk``), and how many
+    # times admission rotated the request behind feasible fresh work
+    # (bounded by ``ServingConfig.slo_defer_limit`` — never starved)
+    slo_predicted_violation: bool = False
+    slo_deferrals: int = 0
     # --- paged-KV fields ----------------------------------------------------
     block_ids: List[int] = dataclasses.field(default_factory=list)
     cache_len: int = 0                 # committed tokens in the KV cache
@@ -88,6 +104,43 @@ class Request:
         if self.finish_time is None:
             return None
         return self.finish_time - self.arrival_time
+
+    def deadline_remaining_s(self, now: Optional[float] = None
+                             ) -> Optional[float]:
+        """Seconds until the completion deadline lapses (negative once
+        past it), or None when no deadline is set."""
+        if self.slo_deadline_s is None:
+            return None
+        now = time.monotonic() if now is None else now
+        return (self.arrival_time + self.slo_deadline_s) - now
+
+    def slo_attained(self, slo_ttft_s: Optional[float] = None,
+                     slo_tpot_s: Optional[float] = None) -> Optional[bool]:
+        """Did the request meet its service-level objectives?
+
+        None until finished (a rejected request never attains).  A
+        finished request attains iff it clears every bound that applies:
+        the caller-supplied TTFT / TPOT bounds (the loadgen ``report``
+        definitions — a never-measured TTFT counts 0.0, an unmeasured
+        TPOT passes) and, when ``slo_deadline_s`` is set, its own
+        completion deadline.  With no deadline and no bounds supplied
+        every finished request attains — exactly the pre-SLO goodput
+        accounting."""
+        if self.state is RequestState.REJECTED:
+            return False
+        if self.state is not RequestState.FINISHED:
+            return None
+        if slo_ttft_s is not None and (self.ttft() or 0.0) > slo_ttft_s:
+            return False
+        if slo_tpot_s is not None:
+            tpot = self.tpot()
+            if tpot is not None and tpot > slo_tpot_s:
+                return False
+        if self.slo_deadline_s is not None:
+            lat = self.latency()
+            if lat is None or lat > self.slo_deadline_s:
+                return False
+        return True
 
     def queue_wait(self) -> Optional[float]:
         """Arrival -> first admission (scheduler wait, paper §5 framing)."""

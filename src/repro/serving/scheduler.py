@@ -48,13 +48,14 @@ stale mirrors can only ever OVER-allocate, never under-allocate.
 from __future__ import annotations
 
 import collections
+import math
 import time
-from typing import List, Optional, Tuple
+from typing import Any, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core.config import ServingConfig, SpecDecodeConfig
-from repro.core.policies import SpecPolicy, build_policy
+from repro.core.policies import HostRoundContext, SpecPolicy, build_policy
 from repro.serving.request import Request, RequestState
 
 
@@ -323,6 +324,13 @@ class LookaheadScheduler:
         self._rejected: List[Request] = []
         self._admit_seq = 0
         self.preempted_total = 0
+        # SLO-aware admission (DESIGN.md §15): the engine installs its
+        # RoundLatencyModel here; without one (or before it is ready)
+        # admission is deadline-blind, exactly the pre-SLO behaviour.
+        self.latency_model: Optional[Any] = None
+        self._slo_risk: List[Request] = []
+        self.slo_predicted_violations = 0
+        self.slo_deferrals_total = 0
         # lifetime prefix-cache telemetry (engine aggregates per-round)
         self.prefix_hit_blocks_total = 0
         self.cow_copies_total = 0
@@ -342,11 +350,37 @@ class LookaheadScheduler:
         mirror, never aliasing the engine's)."""
         self.sl_pred = np.array(sl_next)
 
+    def host_context(self, sl_next: Optional[np.ndarray] = None,
+                     round_ordinal: int = 0,
+                     now: Optional[float] = None) -> HostRoundContext:
+        """Build the round's :class:`HostRoundContext` — the host-side
+        batch-global view handed to the policy hooks.  Per-slot
+        deadline-remaining and token budgets come from the slot table
+        (``+inf`` / 0 for empty or deadline-free slots); the latency
+        model is whatever the engine installed.  Everything is host
+        state the scheduler already owns — no device sync."""
+        sl = self.sl_pred if sl_next is None else np.asarray(sl_next)
+        b = self.serving.max_batch_size
+        deadlines = np.full((b,), np.inf)
+        tokens_rem = np.zeros((b,), np.int64)
+        if any(r is not None and r.slo_deadline_s is not None
+               for r in self.slots):
+            now = time.monotonic() if now is None else now
+        for i, r in enumerate(self.slots):
+            if r is None:
+                continue
+            tokens_rem[i] = max(r.max_new_tokens - len(r.output), 0)
+            if r.slo_deadline_s is not None:
+                deadlines[i] = (r.arrival_time + r.slo_deadline_s) - now
+        return HostRoundContext(
+            sl_next=sl, active=self.active_mask,
+            deadline_remaining_s=deadlines, tokens_remaining=tokens_rem,
+            latency_model=self.latency_model, round_ordinal=round_ordinal)
+
     def lookahead_slots(self, sl_next: Optional[np.ndarray] = None
                         ) -> np.ndarray:
         """KV slots each sequence needs next round, per the policy."""
-        sl = self.sl_pred if sl_next is None else np.asarray(sl_next)
-        return self.policy.lookahead(sl)
+        return self.policy.lookahead(self.host_context(sl_next))
 
     def _fits(self, req: Request, covered_blocks: int = 0) -> bool:
         # feasibility must cover the policy's WORST-case round footprint:
@@ -404,6 +438,54 @@ class LookaheadScheduler:
             else:
                 seen_fresh = True
 
+    # ------------------------------------------------------- SLO admission
+    def predict_completion_s(self, req: Request) -> Optional[float]:
+        """Best-case predicted wall seconds for ``req`` to finish once
+        admitted, from the analytic latency model (DESIGN.md §15): its
+        prefill cost plus ``ceil(tokens_remaining / (K+1))`` rounds at
+        the policy's typical bucket against the current live batch.
+        Best-case (every draft position accepted) by design — admission
+        only flags requests that cannot attain their deadline *even if
+        everything goes right*, so feasible requests are never gated on
+        a pessimistic guess.  None when no model is installed/ready."""
+        lm = self.latency_model
+        if lm is None or not lm.ready():
+            return None
+        k = int(min(max(self.policy.initial_sl_value(), self.spec.sl_min)
+                    if self.policy.uses_draft() else 0,
+                    self.policy.max_bucket()))
+        b_eff = min(len(self.running) + 1, self.serving.max_batch_size)
+        tokens = max(req.max_new_tokens - len(req.output), 1)
+        rounds = math.ceil(tokens / float(k + 1))
+        return (lm.predict_prefill_s(len(req.prefill_tokens()))
+                + rounds * lm.predict_round_s(k, b_eff))
+
+    def _surface_slo_risk(self, req: Request) -> None:
+        if not req.slo_predicted_violation:
+            req.slo_predicted_violation = True
+            self.slo_predicted_violations += 1
+            self._slo_risk.append(req)
+
+    def _slo_feasible_behind(self, head: Request, now: float) -> bool:
+        """Is there a later FRESH request (same or higher priority) that
+        is predicted to attain its deadline?  Only then is deferring the
+        head worth anything — otherwise it admits in order."""
+        for r in list(self.queue)[1:]:
+            if self._is_readmit(r) or r.priority < head.priority:
+                continue
+            if r.slo_deadline_s is None:
+                return True
+            t = self.predict_completion_s(r)
+            if t is None or now + t <= r.arrival_time + r.slo_deadline_s:
+                return True
+        return False
+
+    def pop_slo_risk(self) -> List[Request]:
+        """Drain requests newly flagged as predicted SLO violations
+        (surfaced exactly once each; the flag stays on the request)."""
+        out, self._slo_risk = self._slo_risk, []
+        return out
+
     def admit(self) -> List[Request]:
         """Move queued requests into free slots (continuous batching).
 
@@ -415,6 +497,18 @@ class LookaheadScheduler:
         requests become ``REJECTED`` and are drained via
         :meth:`pop_rejected`.
 
+        SLO gate (DESIGN.md §15): alongside the block-budget ``_fits``
+        check, a fresh deadline-carrying head whose *best-case*
+        predicted completion already breaches its deadline is surfaced
+        (:meth:`pop_slo_risk`) and — at most ``slo_defer_limit`` times,
+        and only when a feasible same-or-higher-priority fresh arrival
+        waits behind it — rotated to the back so attainable work is not
+        burned behind a lost cause.  It is never rejected or dropped:
+        past the limit (or with nothing feasible behind it) it admits in
+        order, flagged.  Readmits are never deferred, and with no
+        deadlines in the queue this path is inert, so admission order is
+        exactly the pre-SLO order.
+
         Ordering: strict queue order, and :meth:`assert_readmit_fifo`
         pins the starvation guard — preempted readmits sit ahead of
         every fresh arrival, FIFO among themselves."""
@@ -422,8 +516,28 @@ class LookaheadScheduler:
             self.assert_readmit_fifo()
         admitted = []
         free = collections.deque(self.free_slots())
+        deferred_ids: set = set()
+        now = None
         while free and self.queue:
             req = self.queue[0]
+            if (req.slo_deadline_s is not None
+                    and not self._is_readmit(req)
+                    and self.latency_model is not None
+                    and self.latency_model.ready()):
+                now = time.monotonic() if now is None else now
+                t_pred = self.predict_completion_s(req)
+                if (t_pred is not None and
+                        now + t_pred > req.arrival_time + req.slo_deadline_s):
+                    self._surface_slo_risk(req)
+                    if (id(req) not in deferred_ids
+                            and req.slo_deferrals < self.serving.slo_defer_limit
+                            and self._slo_feasible_behind(req, now)):
+                        self.queue.popleft()
+                        self.queue.append(req)
+                        req.slo_deferrals += 1
+                        self.slo_deferrals_total += 1
+                        deferred_ids.add(id(req))
+                        continue
             toks = req.prefill_tokens()
             plen = len(toks)
             covered_ids: List[int] = []

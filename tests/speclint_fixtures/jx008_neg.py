@@ -1,0 +1,15 @@
+"""JX008 true negatives: context-form calls to the policy hooks."""
+import numpy as np
+
+from repro.core.policies import HostRoundContext
+
+
+def round_plan(policy, scheduler, sl_next, active):
+    ctx = HostRoundContext.from_arrays(np.asarray(sl_next),
+                                       np.asarray(active))
+    k = policy.pick_bucket(ctx)
+    k2 = policy.pick_bucket(
+        HostRoundContext.from_arrays(sl_next, active))
+    la = policy.lookahead(scheduler.host_context(sl_next))
+    bound = policy.max_lookahead()        # unrelated same-prefix hook
+    return k, k2, la, bound

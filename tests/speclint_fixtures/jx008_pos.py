@@ -1,0 +1,8 @@
+"""JX008 true positives: legacy positional calls to the policy hooks."""
+import numpy as np
+
+
+def round_plan(policy, sl_next, active):
+    k = policy.pick_bucket(sl_next, active)          # JX008 (two arrays)
+    la = policy.lookahead(np.asarray(sl_next))       # JX008 (non-ctx arg)
+    return k, la

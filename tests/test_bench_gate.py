@@ -20,7 +20,8 @@ import pytest
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 from benchmarks.gate import (_entry, _verdict, cmd_collect, cmd_compare,
                              collect_table6, collect_table7, collect_table8,
-                             collect_table9, collect_table10)
+                             collect_table9, collect_table10,
+                             collect_table11)
 
 
 # ---------------------------------------------------------------------------
@@ -81,6 +82,19 @@ T10 = {"capacity_rps": 18.3, "smoke": True,
        "bursty": {"points": [dict(_POINT),
                              dict(_POINT, load_ratio=1.5,
                                   goodput_tok_s=17.8)]}}
+
+_T11_POINT = {"requests_finished": 8, "tokens_emitted": 78,
+              "latency_model_ready": 1.0, "goodput_tok_s": 120.0,
+              "slo_attained_frac": 1.0, "ttft_s_p99": 0.08}
+
+T11 = {"capacity_rps": 22.1, "smoke": True,
+       "latency_model": {"c0": 2e-3, "c_verify": 1e-4, "rounds_fit": 56},
+       "points": {"x0.8": {"static": dict(_T11_POINT),
+                           "dsde": dict(_T11_POINT),
+                           "slo": dict(_T11_POINT)},
+                  "x1.2": {"static": dict(_T11_POINT, goodput_tok_s=150.0),
+                           "dsde": dict(_T11_POINT, goodput_tok_s=155.0),
+                           "slo": dict(_T11_POINT, goodput_tok_s=156.0)}}}
 
 T9 = {"fp_paged_n64": {"requests_finished": 6, "kv_pool_blocks": 64.0,
                        "kv_block_bytes": 16384.0, "rounds": 23,
@@ -163,6 +177,32 @@ def test_collect_table10_counters_fail_latency_warns():
     assert not any(m.startswith("capacity") for m in by)
 
 
+def test_collect_table11_counters_and_readiness_fail_slo_warns():
+    """SLO points gate hard on the deterministic counters AND on the
+    latency model having been fit (readiness is exact — min_rounds sits
+    far below any smoke's round count); every wall-derived goodput /
+    attainment / TTFT number rides the table10 warn hatch.  The fitted
+    coefficients themselves are host pace — never gated."""
+    by = {e["metric"]: e for e in collect_table11(T11)}
+    # 2 load points x 3 policies x 6 metrics
+    assert len(by) == 2 * 3 * 6
+    for cell in ("x0.8", "x1.2"):
+        for policy in ("static", "dsde", "slo"):
+            p = f"{cell}.{policy}"
+            assert by[f"{p}.requests_finished"]["mode"] == "fail"
+            assert by[f"{p}.requests_finished"]["better"] == "exact"
+            assert by[f"{p}.tokens_emitted"]["better"] == "exact"
+            assert by[f"{p}.latency_model_ready"]["mode"] == "fail"
+            assert by[f"{p}.latency_model_ready"]["better"] == "exact"
+            for m in ("goodput_tok_s", "slo_attained_frac", "ttft_s_p99"):
+                assert by[f"{p}.{m}"]["mode"] == "warn", m
+    assert by["x1.2.slo.goodput_tok_s"]["better"] == "higher"
+    assert by["x0.8.static.ttft_s_p99"]["better"] == "lower"
+    # capacity + coefficients are host-dependent — never gated metrics
+    assert not any(m.startswith(("capacity", "latency_model."))
+                   for m in by)
+
+
 # ---------------------------------------------------------------------------
 # compare: round-trip + failure paths through the CLI entry points
 # ---------------------------------------------------------------------------
@@ -218,18 +258,20 @@ def test_summary_file_written(tmp_path):
 
 
 def test_collect_cli_round_trips_files(tmp_path):
-    t6, t7, t8, t9, t10 = (tmp_path / "t6.json", tmp_path / "t7.json",
-                           tmp_path / "t8.json", tmp_path / "t9.json",
-                           tmp_path / "t10.json")
+    t6, t7, t8, t9, t10, t11 = (
+        tmp_path / "t6.json", tmp_path / "t7.json", tmp_path / "t8.json",
+        tmp_path / "t9.json", tmp_path / "t10.json", tmp_path / "t11.json")
     t6.write_text(json.dumps(T6))
     t7.write_text(json.dumps({"model/dsde": dict(CELL)}))
     t8.write_text(json.dumps(T8))
     t9.write_text(json.dumps(T9))
     t10.write_text(json.dumps(T10))
+    t11.write_text(json.dumps(T11))
     out = tmp_path / "BENCH_pr.json"
     args = types.SimpleNamespace(table6=str(t6), table7=str(t7),
                                  table8=str(t8), table9=str(t9),
-                                 table10=str(t10), out=str(out))
+                                 table10=str(t10), table11=str(t11),
+                                 out=str(out))
     assert cmd_collect(args) == 0
     entries = json.loads(out.read_text())
     assert {tuple(sorted(e)) for e in entries} == {

@@ -72,7 +72,11 @@ def test_save_load_round_trip(tmp_path):
     path = str(tmp_path / "trace.json")
     save_trace(tr, path)
     assert load_trace(path) == tr
-    bad = dict(tr, version=2)
+    # version 2 (per-request SLO deadlines, DESIGN.md §15) loads too
+    v2 = dict(tr, version=2)
+    save_trace(v2, path)
+    assert load_trace(path) == v2
+    bad = dict(tr, version=3)
     save_trace(bad, path)
     with pytest.raises(AssertionError, match="trace version"):
         load_trace(path)

@@ -16,7 +16,8 @@ from repro.configs import get_config
 from repro.core import spec_decode as sd
 from repro.core.config import ServingConfig, SpecDecodeConfig
 from repro.core.drafters import build_drafter
-from repro.core.policies import (GoodputPolicy, PolicyObservation, SpecPolicy,
+from repro.core.policies import (GoodputPolicy, HostRoundContext,
+                                 PolicyObservation, SpecPolicy,
                                  available_policies, build_policy, register)
 from repro.models.module import init_params
 from repro.models.transformer import forward, model_specs
@@ -27,7 +28,8 @@ from repro.serving.scheduler import LookaheadScheduler
 jax.config.update("jax_platform_name", "cpu")
 
 KEY = jax.random.PRNGKey(0)
-ALL_POLICIES = ("adaedl", "autoregressive", "dsde", "goodput", "static")
+ALL_POLICIES = ("adaedl", "autoregressive", "dsde", "goodput", "slo",
+                "static")
 
 
 # ---------------------------------------------------------------------------
@@ -184,19 +186,38 @@ def test_goodput_cost_sensitivity():
 
 def test_pick_bucket_per_policy():
     sl = np.array([2, 7, 4])
-    act = np.array([True, True, True])
-    assert build_policy(SpecDecodeConfig(policy="dsde",
-                                         sl_min=2)).pick_bucket(sl, act) == 7
-    assert build_policy(SpecDecodeConfig(policy="dsde", sl_min=2)).pick_bucket(
-        sl, np.array([True, False, True])) == 4
+
+    def ctx(act):
+        return HostRoundContext.from_arrays(sl, np.asarray(act))
+
+    dsde = build_policy(SpecDecodeConfig(policy="dsde", sl_min=2))
+    assert dsde.pick_bucket(ctx([True, True, True])) == 7
+    assert dsde.pick_bucket(ctx([True, False, True])) == 4
     assert build_policy(SpecDecodeConfig(
-        policy="autoregressive")).pick_bucket(sl, act) == 0
+        policy="autoregressive")).pick_bucket(ctx([True, True, True])) == 0
 
 
-def test_sd_pick_bucket_wrapper_back_compat():
-    spec = SpecDecodeConfig(policy="dsde", sl_min=2)
-    assert sd.pick_bucket(jnp.array([2, 7, 4]), spec,
-                          jnp.array([True, True, True])) == 7
+def test_positional_shim_back_compat():
+    """One-release shim: the legacy positional (sl_next, active) form
+    still answers correctly but warns; the context form is silent."""
+    pol = build_policy(SpecDecodeConfig(policy="dsde", sl_min=2))
+    sl = np.array([2, 7, 4])
+    act = np.array([True, True, True])
+    with pytest.warns(DeprecationWarning, match="HostRoundContext"):
+        k = pol.pick_bucket(sl, act)  # speclint: disable=JX008 (shim test)
+    assert k == 7
+    with pytest.warns(DeprecationWarning, match="HostRoundContext"):
+        la = pol.lookahead(sl)  # speclint: disable=JX008 (shim test)
+    np.testing.assert_array_equal(la, sl + 1)
+    import warnings as _w
+    with _w.catch_warnings():
+        _w.simplefilter("error", DeprecationWarning)
+        ctx = HostRoundContext.from_arrays(sl, act)
+        assert pol.pick_bucket(ctx) == 7
+        np.testing.assert_array_equal(pol.lookahead(ctx), sl + 1)
+    with pytest.raises(TypeError, match="active"):
+        # context + positional active is ambiguous and must raise
+        pol.pick_bucket(ctx, act)  # speclint: disable=JX008 (shim test)
 
 
 def test_policy_max_lookahead_bounds():
@@ -262,8 +283,10 @@ def test_round_no_recompile_at_fixed_bucket(pair, name):
     spec = SpecDecodeConfig(policy=name, temperature=0.0)
     st = _ready_state(cfg, pt, pd, 2, 8, spec)
     active = jnp.ones((2,), bool)
-    k = max(4, sd.pick_bucket(st.sl_next, spec, active))
-    if not build_policy(spec).uses_draft():
+    pol = build_policy(spec)
+    k = max(4, pol.pick_bucket(HostRoundContext.from_arrays(
+        np.asarray(st.sl_next), np.asarray(active))))
+    if not pol.uses_draft():
         k = 0
     drafter = build_drafter(spec, cfg, cfg)
     st, _ = sd.spec_decode_round(pt, pd, cfg, drafter, spec, k, st, active)

@@ -1,0 +1,335 @@
+"""SLO-aware speculation control (DESIGN.md §15).
+
+Covers the analytic per-round latency model (RLS convergence +
+calibration warm-start), the ``slo`` policy's batch-tightness
+arbitration and its no-deadline exactness bar (byte-identical streams
+to ``dsde`` across drafters and engine modes), the scheduler's
+SLO admission gate (surfaced, bounded deferral, never rejected), the
+``Request.slo_attained`` accounting, and trace v2 round-tripping.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from benchmarks import loadgen
+from repro.configs import get_config
+from repro.core.config import ServingConfig, SpecDecodeConfig
+from repro.core.policies import HostRoundContext, build_policy
+from repro.core.policies.slo import batch_tightness_s
+from repro.models.module import init_params
+from repro.models.transformer import model_specs
+from repro.serving.engine import ServingEngine
+from repro.serving.latency_model import (COEF_NAMES, RoundLatencyModel,
+                                         round_features)
+from repro.serving.request import Request, RequestState
+from repro.serving.scheduler import LookaheadScheduler
+
+jax.config.update("jax_platform_name", "cpu")
+
+TRUE_THETA = np.array([2e-3, 1e-5, 5e-4, 2e-4])   # c0, c_prefill, c_draft, c_verify
+
+
+def _synthetic_rounds(n, seed=0, noise=0.0):
+    rng = np.random.RandomState(seed)
+    recs = []
+    for _ in range(n):
+        k = int(rng.randint(0, 9))
+        b = int(rng.randint(1, 9))
+        pf = float(rng.randint(0, 3) * rng.randint(0, 65))
+        wall = float(round_features(k, b, pf) @ TRUE_THETA)
+        if noise:
+            wall += float(rng.randn()) * noise
+        recs.append({"wall_s": max(wall, 0.0), "k": k, "b_eff": b,
+                     "prefill_tokens": pf})
+    return recs
+
+
+# ---------------------------------------------------------------------------
+# latency model: RLS convergence + warm start
+# ---------------------------------------------------------------------------
+
+def test_rls_converges_to_known_coefficients():
+    lm = RoundLatencyModel()
+    assert not lm.ready()
+    for r in _synthetic_rounds(400, noise=1e-5):
+        lm.observe(r["wall_s"], r["k"], r["b_eff"], r["prefill_tokens"])
+    assert lm.ready()
+    got = lm.coefficients()
+    for name, true in zip(COEF_NAMES, TRUE_THETA):
+        assert got[name] == pytest.approx(true, rel=0.05, abs=1e-5), name
+    # predictions track the generator at unseen operating points
+    want = float(round_features(5, 3, 40.0) @ TRUE_THETA)
+    assert lm.predict_round_s(5, 3, 40.0) == pytest.approx(want, rel=0.05)
+    assert lm.rmse_s() < 1e-3
+
+
+def test_warm_start_matches_batch_fit_and_keeps_updating():
+    lm = RoundLatencyModel()
+    n = lm.warm_start_from_rounds(_synthetic_rounds(64, seed=1))
+    assert n == 64 and lm.ready()
+    got = lm.coefficients()
+    for name, true in zip(COEF_NAMES, TRUE_THETA):
+        assert got[name] == pytest.approx(true, rel=1e-3, abs=1e-7), name
+    # records without wall_s/k are skipped, not fatal
+    assert lm.warm_start_from_rounds([{"foo": 1}]) == 0
+    # online updates continue FROM the calibrated state
+    before = lm.rounds_fit
+    lm.observe(0.01, 4, 2, 0.0)
+    assert lm.rounds_fit == before + 1
+    # summary fields carry every coefficient for the round log / tables
+    f = lm.summary_fields()
+    assert {"latency_model_c0", "latency_model_c_prefill",
+            "latency_model_c_draft", "latency_model_c_verify",
+            "latency_model_rounds_fit", "latency_model_rmse_s"} <= set(f)
+
+
+def test_model_not_ready_below_min_rounds():
+    lm = RoundLatencyModel(min_rounds=8)
+    for r in _synthetic_rounds(7, seed=2):
+        lm.observe(r["wall_s"], r["k"], r["b_eff"], r["prefill_tokens"])
+    assert not lm.ready()
+    lm.observe(0.01, 2, 1)
+    assert lm.ready()
+
+
+# ---------------------------------------------------------------------------
+# HostRoundContext + batch tightness
+# ---------------------------------------------------------------------------
+
+def test_host_round_context_helpers():
+    ctx = HostRoundContext.from_arrays(np.array([3, 5]))
+    assert ctx.active.all() and not ctx.has_deadlines()
+    assert ctx.tightest_deadline_s() is None
+    ctx2 = HostRoundContext(
+        sl_next=np.array([3, 5, 2]), active=np.array([True, True, False]),
+        deadline_remaining_s=np.array([0.8, -0.1, 0.05]),
+        tokens_remaining=np.array([10, 10, 10]))
+    # lapsed (<=0) and inactive deadlines are excluded
+    assert ctx2.has_deadlines()
+    assert ctx2.tightest_deadline_s() == pytest.approx(0.8)
+
+
+def test_batch_tightness_masks_and_divides():
+    ctx = HostRoundContext(
+        sl_next=np.array([4, 4]), active=np.array([True, True]),
+        deadline_remaining_s=np.array([1.0, 0.3]),
+        tokens_remaining=np.array([20, 4]))
+    # k=3: slot0 ceil(20/4)=5 rounds -> 0.2; slot1 ceil(4/4)=1 -> 0.3
+    assert batch_tightness_s(ctx, 3) == pytest.approx(0.2)
+    # no live deadlines -> None
+    free = HostRoundContext.from_arrays(np.array([4, 4]))
+    assert batch_tightness_s(free, 3) is None
+
+
+def test_slo_policy_shrinks_under_tight_deadline_only():
+    spec = SpecDecodeConfig(policy="slo", sl_min=1)
+    pol = build_policy(spec)
+    lm = RoundLatencyModel()
+    # pure per-draft-token cost: T_round = 0.01 * k
+    recs = []
+    rng = np.random.RandomState(3)
+    for _ in range(32):
+        k, b = int(rng.randint(0, 9)), int(rng.randint(1, 5))
+        recs.append({"wall_s": 0.01 * k, "k": k, "b_eff": b,
+                     "prefill_tokens": 0.0})
+    lm.warm_start_from_rounds(recs)
+
+    def ctx(deadlines):
+        return HostRoundContext(
+            sl_next=np.array([6, 6]), active=np.ones(2, bool),
+            deadline_remaining_s=deadlines,
+            tokens_remaining=np.array([10, 10]), latency_model=lm)
+
+    dsde_k = build_policy(SpecDecodeConfig(policy="dsde", sl_min=1)) \
+        .pick_bucket(HostRoundContext.from_arrays(np.array([6, 6])))
+    # no deadlines: EXACTLY dsde's pick
+    assert pol.pick_bucket(ctx(None)) == dsde_k == 6
+    # generous deadline: unchanged
+    assert pol.pick_bucket(ctx(np.array([60.0, 60.0]))) == dsde_k
+    # tight deadline: shrinks, floored at sl_min
+    tight = pol.pick_bucket(ctx(np.array([0.02, 60.0])))
+    assert spec.sl_min <= tight < dsde_k
+    # hopeless deadline: floors at sl_min, never below
+    assert pol.pick_bucket(ctx(np.array([1e-6, 1e-6]))) == spec.sl_min
+    # not-ready model: arbitration is inert even with deadlines
+    cold_ctx = ctx(np.array([1e-6, 1e-6]))
+    cold_ctx.latency_model = RoundLatencyModel()
+    assert pol.pick_bucket(cold_ctx) == dsde_k
+
+
+# ---------------------------------------------------------------------------
+# exactness: slo == dsde streams when no deadlines are set
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def pair():
+    cfg = get_config("smollm-135m").reduced()
+    pt = init_params(model_specs(cfg), jax.random.PRNGKey(1), jnp.float32)
+    noise = init_params(model_specs(cfg), jax.random.PRNGKey(9), jnp.float32)
+    pd = jax.tree_util.tree_map(lambda a, b: a + 0.04 * b, pt, noise)
+    return cfg, pt, pd
+
+
+def _run_outputs(pair, policy, drafter, pipelined):
+    cfg, pt, pd = pair
+    rng = np.random.RandomState(7)
+    spec = SpecDecodeConfig(policy=policy, drafter=drafter, temperature=0.0)
+    eng = ServingEngine(pt, cfg, pd, cfg, spec,
+                        ServingConfig(max_batch_size=2, max_seq_len=128,
+                                      pipelined=pipelined))
+    reqs = [Request(i, prompt=rng.randint(1, cfg.vocab_size,
+                                          size=6).tolist(),
+                    max_new_tokens=8) for i in range(3)]
+    eng.run(reqs)
+    return [r.output for r in reqs]
+
+
+@pytest.mark.parametrize("drafter", ("model", "ngram", "self"))
+@pytest.mark.parametrize("pipelined", (False, True),
+                         ids=("sync", "pipelined"))
+def test_slo_byte_identical_to_dsde_without_deadlines(pair, drafter,
+                                                      pipelined):
+    ref = _run_outputs(pair, "dsde", drafter, pipelined)
+    got = _run_outputs(pair, "slo", drafter, pipelined)
+    assert got == ref
+
+
+def test_engine_summary_exposes_latency_model_and_slo_fields(pair):
+    cfg, pt, pd = pair
+    spec = SpecDecodeConfig(policy="slo", temperature=0.0)
+    eng = ServingEngine(pt, cfg, pd, cfg, spec,
+                        ServingConfig(max_batch_size=2, max_seq_len=128))
+    reqs = [Request(i, prompt=[1, 2, 3, 4], max_new_tokens=6,
+                    slo_deadline_s=120.0) for i in range(2)]
+    m = eng.run(reqs)
+    assert {"latency_model_c0", "latency_model_rounds_fit",
+            "slo_attained_frac", "slo_goodput_tok_s",
+            "slo_predicted_violations", "slo_deferrals"} <= set(m)
+    # every round observed: the model fit as many rounds as the run made
+    assert m["latency_model_rounds_fit"] == m["rounds"]
+    # both requests had generous deadlines -> all attained
+    assert m["slo_attained_frac"] == 1.0
+    assert all(r.slo_attained() for r in reqs)
+
+
+# ---------------------------------------------------------------------------
+# SLO admission gate
+# ---------------------------------------------------------------------------
+
+def _warm_lm(round_cost=0.5):
+    """A ready model predicting `round_cost` seconds per round."""
+    lm = RoundLatencyModel()
+    recs = [{"wall_s": round_cost, "k": k % 4, "b_eff": 1 + k % 2,
+             "prefill_tokens": 0.0} for k in range(16)]
+    lm.warm_start_from_rounds(recs)
+    return lm
+
+
+def test_admission_defers_hopeless_head_then_admits_flagged():
+    serving = ServingConfig(max_batch_size=2, max_seq_len=64)
+    sched = LookaheadScheduler(serving, SpecDecodeConfig(policy="dsde"))
+    sched.latency_model = _warm_lm(round_cost=10.0)   # nothing can attain
+    doomed = Request(0, prompt=[1] * 4, max_new_tokens=16,
+                     slo_deadline_s=0.05)
+    fresh = Request(1, prompt=[1] * 4, max_new_tokens=16)
+    sched.submit(doomed), sched.submit(fresh)
+    admitted = sched.admit()
+    # the hopeless head yielded to the feasible arrival behind it, then
+    # admitted in the same wave — flagged, never rejected or dropped
+    assert [r.request_id for r in admitted] == [1, 0]
+    assert doomed.slo_deferrals == 1
+    assert doomed.slo_predicted_violation
+    assert sched.pop_slo_risk() == [doomed]
+    assert sched.pop_slo_risk() == []                  # drained once
+    assert sched.pop_rejected() == []
+    assert sched.slo_predicted_violations == 1
+    assert sched.slo_deferrals_total == 1
+
+
+def test_admission_defer_respects_limit_and_priority():
+    serving = ServingConfig(max_batch_size=1, max_seq_len=64,
+                            slo_defer_limit=0)
+    sched = LookaheadScheduler(serving, SpecDecodeConfig(policy="dsde"))
+    sched.latency_model = _warm_lm(round_cost=10.0)
+    doomed = Request(0, prompt=[1] * 4, max_new_tokens=16,
+                     slo_deadline_s=0.05)
+    fresh = Request(1, prompt=[1] * 4, max_new_tokens=16)
+    sched.submit(doomed), sched.submit(fresh)
+    # defer limit 0: strict queue order is preserved, still surfaced
+    admitted = sched.admit()
+    assert [r.request_id for r in admitted] == [0]
+    assert doomed.slo_deferrals == 0
+    assert sched.pop_slo_risk() == [doomed]
+    # lower-priority work behind the head never triggers a deferral
+    sched2 = LookaheadScheduler(
+        ServingConfig(max_batch_size=1, max_seq_len=64),
+        SpecDecodeConfig(policy="dsde"))
+    sched2.latency_model = _warm_lm(round_cost=10.0)
+    head = Request(2, prompt=[1] * 4, max_new_tokens=16,
+                   slo_deadline_s=0.05, priority=1)
+    low = Request(3, prompt=[1] * 4, max_new_tokens=16)   # priority 0
+    sched2.submit(head), sched2.submit(low)
+    assert [r.request_id for r in sched2.admit()] == [2]
+    assert head.slo_deferrals == 0
+
+
+def test_admission_gate_inert_without_deadlines_or_model():
+    serving = ServingConfig(max_batch_size=2, max_seq_len=64)
+    sched = LookaheadScheduler(serving, SpecDecodeConfig(policy="dsde"))
+    reqs = [Request(i, prompt=[1] * 4, max_new_tokens=8) for i in range(2)]
+    for r in reqs:
+        sched.submit(r)
+    assert [r.request_id for r in sched.admit()] == [0, 1]
+    assert sched.slo_predicted_violations == 0
+    assert sched.predict_completion_s(reqs[0]) is None   # no model
+
+
+# ---------------------------------------------------------------------------
+# Request.slo_attained + loadgen trace v2
+# ---------------------------------------------------------------------------
+
+def test_slo_attained_semantics():
+    r = Request(0, prompt=[1], max_new_tokens=4, slo_deadline_s=1.0)
+    assert r.slo_attained() is None                     # not finished
+    r.state = RequestState.FINISHED
+    r.finish_time = r.arrival_time + 0.5
+    assert r.slo_attained() is True
+    r.finish_time = r.arrival_time + 2.0
+    assert r.slo_attained() is False                    # deadline missed
+    # deadline-free request: exactly the pre-SLO TTFT/TPOT accounting
+    nf = Request(1, prompt=[1], max_new_tokens=4)
+    nf.state = RequestState.FINISHED
+    nf.finish_time = nf.arrival_time + 99.0
+    assert nf.slo_attained() is True
+    nf.first_token_time = nf.arrival_time + 9.0
+    assert nf.slo_attained(slo_ttft_s=2.5) is False
+    rej = Request(2, prompt=[1], max_new_tokens=4)
+    rej.state = RequestState.REJECTED
+    assert rej.slo_attained() is False
+
+
+def test_trace_v2_roundtrip_and_v1_back_compat(tmp_path):
+    t2 = loadgen.make_trace(6, rate_rps=4.0, seed=5, deadline=(0.5, 0.02))
+    assert t2["version"] == 2
+    p = str(tmp_path / "t2.json")
+    loadgen.save_trace(t2, p)
+    back = loadgen.load_trace(p)
+    assert back == t2
+    reqs = loadgen.trace_requests(back)
+    for rec, req in zip(t2["requests"], reqs):
+        want = 0.5 + 0.02 * rec["max_new_tokens"]
+        assert req.slo_deadline_s == pytest.approx(want)
+        assert rec["slo_deadline_s"] == pytest.approx(want)
+        assert req.priority == 0
+    # same seed without deadlines: identical workload, version 1, no SLO
+    t1 = loadgen.make_trace(6, rate_rps=4.0, seed=5)
+    assert t1["version"] == 1
+    assert all("slo_deadline_s" not in r for r in t1["requests"])
+    for a, b in zip(t1["requests"], t2["requests"]):
+        assert a["prompt"] == b["prompt"]
+        assert a["max_new_tokens"] == b["max_new_tokens"]
+    assert all(r.slo_deadline_s is None
+               for r in loadgen.trace_requests(t1))

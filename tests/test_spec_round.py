@@ -11,6 +11,7 @@ from repro.configs import get_config
 from repro.core import spec_decode as sd
 from repro.core.config import SpecDecodeConfig
 from repro.core.drafters import build_drafter
+from repro.core.policies import HostRoundContext, build_policy
 from repro.models import cache as cache_lib
 from repro.models.module import init_params
 from repro.models.transformer import forward, model_specs
@@ -66,8 +67,11 @@ def test_identical_draft_full_acceptance(pair):
     spec = SpecDecodeConfig(policy="static", static_sl=4, temperature=0.0)
     st = _ready_state(cfg, pt, pt, 2, 8, spec)
     active = jnp.ones((2,), bool)
+    pol = build_policy(spec)
     for _ in range(3):
-        k = sd.pick_bucket(st.sl_next, spec, active)
+        k = pol.pick_bucket(
+            HostRoundContext.from_arrays(np.asarray(st.sl_next),
+                                         np.asarray(active)))
         st, out = _round(pt, pt, cfg, spec, k, st, active)
         np.testing.assert_array_equal(np.asarray(out.num_accepted),
                                       np.asarray(out.num_proposed))
@@ -78,7 +82,9 @@ def test_emitted_tokens_in_vocab_or_pad(pair):
     spec = SpecDecodeConfig(policy="dsde", temperature=1.0)
     st = _ready_state(cfg, pt, pd, 2, 8, spec)
     active = jnp.ones((2,), bool)
-    k = sd.pick_bucket(st.sl_next, spec, active)
+    k = build_policy(spec).pick_bucket(
+        HostRoundContext.from_arrays(np.asarray(st.sl_next),
+                                     np.asarray(active)))
     st, out = _round(pt, pd, cfg, spec, k, st, active)
     em = np.asarray(out.emitted)
     ne = np.asarray(out.num_emitted)
@@ -89,11 +95,16 @@ def test_emitted_tokens_in_vocab_or_pad(pair):
 
 def test_pick_bucket():
     spec = SpecDecodeConfig(policy="dsde", sl_min=2)
-    sl = jnp.array([2, 7, 4])
-    assert sd.pick_bucket(sl, spec, jnp.array([True, True, True])) == 7
-    assert sd.pick_bucket(sl, spec, jnp.array([True, False, True])) == 4
+    sl = np.array([2, 7, 4])
+
+    def pick(s, act):
+        return build_policy(s).pick_bucket(
+            HostRoundContext.from_arrays(sl, np.asarray(act)))
+
+    assert pick(spec, [True, True, True]) == 7
+    assert pick(spec, [True, False, True]) == 4
     ar = SpecDecodeConfig(policy="autoregressive")
-    assert sd.pick_bucket(sl, ar, jnp.ones(3, bool)) == 0
+    assert pick(ar, np.ones(3, bool)) == 0
 
 
 # ---------------------------------------------------------------------------

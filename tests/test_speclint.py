@@ -35,12 +35,13 @@ def _ids(res):
 # registry
 # ---------------------------------------------------------------------------
 
-def test_all_seven_rules_registered():
+def test_all_eight_rules_registered():
     ids = set(all_rule_ids())
-    assert {f"JX00{i}" for i in range(1, 8)} <= ids
+    assert {f"JX00{i}" for i in range(1, 9)} <= ids
     table = {r.rule_id: r for r in rules_table()}
     assert table["JX006"].scope == "project"
     assert table["JX001"].scope == "file"
+    assert table["JX008"].scope == "file"
 
 
 # ---------------------------------------------------------------------------
@@ -54,6 +55,7 @@ def test_all_seven_rules_registered():
     ("JX004", "jx004_pos.py", "jx004_neg.py", 2),
     ("JX005", "jx005_pos.py", "jx005_neg.py", 3),
     ("JX007", "jx007_pos.py", "jx007_neg.py", 2),
+    ("JX008", "jx008_pos.py", "jx008_neg.py", 2),
 ])
 def test_file_rule_fixture_pair(rule, pos, neg, n_pos):
     got = _lint(pos)

@@ -15,6 +15,9 @@ Rules (DESIGN.md §11 has the incident history behind each):
   dispatch + a bit-exactness test naming the kernel.
 * **JX007** bare Python scalar constants closed over into traced
   functions (weak-type discipline).
+* **JX008** legacy positional ``(sl_next, active)`` calls to the policy
+  host hooks (``pick_bucket``/``lookahead``) instead of the
+  ``HostRoundContext`` form.
 
 Suppress inline with ``# speclint: disable=JX00N (justification)`` —
 the justification is mandatory.

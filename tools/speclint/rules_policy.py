@@ -1,0 +1,65 @@
+"""JX008 — legacy positional calls to the host-side policy hooks.
+
+The PR 10 API redesign moved ``SpecPolicy.pick_bucket`` / ``lookahead``
+from positional ``(sl_next, active)`` arrays to a single
+:class:`repro.core.policies.HostRoundContext` argument (the batch-global
+round view carrying deadlines and the latency-model handle).  A
+one-release shim coerces the old form with a ``DeprecationWarning``;
+this rule keeps in-repo callers off the shim so it can be deleted on
+schedule — external callers get the warning, the repo itself must
+already be clean.
+
+Heuristic: an attribute call named ``pick_bucket`` or ``lookahead`` is
+legacy when it passes two or more positional arguments, or a single
+positional that is not context-like.  Context-like means a call whose
+terminal name builds a context (``HostRoundContext``, ``from_arrays``,
+``as_host_round_context``, or anything ending in ``ctx``/``context``)
+or a name/attribute ending in ``ctx``/``context``.  Method *definitions* and
+unrelated same-named functions elsewhere are untouched (attribute calls
+only).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from tools.speclint.astutil import FileCtx, terminal_name
+from tools.speclint.registry import Finding, file_rule
+
+_HOOKS = {"pick_bucket", "lookahead"}
+_CTX_BUILDERS = {"HostRoundContext", "from_arrays", "as_host_round_context"}
+
+
+def _context_like(node: ast.AST) -> bool:
+    """Does this argument expression plausibly produce a context?"""
+    if isinstance(node, ast.Call):
+        t = terminal_name(node.func)
+        return t is not None and (t in _CTX_BUILDERS
+                                  or t.lower().endswith("ctx")
+                                  or t.lower().endswith("context"))
+    t = terminal_name(node)
+    return t is not None and (t.lower().endswith("ctx")
+                              or t.lower().endswith("context"))
+
+
+@file_rule("JX008", "legacy positional (sl_next, active) call to a "
+                    "policy host hook")
+def check_jx008(ctx: FileCtx) -> Iterator[Finding]:
+    for call in ctx.walk_calls():
+        if not isinstance(call.func, ast.Attribute):
+            continue
+        if call.func.attr not in _HOOKS:
+            continue
+        pos = [a for a in call.args if not isinstance(a, ast.Starred)]
+        if len(call.args) != len(pos):
+            continue                  # *args: can't see through it
+        legacy = len(pos) >= 2 or (len(pos) == 1
+                                   and not _context_like(pos[0]))
+        if not legacy:
+            continue
+        yield Finding(
+            ctx.path, call.lineno, "JX008",
+            f"positional array call to .{call.func.attr}() — build a "
+            "HostRoundContext (HostRoundContext.from_arrays or "
+            "scheduler.host_context) instead; the positional shim is "
+            "one-release and warns at runtime")

@@ -8,7 +8,7 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 # importing the rule modules populates the registry
 from tools.speclint import (rules_dataflow, rules_jit, rules_kernels,  # noqa: F401
-                            rules_spec)
+                            rules_policy, rules_spec)
 from tools.speclint.project import Project
 from tools.speclint.registry import (FILE_RULES, PROJECT_RULES, Finding,
                                      all_rule_ids)
